@@ -1,0 +1,93 @@
+"""Shared benchmark scaffolding: the paper's CelebA-CNN protocol, scaled to
+CPU budgets (synthetic data; relative claims are what is reproduced —
+see EXPERIMENTS.md for the scale mapping)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QAFeL, QAFeLConfig
+from repro.data import FederatedPartition, SyntheticCelebA
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.sim import AsyncFLSimulator, SimConfig
+
+TARGET_ACC = 0.90  # the paper's target validation accuracy
+
+
+@dataclasses.dataclass
+class Task:
+    ds: SyntheticCelebA
+    part: FederatedPartition
+    params0: dict
+    eval_fn: callable
+    loss_fn: callable
+    client_batches: callable
+
+
+_task_cache: Dict[int, Task] = {}
+
+
+def make_task(n_samples: int = 3000, n_clients: int = 300, seed: int = 0,
+              local_steps: int = 2, batch_size: int = 8) -> Task:
+    key = (n_samples, n_clients, seed, local_steps, batch_size)
+    h = hash(key)
+    if h in _task_cache:
+        return _task_cache[h]
+    ds = SyntheticCelebA(n_samples=n_samples)
+    part = FederatedPartition(labels=ds.labels, n_clients=n_clients)
+    params0 = init_cnn(jax.random.PRNGKey(seed))
+
+    def loss_fn(params, batch, key):
+        return cnn_loss(params, batch, train=True, key=key)[0]
+
+    rng = np.random.default_rng(seed)
+
+    def client_batches(cid, _key):
+        b = [part.client_batch(ds, cid, batch_size, rng)
+             for _ in range(local_steps)]
+        return {k: jnp.stack([jnp.asarray(bi[k]) for bi in b]) for k in b[0]}
+
+    test_idx = part.split_indices(part.val_clients)[:512]
+    test_batch = {k: jnp.asarray(v) for k, v in ds.batch(test_idx).items()}
+    eval_fn = jax.jit(lambda p: cnn_accuracy(p, test_batch))
+    task = Task(ds, part, params0, eval_fn, loss_fn, client_batches)
+    _task_cache[h] = task
+    return task
+
+
+def run_protocol(task: Task, cq: str, sq: str, *, concurrency: int = 16,
+                 max_uploads: int = 400, buffer_k: int = 10,
+                 target: Optional[float] = TARGET_ACC, seed: int = 0,
+                 local_steps: int = 2) -> Dict[str, float]:
+    """One (quantizer-config, concurrency) cell of the paper's experiments."""
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=buffer_k, local_steps=local_steps,
+                       client_quantizer=cq, server_quantizer=sq)
+    algo = QAFeL(qcfg, task.loss_fn, task.params0)
+    sim = AsyncFLSimulator(
+        algo, SimConfig(concurrency=concurrency, max_uploads=max_uploads,
+                        eval_every_steps=3, target_accuracy=target, seed=seed,
+                        track_hidden_replicas=1),
+        task.client_batches, task.eval_fn)
+    t0 = time.time()
+    res = sim.run()
+    m = res.metrics
+    return {
+        "reached": float(res.reached_target),
+        "uploads": res.uploads,
+        "upload_MB": m["upload_MB"],
+        "broadcast_MB": m["broadcast_MB"],
+        "kB_per_upload": m["kB_per_upload"],
+        "kB_per_download": (m["broadcast_MB"] * 1e3 / m["broadcasts"]
+                            if m["broadcasts"] else 0.0),
+        "acc": res.final_accuracy,
+        "tau_max": m["tau_max"],
+        "hidden_drift": m["hidden_drift"],
+        "in_sync": float(m["replicas_in_sync"]),
+        "wall_s": time.time() - t0,
+    }

@@ -1,0 +1,54 @@
+"""Microbenchmarks of the communication-path kernels (the op the paper's
+technique puts on the critical path of every round).
+
+On CPU the Pallas kernels run in interpret mode, so absolute us_per_call is
+NOT a TPU number; the derived column carries the structural quantities that
+transfer: wire-compression ratio and bytes touched per element (the kernels
+are designed to be HBM-streaming: read-once/write-once).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(report):
+    n = 1 << 20  # 1M-element message (~4 MB fp32)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n,), jnp.float32)
+    for bits in (2, 4, 8):
+        us = _time(lambda: ops.qsgd_quantize(x, key, bits)[0])
+        packed, norms = ops.qsgd_quantize(x, key, bits)
+        wire = packed.nbytes + norms.nbytes
+        ratio = x.nbytes / wire
+        report(f"kernel/qsgd{bits}_quantize_1M", us,
+               f"wire_bytes={wire};compression=x{ratio:.2f}")
+        us_d = _time(lambda: ops.qsgd_dequantize(packed, norms, bits, n))
+        report(f"kernel/qsgd{bits}_dequantize_1M", us_d, f"out_bytes={x.nbytes}")
+    # fused buffer aggregation, K=10 (the paper's buffer size)
+    k = 10
+    msgs, norms_l = [], []
+    for i in range(k):
+        p, nm = ops.qsgd_quantize(
+            jax.random.normal(jax.random.PRNGKey(i), (n,)), jax.random.PRNGKey(50 + i), 4)
+        msgs.append(p)
+        norms_l.append(nm)
+    stack, nstack = jnp.stack(msgs), jnp.stack(norms_l)
+    w = jnp.full((k,), 0.1)
+    us = _time(lambda: ops.buffer_aggregate(stack, nstack, w, 4, n))
+    hbm = stack.nbytes + nstack.nbytes + x.nbytes  # one read + one write
+    naive = k * (stack.nbytes // k + x.nbytes) + (k + 1) * x.nbytes
+    report("kernel/buffer_agg_K10_1M", us,
+           f"fused_hbm_bytes={hbm};naive_hbm_bytes={naive};saving=x{naive/hbm:.2f}")

@@ -1,0 +1,75 @@
+"""Aggregate dry-run records into the roofline table (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), emits a
+markdown table + per-pair one-line bottleneck notes, and the CSV rows for
+benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+OUT_MD = "experiments/roofline_table.md"
+
+
+def load_records(pattern: str = "experiments/dryrun/*.json") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _advice(rec: Dict) -> str:
+    r = rec.get("roofline", {})
+    dom = r.get("dominant", "?")
+    if dom == "memory":
+        return "reduce HBM traffic: fuse/remat less, shard caches wider, bf16 states"
+    if dom == "collective":
+        return "cut collective bytes: quantized cross-pod reduction, better activation sharding"
+    return "raise MXU utilization: bigger per-device tiles, less dispatch waste"
+
+
+def to_markdown(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant |"
+        " useful_flops | state GB/dev | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if not rec.get("ok"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+                         f" FAIL | | | | | | {rec.get('error', '')[:60]} |")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} |"
+            f" {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+            f" {r['collective_s']:.4f} | **{r['dominant']}** |"
+            f" {r['useful_flops_ratio']:.3f} |"
+            f" {rec['state_bytes_per_dev'] / 1e9:.2f} | {_advice(rec)} |")
+    return "\n".join(lines)
+
+
+def main(report):
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if not r.get("ok")]
+    for rec in ok:
+        r = rec["roofline"]
+        report(f"roofline/{rec['arch']}__{rec['shape']}__{rec['mesh']}",
+               max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+               f"dominant={r['dominant']};useful={r['useful_flops_ratio']:.3f};"
+               f"coll_GB={r['collective_bytes_per_dev'] / 1e9:.2f};"
+               f"state_GB={rec['state_bytes_per_dev'] / 1e9:.2f}")
+    report("roofline/summary", 0.0,
+           f"ok={len(ok)};fail={len(fail)};"
+           f"single_pod={sum(1 for r in ok if r['mesh'] == 'pod16x16')};"
+           f"multi_pod={sum(1 for r in ok if r['mesh'] == 'pod2x16x16')}")
+    if recs:
+        os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+        with open(OUT_MD, "w") as f:
+            f.write(to_markdown(recs) + "\n")
+    return recs

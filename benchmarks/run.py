@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure + system extras.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only kernel,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def report(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+SUITES = ["kernel", "roofline", "table1", "fig3", "table2"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else SUITES
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for suite in chosen:
+        try:
+            if suite == "kernel":
+                from benchmarks import kernel_bench
+                kernel_bench.main(report)
+            elif suite == "roofline":
+                from benchmarks import roofline
+                roofline.main(report)
+            elif suite == "table1":
+                from benchmarks import table1_qsgd_grid
+                table1_qsgd_grid.main(report)
+            elif suite == "fig3":
+                from benchmarks import fig3_concurrency
+                fig3_concurrency.main(report)
+            elif suite == "table2":
+                from benchmarks import table2_biased_server
+                table2_biased_server.main(report)
+            else:
+                raise ValueError(f"unknown suite {suite}")
+        except Exception as e:
+            failures += 1
+            report(f"{suite}/ERROR", 0.0, f"{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    report("total_wall", (time.time() - t0) * 1e6, f"failures={failures}")
+
+
+if __name__ == "__main__":
+    main()

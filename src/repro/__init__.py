@@ -1,0 +1,10 @@
+"""repro: QAFeL — Quantized Asynchronous Federated Learning (Ortega & Jafarkhani, 2023).
+
+A production-grade JAX framework implementing FedBuff-style buffered
+asynchronous federated learning with bidirectional quantized communication
+via a shared hidden state, plus the model/data/optimizer/distribution
+substrates needed to train and serve the assigned architecture pool on
+multi-pod TPU meshes.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,74 @@
+"""Checkpointing: msgpack-framed numpy pytree snapshots.
+
+Layout: ``<dir>/step_<n>/state.msgpack`` with tensors stored as raw bytes +
+dtype/shape metadata, plus a tiny JSON manifest. Synchronous and
+single-host (the distributed launcher gathers to host before saving —
+adequate for the dry-run environment; a production deployment would swap
+in tensorstore/OCDBT behind the same two functions).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> Dict[str, Any]:
+    arr = np.asarray(jax.device_get(x))
+    # msgpack has no bf16; store as raw bytes + dtype string
+    return {"dtype": str(arr.dtype) if arr.dtype != jnp.bfloat16 else "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: Dict[str, Any]) -> np.ndarray:
+    dtype = jnp.bfloat16 if d["dtype"] == "bfloat16" else np.dtype(d["dtype"])
+    return np.frombuffer(d["data"], dtype=dtype).reshape(d["shape"]).copy()
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    metadata: Optional[Dict[str, Any]] = None) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(state)
+    payload = {"leaves": [_pack_leaf(x) for x in leaves],
+               "treedef": str(treedef)}
+    tmp = os.path.join(path, "state.msgpack.tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, os.path.join(path, "state.msgpack"))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   **(metadata or {})}, f)
+    return path
+
+
+def load_checkpoint(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    path = os.path.join(directory, f"step_{step:08d}", "state.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(leaves_like):
+        raise ValueError(f"leaf count mismatch: {len(stored)} vs {len(leaves_like)}")
+    leaves = []
+    for ref, d in zip(leaves_like, stored):
+        arr = _unpack_leaf(d)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch: {arr.shape} vs {ref.shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None

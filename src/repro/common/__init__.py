@@ -1,0 +1,12 @@
+from repro.common.tree import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_size,
+    tree_bytes,
+    split_key_tree,
+)

@@ -1,0 +1,59 @@
+"""Pytree arithmetic helpers used across the QAFeL core.
+
+All functions are pure and jit-friendly. Parameters, deltas, hidden states
+and optimizer states are plain nested dicts of jnp arrays throughout the
+framework, so these helpers are the lingua franca between substrates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: (x * s).astype(x.dtype), a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, cast back to y's dtype leaf-wise."""
+    return jax.tree.map(lambda xi, yi: (alpha * xi + yi).astype(yi.dtype), x, y)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return jnp.sum(jnp.stack(leaves))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in the tree (static, host int)."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of the tree at its stored dtypes (static, host int)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def split_key_tree(key, tree):
+    """Split `key` into one independent key per leaf of `tree`."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))

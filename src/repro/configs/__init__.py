@@ -1,0 +1,48 @@
+"""Architecture registry: the 10 assigned configs + the paper's own CNN.
+
+Each module exposes ``CONFIG`` (the exact assigned full-size config) and
+``REDUCED`` (a 1-2 super-block, d_model<=512, <=4 expert variant of the same
+family for CPU smoke tests). ``get_config(arch_id)`` / ``get_reduced``
+resolve by id; ``list_archs()`` enumerates.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "granite-34b": "repro.configs.granite_34b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "mamba2-1.3b": "repro.configs.mamba2_13",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "celeba-cnn": "repro.configs.celeba_cnn",
+}
+
+
+def list_archs(include_cnn: bool = False) -> List[str]:
+    out = [a for a in _MODULES if a != "celeba-cnn"]
+    if include_cnn:
+        out.append("celeba-cnn")
+    return out
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _module(arch_id).REDUCED

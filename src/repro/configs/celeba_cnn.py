@@ -1,0 +1,20 @@
+"""The paper's own experimental model: 4-layer CNN binary classifier for the
+CelebA smiling task (LEAF benchmark, GroupNorm, dropout 0.1). This is not a
+ModelConfig (it is not a decoder); the CNN substrate lives in
+repro.models.cnn and this module only carries the experiment constants from
+Appendix D."""
+
+IMAGE_SIZE = 32
+IN_CHANNELS = 3
+N_CLASSES = 2
+DROPOUT = 0.1
+
+# Appendix D hyperparameters (inherited from FedBuff)
+CLIENT_LR = 4.7e-6
+SERVER_LR = 1000.0
+SERVER_MOMENTUM = 0.3
+BUFFER_K = 10
+LEAF_SEED = 1549775860
+
+CONFIG = None  # sentinel: resolved specially by the launch layer
+REDUCED = None

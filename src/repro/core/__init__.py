@@ -1,0 +1,17 @@
+"""QAFeL core: the paper's contribution.
+
+* ``quantizers``   — Definition 2.1 compression operators (Example B.1)
+* ``hidden_state`` — the shared x-hat mechanism (Equations 3-4)
+* ``buffer``       — K-sample server buffer (Algorithm 1)
+* ``qafel``        — Algorithms 1-3 + host orchestration
+* ``fedbuff``      — the full-precision baseline (identity-quantizer limit)
+* ``staleness``    — Assumption 3.4 monitoring + 1/sqrt(1+tau) weighting
+* ``protocol``     — wire messages and exact byte accounting
+"""
+from repro.core.quantizers import Quantizer, QuantizerSpec, make_quantizer
+from repro.core.qafel import QAFeL, QAFeLConfig, ServerState, client_update, server_apply
+from repro.core.fedbuff import fedbuff_config, make_fedbuff
+from repro.core.hidden_state import HiddenState, server_broadcast_delta
+from repro.core.buffer import UpdateBuffer
+from repro.core.staleness import StalenessMonitor, staleness_weight, tau_max_for_buffer
+from repro.core.protocol import Message, TrafficMeter, encode_message, decode_message

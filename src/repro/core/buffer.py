@@ -1,0 +1,52 @@
+"""Server-side update buffer (the "Buff" in FedBuff/QAFeL, Algorithm 1).
+
+Accumulates decoded client deltas (weighted by staleness scaling) until K
+samples have arrived, then releases the aggregate and resets. Aggregation
+happens in accumulator form — O(1) memory in K — matching the fused
+dequantize-accumulate Pallas kernel used on-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from repro.common.tree import tree_axpy, tree_scale, tree_zeros_like
+
+
+@dataclasses.dataclass
+class UpdateBuffer:
+    capacity: int  # K
+    _acc: Any = None  # running sum of weighted deltas
+    _weightsum: float = 0.0
+    count: int = 0
+    flushes: int = 0
+
+    def add(self, delta, weight: float = 1.0) -> None:
+        if self._acc is None:
+            self._acc = tree_scale(delta, weight)
+        else:
+            self._acc = tree_axpy(weight, delta, self._acc)
+        self._weightsum += float(weight)
+        self.count += 1
+
+    @property
+    def full(self) -> bool:
+        return self.count >= self.capacity
+
+    def flush(self, *, normalize: str = "capacity"):
+        """Return the aggregate Delta-bar and reset.
+
+        normalize: "capacity" -> divide by K (Algorithm 1 line 11);
+                   "weights"  -> divide by the sum of staleness weights.
+        """
+        if not self.full:
+            raise RuntimeError(f"flush before full: {self.count}/{self.capacity}")
+        denom = float(self.capacity) if normalize == "capacity" else max(self._weightsum, 1e-12)
+        out = tree_scale(self._acc, 1.0 / denom)
+        self._acc = None
+        self._weightsum = 0.0
+        self.count = 0
+        self.flushes += 1
+        return out

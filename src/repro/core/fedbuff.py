@@ -1,0 +1,22 @@
+"""FedBuff baseline (Nguyen et al., 2022) — the paper's comparison point.
+
+FedBuff is exactly QAFeL in the infinite-precision limit (Proposition 3.5:
+lim_{delta_c, delta_s -> 1} R_QAFeL = R_FedBuff), so the baseline is the
+same implementation with identity quantizers. Full-precision messages are
+accounted at 32 bits/coordinate, reproducing the paper's 117.128 kB/upload
+for the CelebA CNN.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.qafel import QAFeL, QAFeLConfig
+
+
+def fedbuff_config(base: QAFeLConfig) -> QAFeLConfig:
+    return dataclasses.replace(base, client_quantizer="identity",
+                               server_quantizer="identity")
+
+
+def make_fedbuff(qcfg: QAFeLConfig, loss_fn, params0) -> QAFeL:
+    return QAFeL(fedbuff_config(qcfg), loss_fn, params0)

@@ -1,0 +1,42 @@
+"""The shared hidden state x-hat (QAFeL's central mechanism).
+
+Both the server and every client hold x-hat and evolve it by the *same*
+quantized increments q^t = Q_s(x^{t+1} - x-hat^t) (Algorithm 1 line 14 /
+Algorithm 3 line 4), so the copies remain bit-identical forever — the test
+suite asserts exact equality. Because the broadcast encodes the difference
+to the *hidden* state rather than a direct quantization of the server
+model, quantization error does not compound across rounds (the error-
+feedback / EF21-style construction the paper builds on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.common.tree import tree_add, tree_sub
+from repro.core.quantizers import Quantizer
+
+
+@dataclasses.dataclass
+class HiddenState:
+    value: Any  # pytree, same structure as the model params
+
+    @staticmethod
+    def init(params0) -> "HiddenState":
+        return HiddenState(value=jax.tree.map(lambda x: x.copy(), params0))
+
+    def apply(self, q_decoded) -> "HiddenState":
+        """x-hat^{t+1} = x-hat^t + q^t (Equation 4)."""
+        return HiddenState(value=tree_add(self.value, q_decoded))
+
+
+def server_broadcast_delta(quantizer: Quantizer, x_new, x_hat, key):
+    """q^t = Q_s(x^{t+1} - x-hat^t): returns the *decoded* increment.
+
+    The encoded wire form is produced by protocol.encode_message; this
+    in-math path (quantize-dequantize) is what both sides apply, keeping
+    them synchronized even though the wire carries only packed codes.
+    """
+    return quantizer.qdq(tree_sub(x_new, x_hat), key)

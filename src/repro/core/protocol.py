@@ -1,0 +1,63 @@
+"""Wire protocol: message framing and exact byte accounting.
+
+Every client->server upload and server->client broadcast in the host-level
+simulator is a ``Message`` carrying a real encoded payload (packed uint8
+codes for qsgd, index/value pairs for top_k/rand_k) plus its exact wire
+size. The byte model matches the paper's Appendix E tables:
+``n bits / coordinate + one fp32 norm`` per tensor for n-bit qsgd, and
+``64 bits / kept coordinate`` for top_k / rand_k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.core.quantizers import Quantizer
+
+CLIENT_UPDATE = "client_update"
+HIDDEN_BROADCAST = "hidden_broadcast"
+
+
+@dataclasses.dataclass
+class Message:
+    kind: str
+    payload: Any  # Quantizer.encode(...) output (or a raw tree for identity)
+    wire_bytes: float
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def encode_message(kind: str, quantizer: Quantizer, tree, key, **meta) -> Message:
+    enc = quantizer.encode(tree, key)
+    return Message(kind=kind, payload=enc,
+                   wire_bytes=quantizer.wire_bytes_tree(tree), meta=dict(meta))
+
+
+def decode_message(quantizer: Quantizer, msg: Message):
+    return quantizer.decode(msg.payload)
+
+
+@dataclasses.dataclass
+class TrafficMeter:
+    """Accumulates the paper's communication metrics."""
+
+    uploads: int = 0
+    broadcasts: int = 0
+    upload_bytes: float = 0.0
+    broadcast_bytes: float = 0.0
+
+    def record(self, msg: Message, n_receivers: int = 1):
+        if msg.kind == CLIENT_UPDATE:
+            self.uploads += 1
+            self.upload_bytes += msg.wire_bytes
+        else:
+            self.broadcasts += 1
+            self.broadcast_bytes += msg.wire_bytes * n_receivers
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "uploads": self.uploads,
+            "broadcasts": self.broadcasts,
+            "upload_MB": self.upload_bytes / 1e6,
+            "broadcast_MB": self.broadcast_bytes / 1e6,
+            "kB_per_upload": (self.upload_bytes / self.uploads / 1e3) if self.uploads else 0.0,
+        }

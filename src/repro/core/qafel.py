@@ -1,0 +1,188 @@
+"""QAFeL: Quantized Asynchronous Federated Learning (Algorithms 1-3).
+
+Generic over the learning task: the algorithm is parameterized by a
+``loss_fn(params, batch, key) -> scalar`` and operates on parameter pytrees,
+so the same implementation trains the paper's 4-layer CNN and every
+assigned decoder architecture.
+
+Two surfaces:
+
+* **Jittable round math** (``client_update``, ``server_apply``): pure
+  functions used both by the host-level async simulator and by the
+  distributed pjit'd round step in ``repro.distributed``.
+* **Host orchestration** (``QAFeL`` class): server state, buffer, hidden
+  state, staleness bookkeeping, wire encoding. The async event timeline
+  itself lives in ``repro.sim`` and drives this class.
+
+FedBuff is recovered *exactly* with identity quantizers (the paper's
+infinite-precision limit) — ``repro.core.fedbuff.make_fedbuff`` is that
+special case, and a test asserts bit-identical trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_add, tree_axpy, tree_scale, tree_sub, tree_zeros_like
+from repro.core.buffer import UpdateBuffer
+from repro.core.hidden_state import HiddenState, server_broadcast_delta
+from repro.core.protocol import (CLIENT_UPDATE, HIDDEN_BROADCAST, Message,
+                                 TrafficMeter, decode_message, encode_message)
+from repro.core.quantizers import Quantizer, QuantizerSpec, make_quantizer
+from repro.core.staleness import StalenessMonitor, staleness_weight
+
+
+@dataclasses.dataclass(frozen=True)
+class QAFeLConfig:
+    client_lr: float = 0.01
+    server_lr: float = 1.0
+    server_momentum: float = 0.0  # FedBuff's beta (0.3 in the paper's runs)
+    buffer_size: int = 10  # K
+    local_steps: int = 1  # P
+    client_quantizer: Any = "qsgd4"  # spec/string; "identity" -> FedBuff upload
+    server_quantizer: Any = "qsgd4"
+    staleness_scaling: bool = True  # 1/sqrt(1+tau) down-weighting (Fig. 3 runs)
+    max_staleness: int = 0  # 0 = unbounded (Assumption 3.4 monitoring only)
+
+    def cq(self) -> Quantizer:
+        return make_quantizer(self.client_quantizer)
+
+    def sq(self) -> Quantizer:
+        return make_quantizer(self.server_quantizer)
+
+
+# ---------------------------------------------------------------------------
+# Jittable round math
+# ---------------------------------------------------------------------------
+
+
+def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key):
+    """Algorithm 2: y_0 <- x-hat; P local SGD steps; delta = y_P - y_0.
+
+    batches: a pytree whose leaves have leading dim P (one slice per local
+    step). Returns the *unquantized* delta (quantization is applied by the
+    caller — in-graph fake-quant for the distributed step, wire encoding for
+    the simulator).
+
+    Sign convention: the paper's Section 2 text sends Q_c(y_{P-1} - y_0) and
+    the server ascends x + eta_g * Delta-bar; Algorithm 2 line 5 writes
+    Q_c(y_0 - y_p). We follow the text (delta = y_P - y_0, i.e. a descent
+    direction) — see DESIGN.md for the discrepancy note.
+    """
+    def sgd_step(y, inp):
+        batch, k = inp
+        g = jax.grad(loss_fn)(y, batch, k)
+        y = jax.tree.map(lambda yi, gi: (yi - qcfg.client_lr * gi).astype(yi.dtype), y, g)
+        return y, None
+
+    keys = jax.random.split(key, qcfg.local_steps)
+    y_final, _ = jax.lax.scan(sgd_step, x_hat, (batches, keys))
+    return tree_sub(y_final, x_hat)
+
+
+def server_apply(qcfg: QAFeLConfig, x, momentum, delta_bar):
+    """Algorithm 1 line 12 (+ FedBuff server momentum):
+    m <- beta m + Delta-bar;  x <- x + eta_g m."""
+    if qcfg.server_momentum:
+        momentum = tree_axpy(qcfg.server_momentum, momentum, delta_bar)
+    else:
+        momentum = delta_bar
+    x_new = tree_axpy(qcfg.server_lr, momentum, x)
+    return x_new, momentum
+
+
+# ---------------------------------------------------------------------------
+# Host orchestration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServerState:
+    x: Any  # full-precision server model
+    hidden: HiddenState  # shared x-hat
+    momentum: Any
+    t: int = 0  # server step counter (model version)
+
+
+class QAFeL:
+    """Server + client logic of Algorithms 1-3, driven by an event loop."""
+
+    def __init__(self, qcfg: QAFeLConfig, loss_fn: Callable, params0):
+        self.qcfg = qcfg
+        self.loss_fn = loss_fn
+        self.cq = qcfg.cq()
+        self.sq = qcfg.sq()
+        self.state = ServerState(
+            x=jax.tree.map(lambda a: a.copy(), params0),
+            hidden=HiddenState.init(params0),
+            momentum=tree_zeros_like(params0),
+            t=0)
+        self.buffer = UpdateBuffer(capacity=qcfg.buffer_size)
+        self.meter = TrafficMeter()
+        self.staleness = StalenessMonitor(max_allowed=qcfg.max_staleness)
+        self._client_update = jax.jit(
+            functools.partial(client_update, loss_fn, qcfg))
+
+    # -- client side ------------------------------------------------------
+    def run_client(self, batches, key) -> Tuple[Message, int]:
+        """Algorithm 2 on the CURRENT hidden state; returns (message, version).
+
+        In the async simulator the caller records the version now and
+        delivers the message later (after the sampled training duration).
+        """
+        k_train, k_enc = jax.random.split(key)
+        delta = self._client_update(self.state.hidden.value, batches, k_train)
+        msg = encode_message(CLIENT_UPDATE, self.cq, delta, k_enc,
+                             version=self.state.t)
+        return msg, self.state.t
+
+    # -- server side ------------------------------------------------------
+    def receive(self, msg: Message, key) -> Optional[Message]:
+        """Algorithm 1 lines 5-16. Returns the broadcast message on a flush."""
+        self.meter.record(msg)
+        tau = self.state.t - msg.meta["version"]
+        self.staleness.observe(tau)
+        w = float(staleness_weight(tau, self.qcfg.staleness_scaling))
+        delta = decode_message(self.cq, msg)
+        self.buffer.add(delta, weight=w)
+        if not self.buffer.full:
+            return None
+
+        delta_bar = self.buffer.flush(normalize="capacity")
+        x_new, momentum = server_apply(self.qcfg, self.state.x,
+                                       self.state.momentum, delta_bar)
+        # Broadcast q^t = Q_s(x^{t+1} - x-hat^t). The server applies the
+        # *decoded wire message itself* — the exact bits every client decodes
+        # — which is what keeps all x-hat replicas bit-identical.
+        diff = tree_sub(x_new, self.state.hidden.value)
+        bmsg = encode_message(HIDDEN_BROADCAST, self.sq, diff, key,
+                              t=self.state.t)
+        q = decode_message(self.sq, bmsg)
+        self.meter.record(bmsg)
+        self.state = ServerState(
+            x=x_new,
+            hidden=self.state.hidden.apply(q),
+            momentum=momentum,
+            t=self.state.t + 1)
+        return bmsg
+
+    # -- invariant checks / metrics ----------------------------------------
+    def hidden_drift(self) -> float:
+        """|| x - x-hat || / || x || — the quantization term of Lemma F.9."""
+        num = jnp.sqrt(sum(jnp.sum((a - b).astype(jnp.float32) ** 2)
+                           for a, b in zip(jax.tree.leaves(self.state.x),
+                                           jax.tree.leaves(self.state.hidden.value))))
+        den = jnp.sqrt(sum(jnp.sum(a.astype(jnp.float32) ** 2)
+                           for a in jax.tree.leaves(self.state.x)))
+        return float(num / jnp.maximum(den, 1e-30))
+
+    def metrics(self) -> Dict[str, Any]:
+        out = dict(self.meter.summary())
+        out.update(self.staleness.summary())
+        out["server_steps"] = self.state.t
+        out["hidden_drift"] = self.hidden_drift()
+        return out

@@ -1,0 +1,299 @@
+"""Quantizers (compression operators) per Definition 2.1 of the QAFeL paper.
+
+A quantizer Q: R^d -> R^d satisfies  E_Q ||Q(x) - x||^2 <= (1 - delta) ||x||^2
+for a compression parameter delta > 0.  Example B.1 of the paper defines the
+three standard operators implemented here:
+
+* ``qsgd_s`` — stochastic n-bit quantization (Alistarh et al., 2017). Sends
+  ||x||, sign(x) and stochastically rounded integer levels xi(x, s). Unbiased.
+  For an n-bit code we use 1 sign bit + (n-1) magnitude bits, i.e.
+  s = 2**(n-1) - 1 levels, matching the paper's "n bits per coordinate"
+  wire-size accounting (kB/upload tables in Appendix E).
+* ``top_k`` — keeps the k largest-magnitude coordinates. Biased; delta = k/d.
+* ``rand_k`` — keeps k uniformly random coordinates. With ``scaled=True`` the
+  kept coordinates are multiplied by d/k which makes the operator unbiased
+  (the variant the paper's client-side analysis needs); with ``scaled=False``
+  it is the contractive version with delta = k/d.
+* ``identity`` — no compression (delta = 1); turns QAFeL into exact FedBuff.
+
+Two call surfaces are provided:
+
+* ``qdq(x, key)``: quantize-dequantize in floating point. This is what runs
+  *inside* jitted/pjit'd training steps (the reconstruction is all the math
+  needs; the wire format is accounted analytically).
+* ``encode(x, key)`` / ``decode(msg)``: the actual packed wire format (uint8
+  payloads) used by the host-level async simulator and the byte-accounting
+  benchmarks. For qsgd the packing runs through the Pallas kernel wrappers in
+  ``repro.kernels.ops`` (interpret mode on CPU, real kernels on TPU).
+
+Both surfaces operate leaf-wise on pytrees via the helpers at the bottom.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import split_key_tree
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerSpec:
+    """Declarative description of a quantizer; hashable, storable in configs."""
+
+    kind: str  # "qsgd" | "top_k" | "rand_k" | "identity"
+    bits: int = 4  # for qsgd: total bits per coordinate (incl. sign)
+    fraction: float = 0.1  # for top_k / rand_k: k = ceil(fraction * d)
+    scaled: bool = True  # rand_k only: unbiased (d/k) scaling
+    # qsgd bucketing (Alistarh et al.'s implementation; the paper's kB tables
+    # show ~0.2 extra bits/coord = one fp32 norm per O(128) coords). Bucketing
+    # is what keeps 1 - delta < 1 at model sizes: a single whole-tensor norm
+    # gives 1 - delta ~ sqrt(2d)/s >> 1 and the hidden-state loop diverges.
+    # 128 matches the Pallas kernel's lane width (one norm per VMEM row).
+    bucket_size: int = 128
+
+    def __post_init__(self):
+        if self.kind not in ("qsgd", "top_k", "rand_k", "identity"):
+            raise ValueError(f"unknown quantizer kind: {self.kind}")
+        if self.kind == "qsgd" and not (2 <= self.bits <= 8):
+            raise ValueError("qsgd bits must be in [2, 8]")
+        if self.kind in ("top_k", "rand_k") and not (0.0 < self.fraction <= 1.0):
+            raise ValueError("fraction must be in (0, 1]")
+
+    # -- properties -----------------------------------------------------
+    @property
+    def unbiased(self) -> bool:
+        if self.kind == "qsgd" or self.kind == "identity":
+            return True
+        if self.kind == "rand_k":
+            return self.scaled
+        return False  # top_k
+
+    @property
+    def levels(self) -> int:
+        """qsgd: number of magnitude levels s (1 sign bit + bits-1 magnitude)."""
+        return (1 << (self.bits - 1)) - 1
+
+    def delta(self, d: int) -> float:
+        """Compression parameter delta for dimension d (clipped to (0, 1])."""
+        if self.kind == "identity":
+            return 1.0
+        if self.kind in ("top_k", "rand_k"):
+            k = max(1, math.ceil(self.fraction * d))
+            return k / d
+        # qsgd (Alistarh et al. 2017, Lemma 3.1) applied per bucket of size b:
+        # E||Q(x)-x||^2 <= min(2b/s^2, sqrt(2b)/s) ||x||^2 (worst case).
+        s = self.levels
+        b = min(d, self.bucket_size)
+        one_minus_delta = min(2 * b / s**2, math.sqrt(2 * b) / s)
+        return max(1e-6, 1.0 - one_minus_delta)
+
+    def wire_bits(self, d: int) -> int:
+        """Exact bits on the wire for a d-dimensional message."""
+        if self.kind == "identity":
+            return 32 * d
+        if self.kind == "qsgd":
+            n_buckets = math.ceil(d / self.bucket_size)
+            return self.bits * d + 32 * n_buckets  # n bits/coord + fp32 norm/bucket
+        k = max(1, math.ceil(self.fraction * d))
+        # k (index, value) pairs: 32-bit index + 32-bit value
+        return 64 * k
+
+    def label(self) -> str:
+        if self.kind == "identity":
+            return "identity"
+        if self.kind == "qsgd":
+            return f"qsgd{self.bits}b"
+        return f"{self.kind}{self.fraction:g}"
+
+
+# ---------------------------------------------------------------------------
+# qsgd math (pure jnp; the Pallas kernel in repro/kernels mirrors this)
+# ---------------------------------------------------------------------------
+
+
+def _qsgd_qdq_flat(x: jnp.ndarray, key, s: int, bucket: int) -> jnp.ndarray:
+    """Quantize-dequantize a flat fp vector: s stochastic levels per bucket."""
+    xf = x.astype(jnp.float32)
+    n = xf.size
+    pad = (-n) % bucket
+    xp = jnp.pad(xf, (0, pad)).reshape(-1, bucket)
+    norm = jnp.linalg.norm(xp, axis=1, keepdims=True)
+    safe = jnp.maximum(norm, 1e-30)
+    level = jnp.abs(xp) * (s / safe)
+    low = jnp.floor(level)
+    prob = level - low
+    u = jax.random.uniform(key, xp.shape, dtype=jnp.float32)
+    xi = jnp.minimum(low + (u < prob).astype(jnp.float32), float(s))  # in [0, s]
+    recon = jnp.sign(xp) * xi * (safe / s)
+    recon = jnp.where(norm > 0, recon, jnp.zeros_like(xp))
+    return recon.reshape(-1)[:n].astype(x.dtype)
+
+
+def _top_k_qdq_flat(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    # threshold = k-th largest magnitude
+    vals, _ = jax.lax.top_k(jnp.abs(xf), k)
+    thresh = vals[-1]
+    keep = jnp.abs(xf) >= thresh
+    # Break ties deterministically: keep at most k by cumulative count.
+    order = jnp.argsort(-jnp.abs(xf))
+    mask = jnp.zeros_like(xf, dtype=bool).at[order[:k]].set(True)
+    del keep, thresh
+    return jnp.where(mask, xf, 0.0).astype(x.dtype)
+
+
+def _rand_k_qdq_flat(x: jnp.ndarray, key, k: int, scaled: bool) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    d = x.size
+    idx = jax.random.choice(key, d, shape=(k,), replace=False)
+    mask = jnp.zeros((d,), dtype=bool).at[idx].set(True)
+    out = jnp.where(mask, xf, 0.0)
+    if scaled:
+        out = out * (d / k)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer object
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantizer:
+    spec: QuantizerSpec
+
+    # ---- in-graph float math -------------------------------------------
+    def qdq_leaf(self, x: jnp.ndarray, key) -> jnp.ndarray:
+        """Quantize-dequantize one array (any shape)."""
+        spec = self.spec
+        if spec.kind == "identity":
+            return x
+        flat = x.reshape(-1)
+        if spec.kind == "qsgd":
+            out = _qsgd_qdq_flat(flat, key, spec.levels, spec.bucket_size)
+        elif spec.kind == "top_k":
+            k = max(1, math.ceil(spec.fraction * flat.size))
+            out = _top_k_qdq_flat(flat, k)
+        else:  # rand_k
+            k = max(1, math.ceil(spec.fraction * flat.size))
+            out = _rand_k_qdq_flat(flat, key, k, spec.scaled)
+        return out.reshape(x.shape)
+
+    def qdq(self, tree, key):
+        """Quantize-dequantize a pytree, independent randomness per leaf."""
+        if self.spec.kind == "identity":
+            return tree
+        keys = split_key_tree(key, tree)
+        return jax.tree.map(self.qdq_leaf, tree, keys)
+
+    # ---- wire format ----------------------------------------------------
+    def encode_leaf(self, x: jnp.ndarray, key) -> dict:
+        """Encode one array into its packed wire message (host-level path)."""
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        spec = self.spec
+        flat = x.reshape(-1).astype(jnp.float32)
+        if spec.kind == "identity":
+            return {"kind": "identity", "payload": flat, "shape": x.shape, "dtype": str(x.dtype)}
+        if spec.kind == "qsgd":
+            # The wire path uses the Pallas kernel; its bucket is the 128-lane
+            # row. The in-graph qdq path honours spec.bucket_size exactly.
+            packed, norms = kops.qsgd_quantize(flat, key, spec.bits)
+            return {
+                "kind": "qsgd",
+                "packed": packed,
+                "norms": norms,
+                "bits": spec.bits,
+                "n": flat.size,
+                "shape": x.shape,
+                "dtype": str(x.dtype),
+            }
+        k = max(1, math.ceil(spec.fraction * flat.size))
+        if spec.kind == "top_k":
+            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+            vals = flat[idx]
+        else:
+            idx = jax.random.choice(key, flat.size, shape=(k,), replace=False)
+            vals = flat[idx]
+            if spec.scaled:
+                vals = vals * (flat.size / k)
+        return {
+            "kind": spec.kind,
+            "idx": idx.astype(jnp.int32),
+            "vals": vals,
+            "n": flat.size,
+            "shape": x.shape,
+            "dtype": str(x.dtype),
+        }
+
+    def decode_leaf(self, msg: dict) -> jnp.ndarray:
+        from repro.kernels import ops as kops
+
+        kind = msg["kind"]
+        if kind == "identity":
+            out = msg["payload"]
+        elif kind == "qsgd":
+            out = kops.qsgd_dequantize(msg["packed"], msg["norms"], msg["bits"], msg["n"])
+        else:
+            out = jnp.zeros((msg["n"],), jnp.float32).at[msg["idx"]].set(msg["vals"])
+        return out.reshape(msg["shape"]).astype(msg["dtype"])
+
+    def encode(self, tree, key):
+        keys = split_key_tree(key, tree)
+        leaves, treedef = jax.tree.flatten(tree)
+        kleaves = jax.tree.leaves(keys)
+        msgs = [self.encode_leaf(x, k) for x, k in zip(leaves, kleaves)]
+        return {"treedef": treedef, "msgs": msgs}
+
+    def decode(self, enc):
+        leaves = [self.decode_leaf(m) for m in enc["msgs"]]
+        return jax.tree.unflatten(enc["treedef"], leaves)
+
+    # ---- accounting ------------------------------------------------------
+    def wire_bits_tree(self, tree) -> int:
+        return sum(self.spec.wire_bits(int(x.size)) for x in jax.tree.leaves(tree))
+
+    def wire_bytes_tree(self, tree) -> float:
+        return self.wire_bits_tree(tree) / 8.0
+
+    def delta_tree(self, tree) -> float:
+        """Worst-case (min over leaves) compression parameter."""
+        return min(self.spec.delta(int(x.size)) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Constructors / registry
+# ---------------------------------------------------------------------------
+
+
+def make_quantizer(spec_or_name) -> Quantizer:
+    """Build a Quantizer from a QuantizerSpec or a shorthand string.
+
+    Shorthand: "qsgd4", "qsgd8", "top_k0.1", "rand_k0.05", "identity".
+    """
+    if isinstance(spec_or_name, Quantizer):
+        return spec_or_name
+    if isinstance(spec_or_name, QuantizerSpec):
+        return Quantizer(spec_or_name)
+    name = spec_or_name
+    if name == "identity" or name is None:
+        return Quantizer(QuantizerSpec("identity"))
+    if name.startswith("qsgd"):
+        return Quantizer(QuantizerSpec("qsgd", bits=int(name[len("qsgd"):] or 4)))
+    if name.startswith("top_k"):
+        return Quantizer(QuantizerSpec("top_k", fraction=float(name[len("top_k"):] or 0.1)))
+    if name.startswith("rand_k"):
+        return Quantizer(QuantizerSpec("rand_k", fraction=float(name[len("rand_k"):] or 0.1)))
+    raise ValueError(f"unknown quantizer: {name!r}")
+
+
+IDENTITY = make_quantizer("identity")

@@ -1,0 +1,53 @@
+"""Staleness tracking and scaling (Assumption 3.4 + Appendix D weighting).
+
+The staleness of a client update is the number of server steps between the
+model version the client started from and the version the update is applied
+to. FedBuff (and QAFeL's Figure 3 experiments) down-weight stale updates by
+1 / sqrt(1 + tau). ``StalenessMonitor`` also tracks the empirical
+tau_max needed to check Assumption 3.4 and the tau_max,K <= ceil(tau_max,1/K)
+buffer-shrinking property.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+
+def staleness_weight(tau, enabled: bool = True):
+    """1/sqrt(1+tau); identity when disabled. Works on scalars or arrays."""
+    if not enabled:
+        return jnp.ones_like(jnp.asarray(tau, jnp.float32))
+    return 1.0 / jnp.sqrt(1.0 + jnp.asarray(tau, jnp.float32))
+
+
+@dataclasses.dataclass
+class StalenessMonitor:
+    max_allowed: int = 0  # 0 = unbounded; >0 enforces Assumption 3.4
+    history: List[int] = dataclasses.field(default_factory=list)
+
+    def observe(self, tau: int) -> None:
+        if self.max_allowed and tau > self.max_allowed:
+            raise RuntimeError(
+                f"staleness {tau} exceeds tau_max={self.max_allowed} "
+                "(Assumption 3.4 violated)")
+        self.history.append(int(tau))
+
+    @property
+    def tau_max(self) -> int:
+        return max(self.history, default=0)
+
+    @property
+    def tau_mean(self) -> float:
+        return sum(self.history) / len(self.history) if self.history else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"tau_max": self.tau_max, "tau_mean": self.tau_mean,
+                "n": len(self.history)}
+
+
+def tau_max_for_buffer(tau_max_1: int, k: int) -> int:
+    """Appendix A of FedBuff: tau_max,K <= ceil(tau_max,1 / K)."""
+    return math.ceil(tau_max_1 / max(k, 1))

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    SyntheticCelebA,
+    synthetic_lm_batch,
+    synthetic_batch_for_config,
+)
+from repro.data.federated import FederatedPartition, dirichlet_partition

@@ -1,0 +1,8 @@
+from repro.distributed.steps import (
+    RoundState,
+    init_round_state,
+    abstract_round_state,
+    make_qafel_round,
+    make_prefill_step,
+    make_decode_step,
+)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for QAFeL's communication hot path.
+
+The paper's contribution lives on the wire: every client upload and every
+server broadcast is quantized. On TPU that makes stochastic n-bit
+quantization + bit-packing (and the fused dequantize-accumulate of the
+server buffer) the compute hot-spot sitting on the critical path of each
+round, so those ops get Pallas kernels with explicit VMEM BlockSpec tiling:
+
+* ``qsgd.py``        — stochastic n-bit quantize + pack / unpack + dequantize
+* ``buffer_agg.py``  — fused dequantize + weighted-accumulate of K buffered
+                       client messages (server step, Algorithm 1 lines 11-12)
+* ``ops.py``         — jitted public wrappers (interpret=True on CPU)
+* ``ref.py``         — pure-jnp oracles (bit-exact, used by the test suite)
+
+These are VPU/bandwidth kernels (no MXU): block shapes are (8k, 128)-aligned
+so each element is streamed through VMEM exactly once.
+"""

@@ -1,0 +1,68 @@
+"""Public jitted wrappers around the Pallas kernels.
+
+Handles arbitrary flat lengths (padding to (BLOCK_ROWS, 128) tiles), backend
+dispatch (interpret=True off-TPU so the kernel bodies execute in Python on
+CPU for correctness validation), and per-row bucket-norm bookkeeping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import buffer_agg as _agg
+from repro.kernels import qsgd as _qsgd
+
+TILE = _qsgd.BLOCK_ROWS * _qsgd.LANES  # elements per grid block
+BUCKET = _qsgd.LANES  # one fp32 norm per 128-element row
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def padded_len(n: int) -> int:
+    return ((n + TILE - 1) // TILE) * TILE
+
+
+def _to_tiles(flat: jnp.ndarray) -> jnp.ndarray:
+    n = flat.shape[0]
+    pad = padded_len(n) - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, _qsgd.LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def qsgd_quantize(flat: jnp.ndarray, key, bits: int = 4):
+    """Quantize a flat f32 vector.
+
+    Returns (packed uint8 (rows, 128*bits//8), norms f32 (rows,)) — one norm
+    per 128-element bucket. The packed payload covers the padded layout;
+    callers keep the true length to slice after dequantize. Padded tail
+    elements are zeros -> zero codes, numerically inert.
+    """
+    flat = flat.astype(jnp.float32)
+    x2d = _to_tiles(flat)
+    u2d = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    packed, norms = _qsgd.qsgd_quantize_pack(x2d, u2d, bits, interpret=_interpret())
+    return packed, norms.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n"))
+def qsgd_dequantize(packed: jnp.ndarray, norms: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Dequantize packed codes back to a flat f32 vector of length n."""
+    x2d = _qsgd.qsgd_unpack_dequantize(packed, norms, bits, interpret=_interpret())
+    return x2d.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n"))
+def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
+                     weights: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Fused weighted dequantized sum over the K buffered messages -> flat (n,).
+
+    norms: (K, rows) per-message bucket norms."""
+    out2d = _agg.buffer_aggregate(packed_stack, norms, weights, bits,
+                                  interpret=_interpret())
+    return out2d.reshape(-1)[:n]

@@ -1,0 +1,134 @@
+"""Pallas kernels for stochastic n-bit qsgd quantization with bit-packing.
+
+Wire format (per flat message of n elements, padded to LANE*SUBLANE tiles):
+
+* one fp32 L2 norm per 128-element bucket (= one VMEM lane row; bucketing is
+  both Alistarh et al.'s practical QSGD and the reason the hidden-state loop
+  contracts — see core/quantizers.py),
+* one n-bit code per element: 1 sign bit (MSB of the code) + (bits-1)
+  magnitude bits holding the stochastically rounded level xi in [0, s],
+  s = 2**(bits-1) - 1,
+* codes packed little-endian into uint8 lanes, ``8 // bits`` codes per byte
+  (bits must divide 8: 2, 4 or 8).
+
+Layout: the flat vector is reshaped to (rows, 128) and tiled with
+BlockSpec((BLOCK_ROWS, 128)) so each grid step streams one VMEM-resident
+block: read x + uniform noise, emit packed codes + carry per-row norms.
+Everything is elementwise on the VPU; arithmetic intensity is O(1) so the
+kernel is HBM-bandwidth-bound by design — the point is to touch each
+element exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128  # bucket size: one norm per 128-element row
+BLOCK_ROWS = 256  # (256, 128) fp32 block = 128 KiB in VMEM; well under budget
+
+# ---------------------------------------------------------------------------
+# Quantize + pack
+# ---------------------------------------------------------------------------
+
+
+def _quantize_pack_kernel(x_ref, u_ref, out_ref, norm_ref, *, bits: int):
+    """One block: f32 (R, 128) + uniforms -> packed uint8 (R, 128/per_byte)
+    plus per-row norms (R, 1)."""
+    s = (1 << (bits - 1)) - 1
+    per_byte = 8 // bits
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))  # (R, 1)
+    inv = jnp.where(norm > 0.0, s / jnp.maximum(norm, 1e-30), 0.0)
+
+    level = jnp.abs(x) * inv
+    low = jnp.floor(level)
+    xi = low + (u < (level - low)).astype(jnp.float32)  # stochastic rounding
+    xi = jnp.minimum(xi, float(s)).astype(jnp.uint32)
+    sign_bit = (x < 0.0).astype(jnp.uint32) << (bits - 1)
+    code = sign_bit | xi  # n-bit code
+
+    r = code.shape[0]
+    grouped = code.reshape(r, LANES // per_byte, per_byte)
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(1, 1, per_byte)
+    out_ref[...] = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    norm_ref[...] = norm
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qsgd_quantize_pack(x2d: jnp.ndarray, u2d: jnp.ndarray,
+                       bits: int, interpret: bool = True):
+    """Quantize+pack a (rows, 128) f32 array; rows % BLOCK_ROWS == 0.
+
+    Returns (packed uint8 (rows, 128*bits//8), norms f32 (rows, 1)).
+    """
+    rows = x2d.shape[0]
+    assert x2d.shape[1] == LANES and rows % BLOCK_ROWS == 0, x2d.shape
+    assert 8 % bits == 0, bits
+    per_byte = 8 // bits
+    out_lanes = LANES // per_byte
+    grid = (rows // BLOCK_ROWS,)
+    return pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, out_lanes), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, out_lanes), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d, u2d)
+
+
+# ---------------------------------------------------------------------------
+# Unpack + dequantize
+# ---------------------------------------------------------------------------
+
+
+def _unpack_dequantize_kernel(p_ref, norm_ref, out_ref, *, bits: int):
+    """One block: packed uint8 (R, 128/per_byte) + norms (R, 1) -> f32 (R, 128)."""
+    s = (1 << (bits - 1)) - 1
+    per_byte = 8 // bits
+    mag_mask = jnp.uint32(s)
+    code_mask = jnp.uint32((1 << bits) - 1)
+    p = p_ref[...].astype(jnp.uint32)
+    r = p.shape[0]
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(1, 1, per_byte)
+    codes = ((p[:, :, None] >> shifts) & code_mask).reshape(r, LANES)
+    mag = (codes & mag_mask).astype(jnp.float32)
+    sign = 1.0 - 2.0 * ((codes >> (bits - 1)) & 1).astype(jnp.float32)
+    scale = norm_ref[...] / float(s)  # (R, 1), broadcasts over lanes
+    out_ref[...] = sign * mag * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qsgd_unpack_dequantize(packed: jnp.ndarray, norms: jnp.ndarray,
+                           bits: int, interpret: bool = True) -> jnp.ndarray:
+    """Inverse of qsgd_quantize_pack; returns f32 (rows, 128)."""
+    per_byte = 8 // bits
+    in_lanes = LANES // per_byte
+    rows = packed.shape[0]
+    assert packed.shape[1] == in_lanes and rows % BLOCK_ROWS == 0, packed.shape
+    grid = (rows // BLOCK_ROWS,)
+    norms2d = norms.reshape(rows, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_unpack_dequantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, in_lanes), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(packed, norms2d)

@@ -1,0 +1,114 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = collective_operand_bytes_per_device / 50e9
+
+``compiled.cost_analysis()`` supplies per-device FLOPs/bytes; collective
+bytes are parsed out of the (SPMD, per-device) HLO text by summing operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops. MODEL_FLOPS (6ND train / 2ND inference, N = active
+params) gives the useful-compute ratio that exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in (per-device) HLO text."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+(?:\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        # normalize: all-reduce-start, all-gather-done etc.
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        # operand shapes: everything after the opcode's opening paren
+        args = stripped[m.end():]
+        total = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(args))
+        if total == 0:  # fall back to result shape(s) before the '='
+            head = stripped[: m.start()]
+            total = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+        out[base] += total
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape_kind: str, tokens: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference."""
+    n = cfg.active_param_count()
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def roofline(analyzed, xla_cost: Dict[str, Any], *, chips: int,
+             cfg: ModelConfig, shape_kind: str, tokens: int) -> Dict[str, Any]:
+    """analyzed: hlo_analyzer.Cost (per-device, loop-multiplicity-aware).
+
+    xla_cost: raw compiled.cost_analysis() (recorded for reference only —
+    on the CPU backend it undercounts while-loop bodies)."""
+    flops_dev = float(analyzed.flops)
+    bytes_dev = float(analyzed.hbm_bytes)
+    coll_dev = float(analyzed.collective_total)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_kind, tokens)
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "collective_breakdown": dict(analyzed.collective_bytes),
+        "xla_cost_flops": float(xla_cost.get("flops", 0.0)),
+        "model_flops_total": mf,
+        "useful_flops_ratio": useful,
+        "chips": chips,
+        "tokens": tokens,
+    }

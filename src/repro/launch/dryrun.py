@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+For each combination this builds the real program (qafel_round / prefill /
+decode), places it on the production mesh with the sharding rules, lowers
+and compiles it, and records:
+
+* memory analysis (per-device argument/output/temp bytes),
+* cost analysis (per-device FLOPs / bytes accessed),
+* collective operand bytes parsed from the per-device HLO,
+* the derived roofline terms (launch/analysis.py).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
+aggregated into EXPERIMENTS.md by benchmarks/roofline.py.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as config_registry
+from repro.core.qafel import QAFeLConfig
+from repro.distributed.steps import RoundState, make_decode_step, make_prefill_step, make_qafel_round
+from repro.launch import analysis, hlo_analyzer
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, TRAIN_K, TRAIN_P, input_specs
+from repro.models.config import ModelConfig
+from repro.sharding.rules import (ShardingRules, batch_pspecs, cache_pspecs,
+                                  param_pspecs, state_pspecs)
+
+FSDP_THRESHOLD = 8_000_000_000  # params; above this, weights FSDP-shard on "data"
+
+
+def default_qcfg() -> QAFeLConfig:
+    return QAFeLConfig(client_lr=1e-3, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=TRAIN_K, local_steps=TRAIN_P,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+
+
+def _shardings(rules: ShardingRules, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes(abstract_tree, pspec_tree, mesh) -> int:
+    """Per-device bytes of a tree under its PartitionSpecs (analytic)."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(abstract_tree),
+                          jax.tree.leaves(pspec_tree, is_leaf=lambda x: isinstance(x, P))):
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                denom *= mesh.shape[a]
+        total += leaf.size * leaf.dtype.itemsize // max(denom, 1)
+    return total
+
+
+def build(cfg: ModelConfig, shape_name: str, rules: ShardingRules,
+          qcfg: QAFeLConfig, pod_quantized: bool = False):
+    """Returns (jitted_fn, abstract_args tuple, state_bytes_per_dev)."""
+    spec = input_specs(cfg, shape_name, qcfg)
+    mesh = rules.mesh
+    if spec["kind"] == "train":
+        round_fn = make_qafel_round(cfg, qcfg, remat=True,
+                                    window_override=spec["window_override"],
+                                    pod_quantized=pod_quantized, mesh=mesh)
+
+        def program(state, batch, weights, key_data):
+            return round_fn(state, batch, weights, jax.random.wrap_key_data(key_data))
+
+        st_specs = state_pspecs(rules, cfg, spec["state"])
+        if pod_quantized:
+            # client dim K over "pod", per-client batch over "data"
+            b_specs = jax.tree.map(
+                lambda l: P(*(["pod", None, ("data",)] + [None] * (l.ndim - 3))),
+                spec["batch"])
+            w_sh = NamedSharding(mesh, P("pod"))
+        else:
+            b_specs = batch_pspecs(rules, spec["batch"], batch_dim=2)
+            w_sh = NamedSharding(mesh, P())
+        in_sh = (_shardings(rules, st_specs), _shardings(rules, b_specs),
+                 w_sh, NamedSharding(mesh, P()))
+        args = (spec["state"], spec["batch"],
+                jax.ShapeDtypeStruct((qcfg.buffer_size,), jnp.float32),
+                spec["key_data"])
+        fn = jax.jit(program, in_shardings=in_sh, donate_argnums=(0,))
+        state_bytes = sharded_bytes(spec["state"], st_specs, mesh)
+        return fn, args, state_bytes
+
+    if spec["kind"] == "prefill":
+        step = make_prefill_step(cfg, max_len=spec["max_len"],
+                                 window_override=spec["window_override"])
+        p_specs = param_pspecs(rules, cfg, spec["params"])
+        i_specs = batch_pspecs(rules, spec["inputs"], batch_dim=0)
+        in_sh = (_shardings(rules, p_specs), _shardings(rules, i_specs))
+        fn = jax.jit(step, in_shardings=in_sh)
+        args = (spec["params"], spec["inputs"])
+        return fn, args, sharded_bytes(spec["params"], p_specs, mesh)
+
+    # decode
+    step = make_decode_step(cfg, window_override=spec["window_override"])
+    p_specs = param_pspecs(rules, cfg, spec["params"])
+    c_specs = cache_pspecs(rules, cfg, spec["cache"])
+    i_specs = batch_pspecs(rules, spec["inputs"], batch_dim=0)
+    in_sh = (_shardings(rules, p_specs), _shardings(rules, c_specs),
+             _shardings(rules, i_specs), NamedSharding(rules.mesh, P()))
+    fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+    args = (spec["params"], spec["cache"], spec["inputs"], spec["pos"])
+    state_bytes = (sharded_bytes(spec["params"], p_specs, mesh)
+                   + sharded_bytes(spec["cache"], c_specs, mesh))
+    return fn, args, state_bytes
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            fsdp: Optional[bool] = None, moe_impl: str = "gspmd",
+            tag_suffix: str = "", cache_seq_shard: bool = False) -> Dict[str, Any]:
+    cfg = config_registry.get_config(arch)
+    if moe_impl != "gspmd":
+        cfg = cfg.replace(moe_impl=moe_impl)
+    if fsdp is None:
+        fsdp = cfg.param_count() > FSDP_THRESHOLD
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.moe_impl == "ep":
+        from repro.models import moe as moe_lib
+        moe_lib.set_ep_mesh(mesh)
+    rules = ShardingRules(mesh=mesh, fsdp=fsdp, cache_seq_shard=cache_seq_shard)
+    qcfg = default_qcfg()
+    pod_quantized = tag_suffix.endswith("__podq")
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}{tag_suffix}"
+    t0 = time.time()
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "fsdp": fsdp, "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    try:
+        with mesh:
+            fn, args, state_bytes = build(cfg, shape_name, rules, qcfg,
+                                          pod_quantized=pod_quantized)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        with gzip.open(os.path.join(out_dir, "hlo", f"{tag}.hlo.gz"), "wt") as f:
+            f.write(hlo)  # enables offline re-analysis without recompiling
+        analyzed = hlo_analyzer.analyze(hlo)
+        tokens = shape.global_batch * (shape.seq if shape.kind != "decode" else 1)
+        roof = analysis.roofline(analyzed, cost, chips=mesh.size, cfg=cfg,
+                                 shape_kind=shape.kind, tokens=tokens)
+        record.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "state_bytes_per_dev": state_bytes,
+            "memory_analysis": {
+                k: getattr(mem, k) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if mem is not None and hasattr(mem, k)
+            },
+            "roofline": roof,
+        })
+        print(f"OK  {tag}: dominant={roof['dominant']} "
+              f"compute={roof['compute_s']:.4f}s memory={roof['memory_s']:.4f}s "
+              f"coll={roof['collective_s']:.4f}s useful={roof['useful_flops_ratio']:.3f} "
+              f"state/dev={state_bytes/1e9:.2f}GB compile={t_compile:.0f}s")
+    except Exception as e:  # a failure here is a bug in the system
+        record.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+        print(f"FAIL {tag}: {type(e).__name__}: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{tag}.json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fsdp", default=None, type=lambda s: s.lower() == "true")
+    ap.add_argument("--moe-impl", default="gspmd", choices=["gspmd", "ep"])
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    args = ap.parse_args()
+    archs = config_registry.list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.out, fsdp=args.fsdp,
+                              moe_impl=args.moe_impl, tag_suffix=args.tag_suffix,
+                              cache_seq_shard=args.cache_seq_shard)
+                failures += 0 if rec.get("ok") else 1
+    print(f"dry-run complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

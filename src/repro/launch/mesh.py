@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the "pod" axis is the
+federation boundary: client data-parallelism extends across pods while
+weights stay replicated over "pod", and QAFeL's quantized hidden-state
+broadcast is what crosses it.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state — required for the dry-run's
+host-device-count trick to work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh on whatever single device is present (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,141 @@
+"""Assigned input shapes and abstract input specs (ShapeDtypeStruct).
+
+The four assigned shapes:
+
+    train_4k     seq=4096    global_batch=256   -> qafel_round
+    prefill_32k  seq=32768   global_batch=32    -> prefill_step
+    decode_32k   seq=32768   global_batch=128   -> decode_step (full cache)
+    long_500k    seq=524288  global_batch=1     -> decode_step
+
+long_500k policy (DESIGN.md): SSM/hybrid archs are native; attention layers
+of every other arch (and zamba2/gemma2's global-attention layers) run with a
+sliding window of 8192 — the KV cache is a ring buffer, strictly
+sub-quadratic state. Marked [window] in the roofline table.
+
+``input_specs`` returns (abstract args tuple, metadata) for the program
+matching the shape kind; everything is ShapeDtypeStruct — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qafel import QAFeLConfig
+from repro.distributed.steps import abstract_round_state
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+LONG_WINDOW = 8192  # sliding window for long_500k on attention layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# Default round decomposition for train shapes: global_batch = K * P * local.
+TRAIN_K = 8  # buffered clients per round
+TRAIN_P = 1  # local SGD steps per client
+
+
+def window_override_for(cfg: ModelConfig, shape: ShapeSpec) -> Optional[int]:
+    """Sliding-window policy: only long_500k forces a window on attn layers."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.family == "ssm":
+        return None  # attention-free: nothing to window
+    return LONG_WINDOW
+
+
+def uses_window(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    return window_override_for(cfg, shape) is not None and cfg.family != "ssm"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_inputs(cfg: ModelConfig, lead: Tuple[int, ...], seq: int,
+                  with_labels: bool, decode: bool = False) -> Dict[str, Any]:
+    """Abstract input dict matching the arch's contract, leading dims `lead`.
+
+    decode=True: one new token, no modality prefix (the VLM's patch
+    embeddings exist only in the prefill prompt)."""
+    out: Dict[str, Any] = {}
+    if cfg.modality == "audio":
+        out["tokens"] = _sds(lead + (seq, cfg.audio_codebooks), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds(lead + (seq, cfg.audio_codebooks), jnp.int32)
+    elif cfg.modality == "vlm" and decode:
+        out["tokens"] = _sds(lead + (seq,), jnp.int32)
+    elif cfg.modality == "vlm":
+        s_text = seq - cfg.n_prefix_embeddings
+        out["tokens"] = _sds(lead + (s_text,), jnp.int32)
+        out["patch_embeddings"] = _sds(
+            lead + (cfg.n_prefix_embeddings, cfg.d_model), jnp.float32)
+        if with_labels:
+            out["labels"] = _sds(lead + (s_text,), jnp.int32)
+    else:
+        out["tokens"] = _sds(lead + (seq,), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds(lead + (seq,), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                qcfg: Optional[QAFeLConfig] = None) -> Dict[str, Any]:
+    """Abstract (no-allocation) inputs for (arch, shape).
+
+    Returns a dict with keys depending on kind:
+      train:   state, batch (K, P, b, ...), weights (K,), key_data
+      prefill: params, inputs (B, S, ...)
+      decode:  params, cache, inputs (B, 1, ...), pos
+    """
+    shape = SHAPES[shape_name]
+    wo = window_override_for(cfg, shape)
+    if shape.kind == "train":
+        k = qcfg.buffer_size if qcfg else TRAIN_K
+        p = qcfg.local_steps if qcfg else TRAIN_P
+        local = shape.global_batch // (k * p)
+        assert local >= 1, (shape.global_batch, k, p)
+        return {
+            "kind": "train",
+            "state": abstract_round_state(cfg),
+            "batch": _token_inputs(cfg, (k, p, local), shape.seq, with_labels=True),
+            "weights": _sds((k,), jnp.float32),
+            "key_data": _sds((2,), jnp.uint32),
+            "window_override": wo,
+        }
+    if shape.kind == "prefill":
+        return {
+            "kind": "prefill",
+            "params": T.abstract_params(cfg),
+            "inputs": _token_inputs(cfg, (shape.global_batch,), shape.seq,
+                                    with_labels=False),
+            "max_len": shape.seq,
+            "window_override": wo,
+        }
+    # decode: one new token against a seq-length cache
+    cache = T.abstract_cache(cfg, shape.global_batch, shape.seq, wo)
+    return {
+        "kind": "decode",
+        "params": T.abstract_params(cfg),
+        "cache": cache,
+        "inputs": _token_inputs(cfg, (shape.global_batch,), 1,
+                                with_labels=False, decode=True),
+        "pos": _sds((), jnp.int32),
+        "window_override": wo,
+    }

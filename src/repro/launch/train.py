@@ -1,0 +1,95 @@
+"""Training launcher: run QAFeL rounds for an assigned architecture.
+
+On real hardware this script is launched once per host; in this container
+it runs reduced configs on CPU end-to-end (the full configs go through
+``dryrun.py``). The async client timeline is host-driven (repro.sim
+semantics); each device round is one compiled ``qafel_round``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
+        --steps 50 --seq 128 --global-batch 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as config_registry
+from repro.checkpoint import save_checkpoint
+from repro.core.qafel import QAFeLConfig
+from repro.core.staleness import staleness_weight
+from repro.data.synthetic import synthetic_batch_for_config
+from repro.distributed.steps import init_round_state, make_qafel_round
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding.rules import ShardingRules, batch_pspecs, state_pspecs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--buffer-k", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--client-lr", type=float, default=3e-2)
+    ap.add_argument("--server-lr", type=float, default=1.0)
+    ap.add_argument("--client-quantizer", default="qsgd4")
+    ap.add_argument("--server-quantizer", default="qsgd4")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (config_registry.get_reduced(args.arch) if args.reduced
+           else config_registry.get_config(args.arch))
+    qcfg = QAFeLConfig(
+        client_lr=args.client_lr, server_lr=args.server_lr,
+        server_momentum=0.3, buffer_size=args.buffer_k,
+        local_steps=args.local_steps,
+        client_quantizer=args.client_quantizer,
+        server_quantizer=args.server_quantizer)
+
+    mesh = make_host_mesh() if jax.device_count() < 256 else make_production_mesh()
+    rules = ShardingRules(mesh=mesh, fsdp=False)
+    local = args.global_batch // (qcfg.buffer_size * qcfg.local_steps)
+    assert local >= 1
+
+    round_fn = make_qafel_round(cfg, qcfg, remat=False)
+    rng = np.random.default_rng(args.seed)
+
+    def sample_round_batch():
+        b = synthetic_batch_for_config(
+            cfg, rng, qcfg.buffer_size * qcfg.local_steps * local, args.seq)
+        return {k: jnp.asarray(v).reshape(
+            (qcfg.buffer_size, qcfg.local_steps, local) + v.shape[1:])
+            for k, v in b.items()}
+
+    with mesh:
+        state = init_round_state(cfg, jax.random.PRNGKey(args.seed))
+        st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             state_pspecs(rules, cfg, state),
+                             is_leaf=lambda x: isinstance(x, P))
+        state = jax.device_put(state, st_sh)
+        step_fn = jax.jit(round_fn, donate_argnums=(0,))
+        weights = staleness_weight(jnp.zeros((qcfg.buffer_size,)))
+        t0 = time.time()
+        for step in range(args.steps):
+            key = jax.random.PRNGKey(args.seed * 100_003 + step)
+            state, metrics = step_fn(state, sample_round_batch(), weights, key)
+            if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+                print(f"round {step:4d} loss={float(metrics['loss']):.4f} "
+                      f"t={time.time() - t0:.1f}s", flush=True)
+        if args.checkpoint_dir:
+            path = save_checkpoint(args.checkpoint_dir, args.steps,
+                                   {"x": state.x}, {"arch": args.arch})
+            print("checkpoint:", path)
+
+
+if __name__ == "__main__":
+    main()

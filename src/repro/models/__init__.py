@@ -1,0 +1,17 @@
+"""Model substrate: composable pure-JAX decoder architectures.
+
+Everything is functional — params are nested dicts of jnp arrays, forward
+passes are plain functions of (config, params, inputs). Layer stacks are
+homogeneous "super-blocks" scanned with ``jax.lax.scan`` so 90+ layer
+configs lower to compact HLO.
+"""
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    init_params,
+    abstract_params,
+    forward,
+    loss_fn,
+    init_cache,
+    abstract_cache,
+    decode_step,
+)

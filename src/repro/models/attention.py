@@ -1,0 +1,220 @@
+"""Attention: GQA/MQA with qk-norm, logit softcapping, sliding windows.
+
+Three execution paths:
+
+* ``attention_train``   — full/windowed causal self-attention over a sequence,
+  computed **blockwise with an online softmax** (flash-attention recurrence in
+  pure JAX) so the S x S logit matrix is never materialized. This is what
+  makes 32k prefill lower with sane per-device temp memory.
+* ``attention_decode``  — one new token against a (possibly ring-buffer
+  windowed) KV cache.
+* Cache plumbing: ``init_attn_cache`` builds the per-layer cache; prefill
+  fills it; decode updates it in place (functionally).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or cfg.p_dtype
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), d, dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), d, dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), d, dtype),
+        "wo": dense_init(ks[3], (h * hd, d), h * hd, dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params, x, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _logit_scale(cfg: ModelConfig) -> float:
+    if cfg.attn_logit_scale is not None:
+        return cfg.attn_logit_scale
+    return 1.0 / math.sqrt(cfg.hd)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise online-softmax attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(q, k, v, q_positions, kv_positions, *,
+                        window: Optional[int], scale: float,
+                        attn_softcap: Optional[float],
+                        q_block: int = 512, kv_block: int = 512):
+    """Causal (optionally windowed) attention without materializing S x S.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd). Returns (B, Sq, H, hd).
+    GQA: H must be a multiple of KV; query heads are grouped per KV head.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]  # value head dim may differ from qk head dim (MLA)
+    g = h // kvh
+    assert sq % q_block == 0 and skv % kv_block == 0, (sq, skv, q_block, kv_block)
+    nq, nk = sq // q_block, skv // kv_block
+
+    qb = q.reshape(b, nq, q_block, kvh, g, hd)
+    kb = k.reshape(b, nk, kv_block, kvh, hd)
+    vb = v.reshape(b, nk, kv_block, kvh, hd_v)
+    qp = q_positions.reshape(nq, q_block)
+    kp = kv_positions.reshape(nk, kv_block)
+
+    def per_q_block(q_i, qpos_i):
+        # q_i: (B, q_block, KV, G, hd); scan over kv blocks with online softmax.
+        def step(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, kpos_j = inp
+            logits = jnp.einsum("bqkgd,bskd->bqkgs", q_i.astype(jnp.float32),
+                                k_j.astype(jnp.float32)) * scale
+            logits = softcap(logits, attn_softcap)
+            mask = kpos_j[None, None, None, None, :] <= qpos_i[None, :, None, None, None]
+            if window is not None:
+                mask &= kpos_j[None, None, None, None, :] > (
+                    qpos_i[None, :, None, None, None] - window)
+            logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqkgs,bskd->bqkgd", p, v_j.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, q_block, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_block, kvh, g), jnp.float32)
+        a0 = jnp.zeros((b, q_block, kvh, g, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out
+
+    out = jax.vmap(per_q_block, in_axes=(1, 0), out_axes=1)(qb, qp)
+    return out.reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
+def attention_train(cfg: ModelConfig, params, x, positions, *,
+                    window: Optional[int] = None,
+                    q_block: int = 512, kv_block: int = 512,
+                    return_kv: bool = False):
+    """Self-attention over a full sequence (training or prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    qb = min(q_block, s)
+    kb = min(kv_block, s)
+    out = blockwise_attention(
+        q, k, v, positions, positions,
+        window=window, scale=_logit_scale(cfg), attn_softcap=cfg.attn_softcap,
+        q_block=qb, kv_block=kb)
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), params["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    window: Optional[int] = None, dtype=None):
+    """Per-layer cache. With a window it is a ring buffer of size `window`."""
+    dtype = dtype or cfg.act_dtype
+    w = min(window, max_len) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, w, kv, hd), dtype),
+        "v": jnp.zeros((batch, w, kv, hd), dtype),
+        "slot_pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def prefill_into_cache(cache, k, v, start: int = 0):
+    """Write (B, S, KV, hd) keys/values at [start, start+S) (no ring wrap)."""
+    s = k.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), start, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), start, 1)
+    cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.arange(start, start + s, dtype=jnp.int32), start, 0)
+    return cache
+
+
+def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
+                     window: Optional[int] = None):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 absolute position.
+
+    Returns (out (B, 1, D), updated cache).
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kvh
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+
+    w = cache["k"].shape[1]
+    slot = (pos % w).astype(jnp.int32) if window else jnp.minimum(pos, w - 1).astype(jnp.int32)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cache["slot_pos"] = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos.reshape(1).astype(jnp.int32), (slot,))
+
+    kc, vc, spos = cache["k"], cache["v"], cache["slot_pos"]
+    logits = jnp.einsum("bkgd,bskd->bkgs",
+                        q.reshape(b, kvh, g, hd).astype(jnp.float32),
+                        kc.astype(jnp.float32)) * _logit_scale(cfg)
+    logits = softcap(logits, cfg.attn_softcap)
+    valid = (spos >= 0) & (spos <= pos)
+    if window is not None:
+        valid &= spos > pos - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    return out, cache

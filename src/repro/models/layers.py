@@ -1,0 +1,110 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, initializers.
+
+All functions are shape-polymorphic and dtype-disciplined: math in fp32,
+outputs cast back to the activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common decoder practice)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6, scale_plus_one: bool = False):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if scale_plus_one:
+        s = 1.0 + s
+    return (y * s).astype(dtype)
+
+
+def group_norm(x, scale, bias, groups: int, eps: float = 1e-5):
+    """GroupNorm over channel-last images (B, H, W, C) — the paper's CNN uses
+    GroupNorm in place of BatchNorm (Wu & He 2018, per FedBuff's setup)."""
+    b, h, w, c = x.shape
+    xf = x.astype(jnp.float32).reshape(b, h, w, groups, c // groups)
+    mean = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = xf.var(axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(b, h, w, c)
+    return (xf * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def gated_mlp(params, x, act: str = "silu"):
+    """SwiGLU-style gated MLP: down( act(gate(x)) * up(x) )."""
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = _act(act)(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    xf = x.astype(jnp.float32)
+    return (jnp.tanh(xf / cap) * cap).astype(x.dtype)

@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training uses the chunked SSD algorithm: within a chunk the recurrence is
+evaluated in its dual quadratic ("attention-like") form; across chunks a
+small ``lax.scan`` carries the (H, P, N) state with per-chunk decay. This is
+the TPU-native adaptation — the quadratic intra-chunk form runs on the MXU
+with (L x L) tiles, while the cross-chunk scan is tiny and sequential.
+
+Decoding carries a constant-size recurrent state (plus a width-4 causal-conv
+tail), which is what makes ``long_500k`` native for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or cfg.p_dtype
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + h), d, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        # dt ~= softplus(dt_bias) in [0.001, 0.1] at init (mamba2 convention)
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[3], (h,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along time. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    s = xbc.shape[1]
+    for i in range(width):
+        out = out + pad[:, i: i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _split_xbc(cfg: ModelConfig, xbc):
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xbc[..., :di]
+    bmat = xbc[..., di: di + g * n]
+    cmat = xbc[..., di + g * n:]
+    return x, bmat, cmat
+
+
+def ssd_chunked(cfg: ModelConfig, x, dt, A, bmat, cmat, init_state=None):
+    """Chunked SSD scan.
+
+    x:    (B, S, H, P)   dt: (B, S, H)   A: (H,) negative
+    bmat/cmat: (B, S, G, N), broadcast over H // G heads per group
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    L = min(cfg.ssm_chunk, s)
+    s_orig = s
+    if s % L:  # pad tail with dt=0 steps: they contribute nothing and keep state
+        pad = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // L
+    hg = h // g
+
+    xf = x.astype(jnp.float32).reshape(b, nc, L, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, L, h)
+    Bf = bmat.astype(jnp.float32).reshape(b, nc, L, g, n)
+    Cf = cmat.astype(jnp.float32).reshape(b, nc, L, g, n)
+    Bh = jnp.repeat(Bf, hg, axis=3)  # (b,nc,L,h,n)
+    Ch = jnp.repeat(Cf, hg, axis=3)
+
+    dA = dtf * A  # (b,nc,L,h), negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative sum
+
+    # Intra-chunk dual form: att[i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j <= i.
+    # Mask the exponent BEFORE exp: the j > i entries have a large positive
+    # exponent that overflows to inf and poisons gradients through `where`.
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,L_i,L_j,h)
+    decay = jnp.exp(jnp.where(tri, diff, -1e30))
+    cb = jnp.einsum("bclhn,bcmhn->bclmh", Ch, Bh)  # (b,nc,L_i,L_j,h)
+    att = cb * decay * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", att, xf)
+
+    # Per-chunk end states: S_c = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,L,h)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_to_end * dtf, Bh, xf)
+
+    # Cross-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h)
+
+    def scan_fn(prev, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    init = init_state.astype(jnp.float32) if init_state is not None else jnp.zeros(
+        (b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n) state entering chunk
+
+    # Inter-chunk contribution: y_i += C_i . (exp(cum_i) * S_prev)
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Ch * jnp.exp(cum)[..., None], prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def mamba_train(cfg: ModelConfig, params, xin, *, return_cache: bool = False):
+    """Full-sequence Mamba2 block. xin: (B, S, d) -> (B, S, d)[, cache]."""
+    b, s, d = xin.shape
+    h, p = cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, params["in_proj"])
+    z, xbc_raw, dt = _split_zxbcdt(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    x, bmat, cmat = _split_xbc(cfg, xbc)
+    x = x.reshape(b, s, h, p)
+    bmat = bmat.reshape(b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    cmat = cmat.reshape(b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_chunked(cfg, x, dt, A, bmat, cmat)
+    y = (y.astype(jnp.float32)
+         + x.astype(jnp.float32) * params["D"][None, None, :, None])
+    y = y.reshape(b, s, cfg.d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_cache:
+        tail = cfg.ssm_conv - 1
+        conv_cache = xbc_raw[:, -tail:, :] if s >= tail else jnp.pad(
+            xbc_raw, ((0, 0), (tail - s, 0), (0, 0)))
+        return out, {"ssm": final_state, "conv": conv_cache}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: constant-size recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.act_dtype
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, params, xin, cache):
+    """One-token step. xin: (B, 1, d); returns (out (B, 1, d), cache)."""
+    b = xin.shape[0]
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, params["in_proj"])
+    z, xbc_t, dt = _split_zxbcdt(cfg, zxbcdt)  # xbc_t: (B,1,C)
+
+    conv_hist = jnp.concatenate([cache["conv"], xbc_t.astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", conv_hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(xin.dtype)
+    new_conv = conv_hist[:, 1:, :]
+
+    x, bmat, cmat = _split_xbc(cfg, xbc)
+    x = x.reshape(b, h, p)
+    bmat = bmat.reshape(b, cfg.ssm_ngroups, n)
+    cmat = cmat.reshape(b, cfg.ssm_ngroups, n)
+    hg = h // cfg.ssm_ngroups
+    bh = jnp.repeat(bmat, hg, axis=1)  # (b,h,n)
+    ch = jnp.repeat(cmat, hg, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32).reshape(b, h) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)  # (b,h)
+
+    st = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, bh, x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", ch, st) + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"ssm": st, "conv": new_conv}

@@ -1,0 +1,160 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are produced through low-rank latents; the KV cache
+stores only the compressed latent c_kv (kv_lora_rank) plus the shared rope
+key (qk_rope_head_dim) — the production memory trick that makes 500k-token
+caches feasible.
+
+* train/prefill: latents are expanded to per-head K/V and fed to the shared
+  blockwise online-softmax attention.
+* decode: the **absorbed** formulation — W_uk is folded into the query and
+  W_uv into the output so attention runs directly in the latent space and the
+  cache is never expanded. This is the TPU-friendly form (two skinny MXU
+  matmuls per step instead of a cache-sized expansion).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.models.attention import blockwise_attention, NEG_INF
+
+
+def init_mla(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or cfg.p_dtype
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr), d, dtype),
+        "q_a_norm": jnp.ones((qr,), dtype),
+        "wq_b": dense_init(ks[1], (qr, h * (dn + dr)), qr, dtype),
+        "wkv_a": dense_init(ks[2], (d, kr), d, dtype),
+        "kv_a_norm": jnp.ones((kr,), dtype),
+        "wk_rope": dense_init(ks[3], (d, dr), d, dtype),
+        "wk_b": dense_init(ks[4], (kr, h * dn), kr, dtype),
+        "wv_b": dense_init(ks[5], (kr, h * dv), kr, dtype),
+        "wo": dense_init(ks[6], (h * dv, d), h * dv, dtype),
+    }
+
+
+def _mla_scale(cfg: ModelConfig) -> float:
+    return 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+
+
+def _queries(cfg: ModelConfig, params, x, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), params["q_a_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,re->bse", qa, params["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(cfg: ModelConfig, params, x, positions):
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wkv_a"]), params["kv_a_norm"], cfg.rms_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["wk_rope"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_train(cfg: ModelConfig, params, x, positions, *,
+              window: Optional[int] = None, q_block: int = 512, kv_block: int = 512,
+              return_latents: bool = False):
+    """Full-sequence MLA (training / prefill): expand latents, blockwise attn."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(cfg, params, x, positions)
+    ckv, k_rope = _latents(cfg, params, x, positions)
+    k_nope = jnp.einsum("bsr,re->bse", ckv, params["wk_b"]).reshape(b, s, h, dn)
+    v = jnp.einsum("bsr,re->bse", ckv, params["wv_b"]).reshape(b, s, h, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+    # v head dim may differ from qk head dim; blockwise attn is agnostic.
+    qb, kb = min(q_block, s), min(kv_block, s)
+    out = blockwise_attention(q, k, v, positions, positions, window=window,
+                              scale=_mla_scale(cfg), attn_softcap=None,
+                              q_block=qb, kv_block=kb)
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dv), params["wo"])
+    if return_latents:
+        return out, (ckv, k_rope)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compressed cache + absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   window: Optional[int] = None, dtype=None):
+    dtype = dtype or cfg.act_dtype
+    w = min(window, max_len) if window else max_len
+    return {
+        "ckv": jnp.zeros((batch, w, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, w, cfg.qk_rope_head_dim), dtype),
+        "slot_pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def mla_prefill_cache(cfg: ModelConfig, params, x, positions, cache, start: int = 0):
+    ckv, k_rope = _latents(cfg, params, x, positions)
+    s = x.shape[1]
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), start, 1)
+    cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), start, 1)
+    cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.arange(start, start + s, dtype=jnp.int32), start, 0)
+    return cache
+
+
+def mla_decode(cfg: ModelConfig, params, x, cache, pos, *,
+               window: Optional[int] = None):
+    """Absorbed one-token MLA decode. x: (B, 1, D); returns (out, cache)."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _queries(cfg, params, x, positions)  # (B,1,H,dn), (B,1,H,dr)
+    ckv_t, k_rope_t = _latents(cfg, params, x, positions)  # (B,1,kr), (B,1,dr)
+
+    w = cache["ckv"].shape[1]
+    slot = (pos % w).astype(jnp.int32) if window else jnp.minimum(pos, w - 1).astype(jnp.int32)
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, slot, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), (0, slot, 0))
+    cache["slot_pos"] = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos.reshape(1).astype(jnp.int32), (slot,))
+
+    # Absorb W_uk into the query: q_lat[b,h,c] = sum_d q_nope[b,h,d] Wk_b[c,(h,d)]
+    wk_b = params["wk_b"].reshape(kr, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))  # (B,H,kr)
+    ckv = cache["ckv"].astype(jnp.float32)  # (B,W,kr)
+    krope = cache["k_rope"].astype(jnp.float32)  # (B,W,dr)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv)
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), krope)
+    scores *= _mla_scale(cfg)
+    spos = cache["slot_pos"]
+    valid = (spos >= 0) & (spos <= pos)
+    if window is not None:
+        valid &= spos > pos - window
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", p, ckv)  # (B,H,kr)
+    # Absorb W_uv on the way out: v[b,h,d] = ctx_lat[b,h,r] Wv_b[r,(h,d)]
+    wv_b = params["wv_b"].reshape(kr, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv_b.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"]), cache

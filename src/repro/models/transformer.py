@@ -1,0 +1,524 @@
+"""Config-driven composable decoder covering the full assigned pool.
+
+Layer stacks are grouped into repeating homogeneous "super-blocks"
+(``cfg.layer_pattern``) and scanned with ``jax.lax.scan`` so 90+ layer
+models lower to compact HLO:
+
+* dense (llama/qwen):        pattern ("attn",)
+* gemma2:                    pattern ("local", "global") — alternating
+  sliding-window / full attention, gemma conventions ((1+s) norms, sqrt(d)
+  embedding scale, post-norms, logit softcaps)
+* qwen3-moe / deepseek-v3:   pattern ("attn",) with routed-expert FFN;
+  deepseek additionally uses MLA, a dense-FFN layer prefix and an MTP head
+* mamba2:                    pattern ("mamba",)
+* zamba2 (hybrid):           pattern ("mamba", "mamba", "attn_shared") — the
+  attention block's weights are *shared* across all its occurrences
+  (Zamba2's shared-block design; we reuse one block verbatim and note the
+  LoRA-per-invocation simplification in DESIGN.md)
+
+Inputs are a dict: {"tokens"} for text; {"tokens" (B,S,CB)} for audio
+(musicgen codebook ids, embeddings summed over codebooks — the EnCodec
+frontend is stubbed by feeding its discrete tokens directly); VLM adds
+{"patch_embeddings" (B, n_prefix, d)} prepended to the text embeddings
+(the ViT+projector frontend stub).
+
+The LM head is evaluated in sequence chunks under ``jax.checkpoint`` so the
+(B, S, V) logits are never materialized — with the vocab dimension sharded
+on the "model" mesh axis this keeps per-device peak memory flat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, embed_init, gated_mlp, init_gated_mlp, rms_norm, softcap
+
+ATTN_KINDS = ("attn", "local", "global", "attn_shared")
+
+
+def _moe_apply(cfg: ModelConfig, moe_params, f_in, capacity_factor):
+    """Select the MoE execution strategy (see ModelConfig.moe_impl)."""
+    if cfg.moe_impl == "ep":
+        return moe_lib.moe_forward_ep(cfg, moe_params, f_in,
+                                      capacity_factor=capacity_factor)
+    return moe_lib.moe_forward(cfg, moe_params, f_in,
+                               capacity_factor=capacity_factor)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg: ModelConfig, *, moe: bool, d_ff: Optional[int] = None):
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+                         "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype)}
+    if cfg.norm_scale_plus_one:  # gemma family: zeros init -> effective scale 1
+        p["ln1"] = jnp.zeros((cfg.d_model,), cfg.p_dtype)
+        p["ln2"] = jnp.zeros((cfg.d_model,), cfg.p_dtype)
+        p["post_ln1"] = jnp.zeros((cfg.d_model,), cfg.p_dtype)
+        p["post_ln2"] = jnp.zeros((cfg.d_model,), cfg.p_dtype)
+    if cfg.use_mla:
+        p["attn"] = mla_lib.init_mla(k1, cfg)
+    else:
+        p["attn"] = attn_lib.init_attention(k1, cfg)
+    if moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_gated_mlp(k2, cfg.d_model, d_ff or cfg.d_ff, cfg.p_dtype)
+    return p
+
+
+def _init_mamba_block(key, cfg: ModelConfig):
+    return {"ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+            "mamba": mamba_lib.init_mamba(key, cfg)}
+
+
+def _init_position(key, cfg: ModelConfig, kind: str):
+    if kind == "mamba":
+        return _init_mamba_block(key, cfg)
+    moe = cfg.n_experts > 0 and kind != "attn_shared"
+    return _init_attn_block(key, cfg, moe=moe)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params["embed"] = embed_init(
+        keys[0],
+        (cfg.audio_codebooks or 1, cfg.vocab, cfg.d_model) if cfg.modality == "audio"
+        else (cfg.vocab, cfg.d_model),
+        cfg.p_dtype)
+
+    # Stacked per-pattern-position layer params (leading dim = n_super_blocks).
+    reps = cfg.n_super_blocks
+    layers: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "attn_shared":
+            continue  # shared weights live outside the stack
+        lkeys = jax.random.split(jax.random.fold_in(keys[1], i), reps)
+        layers[f"pos{i}_{kind}"] = jax.vmap(lambda k: _init_position(k, cfg, kind))(lkeys)
+    params["layers"] = layers
+
+    if "attn_shared" in cfg.layer_pattern:
+        params["shared_block"] = _init_attn_block(keys[2], cfg, moe=False)
+
+    if cfg.n_dense_layers:  # deepseek: dense-FFN prefix layers
+        pkeys = jax.random.split(keys[3], cfg.n_dense_layers)
+        params["prefix_layers"] = jax.vmap(
+            lambda k: _init_attn_block(k, cfg, moe=False, d_ff=cfg.dense_d_ff))(pkeys)
+
+    params["final_norm"] = (jnp.zeros if cfg.norm_scale_plus_one else jnp.ones)(
+        (cfg.d_model,), cfg.p_dtype)
+
+    if cfg.modality == "audio":
+        params["audio_heads"] = dense_init(
+            keys[4], (cfg.audio_codebooks, cfg.d_model, cfg.vocab), cfg.d_model, cfg.p_dtype)
+    elif not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[5], (cfg.d_model, cfg.vocab), cfg.d_model, cfg.p_dtype)
+
+    if cfg.use_mtp:
+        params["mtp_block"] = _init_attn_block(keys[6], cfg, moe=False, d_ff=cfg.dense_d_ff or cfg.d_ff)
+        params["mtp_norm"] = jnp.ones((cfg.d_model,), cfg.p_dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Shape/dtype skeleton of the param tree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg: ModelConfig, x, scale):
+    return rms_norm(x, scale, cfg.rms_eps, cfg.norm_scale_plus_one)
+
+
+def _attn_sublayer(cfg: ModelConfig, p, h, positions, *, window, aux,
+                   q_block: int, kv_block: int):
+    a_in = _norm(cfg, h, p["ln1"])
+    if cfg.use_mla:
+        a = mla_lib.mla_train(cfg, p["attn"], a_in, positions, window=window,
+                              q_block=q_block, kv_block=kv_block)
+    else:
+        a = attn_lib.attention_train(cfg, p["attn"], a_in, positions, window=window,
+                                     q_block=q_block, kv_block=kv_block)
+    if cfg.norm_scale_plus_one:
+        a = _norm(cfg, a, p["post_ln1"])
+    h = h + a
+    f_in = _norm(cfg, h, p["ln2"])
+    if "moe" in p:
+        f, moe_aux = _moe_apply(cfg, p["moe"], f_in, cfg.capacity_factor)
+        aux = aux + moe_aux
+    else:
+        f = gated_mlp(p["mlp"], f_in, cfg.mlp_act)
+    if cfg.norm_scale_plus_one:
+        f = _norm(cfg, f, p["post_ln2"])
+    return h + f, aux
+
+
+def _mamba_sublayer(cfg: ModelConfig, p, h, aux):
+    return h + mamba_lib.mamba_train(cfg, p["mamba"], _norm(cfg, h, p["ln1"])), aux
+
+
+def _window_for(cfg: ModelConfig, kind: str, window_override: Optional[int]):
+    if kind == "local":
+        return cfg.sliding_window
+    return window_override  # None for full attention; set for long-context serving
+
+
+def _embed_inputs(cfg: ModelConfig, params, inputs) -> jnp.ndarray:
+    if cfg.modality == "audio":
+        tok = inputs["tokens"]  # (B, S, CB)
+        # (CB, V, d) embed; gather per codebook then sum (MusicGen's scheme).
+        embs = [jnp.take(params["embed"][c], tok[:, :, c], axis=0)
+                for c in range(cfg.audio_codebooks)]
+        h = sum(embs)
+    else:
+        h = jnp.take(params["embed"], inputs["tokens"], axis=0)
+        if cfg.modality == "vlm" and "patch_embeddings" in inputs:
+            h = jnp.concatenate(
+                [inputs["patch_embeddings"].astype(h.dtype), h], axis=1)
+    if cfg.norm_scale_plus_one:  # gemma: scale embeddings by sqrt(d)
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h.astype(cfg.act_dtype)
+
+
+def forward(cfg: ModelConfig, params, inputs, *, window_override: Optional[int] = None,
+            remat: bool = True, q_block: int = 512, kv_block: int = 512,
+            return_hidden: bool = False):
+    """Full-sequence forward. Returns (hidden or logits-fn payload, aux)."""
+    h = _embed_inputs(cfg, params, inputs)
+    b, s, _ = h.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def super_block(carry, layer_slice):
+        h, aux = carry
+        for i, kind in enumerate(cfg.layer_pattern):
+            if kind == "mamba":
+                h, aux = _mamba_sublayer(cfg, layer_slice[f"pos{i}_{kind}"], h, aux)
+            elif kind == "attn_shared":
+                h, aux = _attn_sublayer(
+                    cfg, params["shared_block"], h, positions,
+                    window=_window_for(cfg, kind, window_override), aux=aux,
+                    q_block=q_block, kv_block=kv_block)
+            else:
+                h, aux = _attn_sublayer(
+                    cfg, layer_slice[f"pos{i}_{kind}"], h, positions,
+                    window=_window_for(cfg, kind, window_override), aux=aux,
+                    q_block=q_block, kv_block=kv_block)
+        return (h, aux), None
+
+    block_fn = jax.checkpoint(super_block) if remat else super_block
+
+    if cfg.n_dense_layers:
+        def prefix_block(carry, layer_slice):
+            h, aux = carry
+            h, aux = _attn_sublayer(cfg, layer_slice, h, positions,
+                                    window=window_override, aux=aux,
+                                    q_block=q_block, kv_block=kv_block)
+            return (h, aux), None
+        pfn = jax.checkpoint(prefix_block) if remat else prefix_block
+        (h, aux0), _ = jax.lax.scan(pfn, (h, aux0), params["prefix_layers"])
+
+    (h, aux), _ = jax.lax.scan(block_fn, (h, aux0), params["layers"])
+    h = _norm(cfg, h, params["final_norm"])
+    if return_hidden:
+        return h, aux
+    return h, aux  # logits are computed chunked inside loss_fn / logits_fn
+
+
+def logits_fn(cfg: ModelConfig, params, h):
+    """Full logits for a (B, S<=small, d) hidden — decode/eval path only."""
+    if cfg.modality == "audio":
+        lg = jnp.einsum("bsd,cdv->bscv", h, params["audio_heads"])
+    elif cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    return softcap(lg, cfg.final_softcap)
+
+
+def _chunked_xent(cfg: ModelConfig, params, h, labels, mask, chunk: int):
+    """Next-token cross-entropy without materializing (B, S, V)."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    while s % chunk:  # largest divisor of s not exceeding the requested chunk
+        chunk -= 1
+    nchunks = s // chunk
+
+    def one_chunk(h_c, lab_c, m_c):
+        lg = logits_fn(cfg, params, h_c).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        if cfg.modality == "audio":
+            gold = jnp.take_along_axis(lg, lab_c[..., None], axis=-1)[..., 0]
+            nll = (lse - gold).mean(-1)  # mean over codebooks
+        else:
+            gold = jnp.take_along_axis(lg, lab_c[..., None], axis=-1)[..., 0]
+            nll = lse - gold
+        return jnp.sum(nll * m_c), jnp.sum(m_c)
+
+    one_chunk = jax.checkpoint(one_chunk)
+
+    def scan_body(acc, idx):
+        h_c = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, 1)
+        lab_c = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, 1)
+        m_c = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, 1)
+        tot, cnt = one_chunk(h_c, lab_c, m_c)
+        return (acc[0] + tot, acc[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(scan_body, (jnp.zeros((), jnp.float32),) * 2,
+                                 jnp.arange(nchunks))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, window_override: Optional[int] = None,
+            remat: bool = True, loss_chunk: int = 1024):
+    """Causal-LM loss. batch: inputs dict + "labels" (+ optional "loss_mask")."""
+    h, aux = forward(cfg, params, batch, window_override=window_override, remat=remat)
+    labels = batch["labels"]
+    if cfg.modality == "vlm":
+        # prefix positions carry no labels; score only the text span
+        n_text = labels.shape[1]
+        h_text = h[:, -n_text:, :]
+    else:
+        h_text = h
+    if cfg.modality == "audio":
+        mask = batch.get("loss_mask", jnp.ones(labels.shape[:2], jnp.float32))
+    else:
+        mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+    loss = _chunked_xent(cfg, params, h_text, labels, mask, loss_chunk)
+
+    if cfg.use_mtp:
+        # Multi-token prediction: one extra block over h predicts labels shifted
+        # by one more position (DeepSeek-V3 MTP, single depth-1 module).
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+        h2, _ = _attn_sublayer(cfg, params["mtp_block"], h, positions,
+                               window=window_override, aux=jnp.zeros((), jnp.float32),
+                               q_block=512, kv_block=512)
+        h2 = _norm(cfg, h2, params["mtp_norm"])
+        mtp_labels = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        mtp_loss = _chunked_xent(cfg, params, h2[:, -mtp_labels.shape[1]:, :],
+                                 mtp_labels, mask, loss_chunk)
+        loss = loss + 0.1 * mtp_loss
+
+    return loss + cfg.router_aux_coef * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def _ring_write(arrays: Dict[str, jnp.ndarray], s: int, max_len: int,
+                window: Optional[int], dtype):
+    """Write full-sequence tensors (B, S, ...) into a (ring) cache of width w."""
+    w = min(window, max_len) if window else max_len
+    wk = min(s, w)
+    idxs = jnp.arange(s - wk, s, dtype=jnp.int32)
+    slots = idxs % w
+    out = {}
+    for name, x in arrays.items():
+        buf = jnp.zeros((x.shape[0], w) + x.shape[2:], dtype)
+        out[name] = buf.at[:, slots].set(x[:, -wk:].astype(dtype))
+    out["slot_pos"] = jnp.full((w,), -1, jnp.int32).at[slots].set(idxs)
+    return out
+
+
+def _attn_sublayer_prefill(cfg: ModelConfig, p, h, positions, *, window,
+                           max_len: int, aux, q_block: int, kv_block: int):
+    """Like _attn_sublayer but also returns the layer's filled KV cache."""
+    s = h.shape[1]
+    a_in = _norm(cfg, h, p["ln1"])
+    if cfg.use_mla:
+        a, (ckv, k_rope) = mla_lib.mla_train(
+            cfg, p["attn"], a_in, positions, window=window,
+            q_block=q_block, kv_block=kv_block, return_latents=True)
+        layer_cache = _ring_write({"ckv": ckv, "k_rope": k_rope}, s, max_len,
+                                  window, cfg.act_dtype)
+    else:
+        a, (k, v) = attn_lib.attention_train(
+            cfg, p["attn"], a_in, positions, window=window,
+            q_block=q_block, kv_block=kv_block, return_kv=True)
+        layer_cache = _ring_write({"k": k, "v": v}, s, max_len, window, cfg.act_dtype)
+    if cfg.norm_scale_plus_one:
+        a = _norm(cfg, a, p["post_ln1"])
+    h = h + a
+    f_in = _norm(cfg, h, p["ln2"])
+    if "moe" in p:
+        f, moe_aux = _moe_apply(cfg, p["moe"], f_in, cfg.capacity_factor)
+        aux = aux + moe_aux
+    else:
+        f = gated_mlp(p["mlp"], f_in, cfg.mlp_act)
+    if cfg.norm_scale_plus_one:
+        f = _norm(cfg, f, p["post_ln2"])
+    return h + f, aux, layer_cache
+
+
+def prefill(cfg: ModelConfig, params, inputs, *, max_len: Optional[int] = None,
+            window_override: Optional[int] = None, q_block: int = 512,
+            kv_block: int = 512):
+    """Process a full prompt, returning (last-token logits, filled cache).
+
+    This is the program lowered for the ``prefill_32k`` input shape.
+    """
+    h = _embed_inputs(cfg, params, inputs)
+    b, s, _ = h.shape
+    max_len = max_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def sub_prefill(kind, p, h, aux):
+        if kind == "mamba":
+            out, c = mamba_lib.mamba_train(cfg, p["mamba"], _norm(cfg, h, p["ln1"]),
+                                           return_cache=True)
+            return h + out, aux, c
+        return _attn_sublayer_prefill(
+            cfg, p, h, positions, window=_window_for(cfg, kind, window_override),
+            max_len=max_len, aux=aux, q_block=q_block, kv_block=kv_block)
+
+    cache: Dict[str, Any] = {}
+    if cfg.n_dense_layers:
+        def prefix_body(carry, layer_slice):
+            h, aux = carry
+            h, aux, c = sub_prefill("attn", layer_slice, h, aux)
+            return (h, aux), c
+        (h, aux0), cache["prefix"] = jax.lax.scan(
+            prefix_body, (h, aux0), params["prefix_layers"])
+
+    def body(carry, layer_slice):
+        h, aux = carry
+        slices = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            keyname = f"pos{i}_{kind}"
+            p = params["shared_block"] if kind == "attn_shared" else layer_slice[keyname]
+            h, aux, slices[keyname] = sub_prefill(kind, p, h, aux)
+        return (h, aux), slices
+
+    layer_params = dict(params["layers"])
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "attn_shared":
+            layer_params[f"pos{i}_{kind}"] = jnp.zeros((cfg.n_super_blocks,), jnp.int32)
+
+    (h, _), cache["layers"] = jax.lax.scan(body, (h, aux0), layer_params)
+
+    h = _norm(cfg, h, params["final_norm"])
+    logits = logits_fn(cfg, params, h[:, -1:, :])
+    if "prefix" not in cache:
+        cache = {"layers": cache["layers"]}
+    return logits, cache
+
+
+def _position_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    window_override: Optional[int]):
+    if kind == "mamba":
+        return mamba_lib.init_mamba_cache(cfg, batch)
+    window = _window_for(cfg, kind, window_override)
+    if cfg.use_mla:
+        return mla_lib.init_mla_cache(cfg, batch, max_len, window)
+    return attn_lib.init_attn_cache(cfg, batch, max_len, window)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window_override: Optional[int] = None):
+    """Stacked (n_super_blocks leading dim) caches, one entry per pattern pos."""
+    reps = cfg.n_super_blocks
+    cache: Dict[str, Any] = {"layers": {}}
+    for i, kind in enumerate(cfg.layer_pattern):
+        one = _position_cache(cfg, kind, batch, max_len, window_override)
+        cache["layers"][f"pos{i}_{kind}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape).copy(), one)
+    if cfg.n_dense_layers:
+        one = _position_cache(cfg, "attn", batch, max_len, window_override)
+        cache["prefix"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_dense_layers,) + x.shape).copy(), one)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   window_override: Optional[int] = None):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, window_override))
+
+
+def _decode_sublayer(cfg: ModelConfig, kind: str, p, h, cache_slice, pos,
+                     window_override: Optional[int]):
+    window = _window_for(cfg, kind, window_override)
+    if kind == "mamba":
+        out, new_cache = mamba_lib.mamba_decode(cfg, p["mamba"], _norm(cfg, h, p["ln1"]), cache_slice)
+        return h + out, new_cache
+    a_in = _norm(cfg, h, p["ln1"])
+    if cfg.use_mla:
+        a, new_cache = mla_lib.mla_decode(cfg, p["attn"], a_in, cache_slice, pos, window=window)
+    else:
+        a, new_cache = attn_lib.attention_decode(cfg, p["attn"], a_in, cache_slice, pos, window=window)
+    if cfg.norm_scale_plus_one:
+        a = _norm(cfg, a, p["post_ln1"])
+    h = h + a
+    f_in = _norm(cfg, h, p["ln2"])
+    if "moe" in p:
+        # decode capacity: no-drop (n_experts/top_k) unless the config sets a
+        # realistic serving factor
+        dcf = cfg.decode_capacity_factor or (cfg.n_experts / cfg.experts_per_token)
+        f, _ = _moe_apply(cfg, p["moe"], f_in, dcf)
+    else:
+        f = gated_mlp(p["mlp"], f_in, cfg.mlp_act)
+    if cfg.norm_scale_plus_one:
+        f = _norm(cfg, f, p["post_ln2"])
+    return h + f, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, inputs, pos, *,
+                window_override: Optional[int] = None):
+    """One-token decode across the whole stack.
+
+    inputs: {"tokens": (B, 1) or (B, 1, CB)}; pos: scalar int32.
+    Returns (logits (B, 1, V[, CB]), new cache).
+    """
+    h = _embed_inputs(cfg, params, inputs)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    if cfg.n_dense_layers:
+        def prefix_body(h, layer_and_cache):
+            layer, csl = layer_and_cache
+            h, new_c = _decode_sublayer(cfg, "attn", layer, h, csl, pos, window_override)
+            return h, new_c
+        h, new_prefix = jax.lax.scan(prefix_body, h, (params["prefix_layers"], cache["prefix"]))
+    else:
+        new_prefix = None
+
+    def body(h, slices):
+        new_slices = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            keyname = f"pos{i}_{kind}"
+            p = params["shared_block"] if kind == "attn_shared" else slices[0][keyname]
+            h, new_slices[keyname] = _decode_sublayer(
+                cfg, kind, p, h, slices[1][keyname], pos, window_override)
+        return h, new_slices
+
+    layer_params = {k: v for k, v in params["layers"].items()}
+    # attn_shared positions have no stacked params; give scan a placeholder
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "attn_shared":
+            layer_params[f"pos{i}_{kind}"] = jnp.zeros((cfg.n_super_blocks,), jnp.int32)
+
+    h, new_layer_cache = jax.lax.scan(body, h, (layer_params, cache["layers"]))
+
+    h = _norm(cfg, h, params["final_norm"])
+    logits = logits_fn(cfg, params, h)
+    new_cache = {"layers": new_layer_cache}
+    if new_prefix is not None:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache

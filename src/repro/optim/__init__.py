@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (
+    OptState,
+    sgd,
+    momentum,
+    adamw,
+    make_optimizer,
+)

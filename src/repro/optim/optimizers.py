@@ -1,0 +1,84 @@
+"""Functional optimizers (no optax in this environment).
+
+Each optimizer is a pair of pure functions bundled in ``Optimizer``:
+``init(params) -> state`` and ``update(grads, state, params) ->
+(new_params, new_state)``. States are pytrees, jit/pjit-safe, and shard
+like the parameters they mirror.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any = None  # first moment / momentum
+    nu: Any = None  # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple]
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+        return new, OptState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: beta * m + g, state.mu, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: beta * m + g, mu, grads)
+        else:
+            upd = mu
+        new = jax.tree.map(lambda p, u: (p - lr * u).astype(p.dtype), params, upd)
+        return new, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params),
+                        nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            out = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+            return out.astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)

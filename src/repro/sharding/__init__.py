@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    param_pspecs,
+    batch_pspecs,
+    cache_pspecs,
+    state_pspecs,
+)

@@ -1,0 +1,229 @@
+"""Sharding rules: param/batch/cache PartitionSpecs with divisibility fallback.
+
+Scheme (Megatron-style TP on "model" + optional FSDP on "data" + expert
+parallelism on "data"):
+
+* column-parallel projections (wq/wk/wv, gate/up, latent down-projections):
+  output dim on "model";
+* row-parallel projections (wo, w_down, out_proj): input dim on "model";
+* routed experts (E, d, f): experts on "data" (expert parallel), f/d on
+  "model" — the two giant MoE archs get fully 2D-sharded expert banks;
+* embeddings/vocab heads: vocab on "model" (keeps chunked-loss logits
+  sharded);
+* 1D params (norms, biases, scalars): replicated;
+* with ``fsdp=True`` (archs over ~8B params) the non-"model" dim of every
+  large 2D weight is additionally sharded on "data" (ZeRO-3 semantics: XLA
+  inserts the per-layer all-gathers);
+* any rule whose dim is not divisible by the mesh axis extent falls back to
+  dropping that axis (e.g. qwen3-14b's 40 heads vs model=16 — the flattened
+  h*hd dim shards instead; gemma2's tiny head count falls back cleanly).
+
+Batch specs put the batch dim on ("pod", "data") ("pod" only when present);
+decode caches shard sequence on "data" when batch is too small (long_500k's
+batch=1) and batch on "data" otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# Leaf-name classification (matched against the last path component).
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_rope", "wk_b", "wv_b",
+    "w_gate", "w_up", "in_proj", "conv_w", "router",
+}
+_ROW_PARALLEL = {"wo", "w_down", "out_proj"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    fsdp: bool = False
+    fsdp_min_size: int = 1 << 20  # only FSDP-shard weights above 1M elements
+    # §Perf hillclimb flag: when a KV cache's head count doesn't divide the
+    # "model" axis (granite's MQA), shard the cache's sequence dim on "model"
+    # instead of replicating. Off in the baseline table.
+    cache_seq_shard: bool = False
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Axes carrying batch/expert parallelism (includes "pod" if present)."""
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    def extent(self, axis) -> int:
+        if isinstance(axis, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in axis]))
+        return int(self.mesh.shape[axis])
+
+    def fits(self, dim: int, axis) -> bool:
+        return dim % self.extent(axis) == 0
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(e, "key", getattr(e, "name", e))) for e in path)
+
+
+def _param_spec(rules: ShardingRules, cfg: ModelConfig, path, leaf) -> P:
+    name = _leaf_name(path)
+    pstr = _path_str(path)
+    shape = leaf.shape
+    stacked = ("layers/" in pstr or pstr.startswith("layers")
+               or "prefix_layers" in pstr) and len(shape) >= 1
+    # Effective shape without the stacked layer dim.
+    core = shape[1:] if stacked else shape
+    spec: list = [None] * len(core)
+
+    def axis_ok(i, ax):
+        return spec[i] is None and rules.fits(core[i], ax)
+
+    m = "model"
+    if name == "embed":
+        if len(core) == 3:  # audio: (CB, V, d)
+            if axis_ok(1, m):
+                spec[1] = m
+        elif len(core) == 2 and axis_ok(0, m):
+            spec[0] = m
+    elif name in ("head",):
+        if axis_ok(1, m):
+            spec[1] = m
+    elif name == "audio_heads":
+        if axis_ok(2, m):
+            spec[2] = m
+    elif name in _COL_PARALLEL:
+        if len(core) == 3:  # routed experts (E, d, f) / (E, f, d): expert parallel
+            if axis_ok(0, rules.data_axes):
+                spec[0] = rules.data_axes
+            if axis_ok(2, m):
+                spec[2] = m
+        elif len(core) == 2:
+            if axis_ok(1, m):
+                spec[1] = m
+            elif axis_ok(0, m):
+                spec[0] = m
+    elif name in _ROW_PARALLEL:
+        if len(core) == 3:  # expert w_down (E, f, d)
+            if axis_ok(0, rules.data_axes):
+                spec[0] = rules.data_axes
+            if axis_ok(1, m):
+                spec[1] = m
+        elif len(core) == 2 and axis_ok(0, m):
+            spec[0] = m
+    # else: 1D/scalar params stay replicated
+
+    # FSDP: shard the remaining large dim on "data" (never on "pod": the pod
+    # axis is the federation boundary and weights are replicated across it).
+    if rules.fsdp and len(core) >= 2 and leaf.size >= rules.fsdp_min_size:
+        used = set()
+        for entry in spec:
+            if entry is None:
+                continue
+            used.update(entry if isinstance(entry, tuple) else (entry,))
+        if "data" in rules.axes and "data" not in used:
+            for i in range(len(core)):
+                if spec[i] is None and rules.fits(core[i], "data"):
+                    spec[i] = "data"
+                    break
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_pspecs(rules: ShardingRules, cfg: ModelConfig, params_tree) -> Any:
+    """PartitionSpec pytree for a param tree (abstract or concrete)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(rules, cfg, path, leaf), params_tree)
+
+
+def state_pspecs(rules: ShardingRules, cfg: ModelConfig, state_tree) -> Any:
+    """Server/train state: x, hidden, momentum share the param specs; scalars
+    (step counters) replicated."""
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return _param_spec(rules, cfg, path, leaf)
+    return jax.tree_util.tree_map_with_path(spec, state_tree)
+
+
+def batch_pspecs(rules: ShardingRules, batch_tree, *, batch_dim: int = 0) -> Any:
+    """Shard the batch dim over ("pod","data") when divisible, else replicate."""
+    axes = rules.data_axes
+
+    def spec(leaf):
+        if leaf.ndim <= batch_dim:
+            return P()
+        dim = leaf.shape[batch_dim]
+        use: Optional[Tuple[str, ...]] = None
+        if rules.fits(dim, axes):
+            use = axes
+        elif "data" in axes and rules.fits(dim, ("data",)):
+            use = ("data",)
+        out = [None] * leaf.ndim
+        if use:
+            out[batch_dim] = use
+        return P(*out)
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(rules: ShardingRules, cfg: ModelConfig, cache_tree) -> Any:
+    """KV/SSM cache specs.
+
+    Layout after stacking: attention {k,v}: (L, B, W, kv, hd); MLA {ckv,
+    k_rope}: (L, B, W, r); mamba {ssm}: (L, B, H, P, N), {conv}: (L, B, w, C);
+    slot_pos: (L, W). Prefer batch on "data"; if batch doesn't divide
+    (long_500k's B=1), shard the sequence/window dim W on "data" instead.
+    Head-ish dims go on "model" when divisible.
+    """
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name == "slot_pos":
+            return P(*([None] * leaf.ndim))
+        shape = leaf.shape  # includes stacked layer dim at 0
+        out: list = [None] * len(shape)
+        b_dim, w_dim = 1, 2
+        if rules.fits(shape[b_dim], ("data",)):
+            out[b_dim] = "data"
+        elif name in ("k", "v", "ckv", "k_rope", "conv") and rules.fits(shape[w_dim], ("data",)):
+            out[w_dim] = "data"
+        # last-ish dims on model; with cache_seq_shard (hillclimb), caches
+        # whose kv-head count doesn't divide shard the sequence/window dim on
+        # "model" instead (granite's kv=1 cache: 12 GB/dev -> 0.76 GB/dev).
+        if name in ("k", "v", "ckv", "k_rope"):
+            if rules.fits(shape[3], ("model",)):
+                out[3] = "model"
+            elif (rules.cache_seq_shard and out[w_dim] is None
+                  and rules.fits(shape[w_dim], ("model",))):
+                out[w_dim] = "model"
+        elif name == "ssm" and rules.fits(shape[2], ("model",)):
+            out[2] = "model"
+        elif name == "conv" and rules.fits(shape[3], ("model",)):
+            out[3] = "model"
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def to_shardings(rules: ShardingRules, pspec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

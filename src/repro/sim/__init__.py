@@ -1,0 +1,1 @@
+from repro.sim.events import AsyncFLSimulator, SimConfig

@@ -1,0 +1,130 @@
+"""Attention and SSD numerics against naive oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as config_registry
+from repro.models.attention import blockwise_attention
+from repro.models.mamba2 import ssd_chunked
+
+
+def naive_attention(q, k, v, window=None, softcap=None, scale=None):
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale or 1.0 / np.sqrt(hd)
+    qf = np.asarray(q, np.float32).reshape(b, s, kvh, g, hd)
+    kf = np.asarray(k, np.float32)
+    vf = np.asarray(v, np.float32)
+    logits = np.einsum("bqkgd,bskd->bqkgs", qf, kf) * scale
+    if softcap is not None:
+        logits = np.tanh(logits / softcap) * softcap
+    pos = np.arange(s)
+    mask = pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    logits = np.where(mask[:, None, None, :], logits, -1e30)
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bqkgs,bskd->bqkgd", p, vf)
+    return out.reshape(b, s, h, vf.shape[-1])
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("kvh", [1, 2, 4])
+def test_blockwise_matches_naive(window, kvh):
+    b, s, h, hd = 2, 64, 4, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd))
+    pos = jnp.arange(s)
+    out = blockwise_attention(q, k, v, pos, pos, window=window,
+                              scale=1.0 / np.sqrt(hd), attn_softcap=None,
+                              q_block=16, kv_block=16)
+    ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_softcap():
+    b, s, h, hd = 1, 32, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd)) * 4
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd)) * 4
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    out = blockwise_attention(q, k, v, pos, pos, window=None, scale=0.35,
+                              attn_softcap=5.0, q_block=8, kv_block=8)
+    ref = naive_attention(q, k, v, softcap=5.0, scale=0.35)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_block_size_invariance():
+    b, s, h, hd = 1, 128, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    outs = [np.asarray(blockwise_attention(q, k, v, pos, pos, window=None,
+                                           scale=0.3, attn_softcap=None,
+                                           q_block=qb, kv_block=kb))
+            for qb, kb in [(16, 16), (32, 64), (128, 128)]]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan vs naive recurrence
+# ---------------------------------------------------------------------------
+
+
+def naive_ssd(x, dt, A, bmat, cmat):
+    """Sequential reference: h_t = h_{t-1} exp(dt A) + dt B x; y = C h."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    Bh = np.repeat(np.asarray(bmat, np.float32), hg, axis=2)
+    Ch = np.repeat(np.asarray(cmat, np.float32), hg, axis=2)
+    xf = np.asarray(x, np.float32)
+    dtf = np.asarray(dt, np.float32)
+    Af = np.asarray(A, np.float32)
+    state = np.zeros((b, h, p, n), np.float32)
+    ys = []
+    for t in range(s):
+        decay = np.exp(dtf[:, t] * Af[None, :])  # (b, h)
+        state = state * decay[:, :, None, None] + np.einsum(
+            "bh,bhn,bhp->bhpn", dtf[:, t], Bh[:, t], xf[:, t])
+        ys.append(np.einsum("bhn,bhpn->bhp", Ch[:, t], state))
+    return np.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_naive(chunk):
+    cfg = config_registry.get_reduced("mamba2-1.3b").replace(ssm_chunk=chunk)
+    b, s, h, p, n = 2, 32, 4, 8, 16
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n))
+    cm = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n))
+    y, final = ssd_chunked(cfg, x, dt, A, bm, cm)
+    y_ref, final_ref = naive_ssd(x, dt, A, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(final), final_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_padding_tail():
+    """Non-multiple sequence lengths pad with inert steps."""
+    cfg = config_registry.get_reduced("mamba2-1.3b").replace(ssm_chunk=16)
+    b, s, h, p, n = 1, 21, 2, 4, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    A = -jnp.ones((h,))
+    bm = jax.random.normal(jax.random.PRNGKey(2), (b, s, 1, n))
+    cm = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n))
+    y, final = ssd_chunked(cfg, x, dt, A, bm, cm)
+    y_ref, final_ref = naive_ssd(x, dt, A, bm, cm)
+    assert y.shape == (b, s, h, p)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(final), final_ref, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,108 @@
+"""Pallas kernel sweeps: shapes x dtypes x bits vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.qsgd import BLOCK_ROWS, LANES
+
+SIZES = [1, 127, 128, 1000, 32768, 100_003, 262_144]
+BITS = [2, 4, 8]
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_quantize_pack_matches_oracle(bits, n):
+    key = jax.random.PRNGKey(n * 13 + bits)
+    x = jax.random.normal(key, (n,), jnp.float32) * 3.0
+    packed, norms = ops.qsgd_quantize(x, key, bits)
+    x2d = ops._to_tiles(x)
+    u2d = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    pr, nr = ref.quantize_pack(x2d, u2d, bits)
+    assert packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(pr))
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(nr.reshape(-1)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_dequantize_roundtrip_error_bound(bits, n):
+    key = jax.random.PRNGKey(n * 7 + bits)
+    x = jax.random.normal(key, (n,), jnp.float32)
+    packed, norms = ops.qsgd_quantize(x, key, bits)
+    deq = ops.qsgd_dequantize(packed, norms, bits, n)
+    assert deq.shape == (n,)
+    s = (1 << (bits - 1)) - 1
+    # per-coordinate error <= bucket_norm / s
+    pad = ops.padded_len(n) - n
+    xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, LANES)
+    dq = np.pad(np.asarray(deq), (0, pad)).reshape(-1, LANES)
+    step = np.asarray(norms)[:, None] / s
+    assert (np.abs(dq - xp) <= step + 1e-5).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_quantize_input_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096,), jnp.float32).astype(dtype)
+    packed, norms = ops.qsgd_quantize(x, key, 4)
+    deq = ops.qsgd_dequantize(packed, norms, 4, 4096)
+    rel = float(jnp.sum((deq - x.astype(jnp.float32)) ** 2)
+                / jnp.sum(x.astype(jnp.float32) ** 2))
+    assert rel < 1.0
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("k", [1, 3, 10])
+def test_buffer_aggregate_matches_oracle(bits, k):
+    n = 40_000
+    msgs, norms = [], []
+    for i in range(k):
+        x = jax.random.normal(jax.random.PRNGKey(i), (n,))
+        p, nm = ops.qsgd_quantize(x, jax.random.PRNGKey(100 + i), bits)
+        msgs.append(p)
+        norms.append(nm)
+    stack = jnp.stack(msgs)
+    norms = jnp.stack(norms)
+    w = jnp.linspace(0.2, 1.0, k)
+    out = ops.buffer_aggregate(stack, norms, w, bits, n)
+    out_ref = ref.buffer_aggregate(stack, norms, bits=bits, weights=w).reshape(-1)[:n]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_buffer_aggregate_equals_sum_of_dequants():
+    """Fused kernel == K separate dequantize passes + weighted sum."""
+    n, k, bits = 70_001, 5, 4
+    msgs, norms = [], []
+    xs = []
+    for i in range(k):
+        x = jax.random.normal(jax.random.PRNGKey(i), (n,))
+        xs.append(x)
+        p, nm = ops.qsgd_quantize(x, jax.random.PRNGKey(50 + i), bits)
+        msgs.append(p)
+        norms.append(nm)
+    w = jnp.arange(1.0, k + 1.0) / k
+    fused = ops.buffer_aggregate(jnp.stack(msgs), jnp.stack(norms), w, bits, n)
+    manual = sum(w[i] * ops.qsgd_dequantize(msgs[i], norms[i], bits, n)
+                 for i in range(k))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(manual),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_zero_vector_quantizes_to_zero():
+    packed, norms = ops.qsgd_quantize(jnp.zeros((10_000,)), jax.random.PRNGKey(0), 4)
+    deq = ops.qsgd_dequantize(packed, norms, 4, 10_000)
+    assert float(jnp.abs(deq).max()) == 0.0
+
+
+def test_padding_is_inert():
+    """Elements past n never affect the first n dequantized values."""
+    n = LANES * BLOCK_ROWS + 17
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    p1, n1 = ops.qsgd_quantize(x, jax.random.PRNGKey(4), 4)
+    deq = ops.qsgd_dequantize(p1, n1, 4, n)
+    assert deq.shape == (n,)
+    assert bool(jnp.isfinite(deq).all())

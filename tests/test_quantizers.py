@@ -1,0 +1,166 @@
+"""Quantizer contract tests (Definition 2.1 / Example B.1) + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizers import QuantizerSpec, make_quantizer
+
+
+def _rand(key, d):
+    return jax.random.normal(jax.random.PRNGKey(key), (d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Definition 2.1: E ||Q(x) - x||^2 <= (1 - delta) ||x||^2
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("frac", [0.05, 0.1, 0.5, 1.0])
+def test_topk_contract_deterministic(frac):
+    q = make_quantizer(QuantizerSpec("top_k", fraction=frac))
+    x = _rand(0, 503)
+    e = q.qdq_leaf(x, jax.random.PRNGKey(1))
+    err = float(jnp.sum((e - x) ** 2))
+    bound = (1.0 - q.spec.delta(503)) * float(jnp.sum(x ** 2))
+    assert err <= bound + 1e-5
+
+
+@pytest.mark.parametrize("frac", [0.1, 0.3])
+def test_randk_unscaled_contract_in_expectation(frac):
+    q = make_quantizer(QuantizerSpec("rand_k", fraction=frac, scaled=False))
+    x = _rand(2, 400)
+    errs = [float(jnp.sum((q.qdq_leaf(x, jax.random.PRNGKey(i)) - x) ** 2))
+            for i in range(200)]
+    bound = (1.0 - q.spec.delta(400)) * float(jnp.sum(x ** 2))
+    assert np.mean(errs) <= bound * 1.1  # statistical slack
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qsgd_unbiased(bits):
+    q = make_quantizer(QuantizerSpec("qsgd", bits=bits))
+    x = _rand(3, 600)
+    recon = jnp.stack([q.qdq_leaf(x, jax.random.PRNGKey(i)) for i in range(400)])
+    bias = jnp.abs(recon.mean(0) - x).max()
+    # per-coordinate std of the mean ~ step / sqrt(400)
+    assert float(bias) < 0.15, float(bias)
+
+
+def test_qsgd8_contracts():
+    """8-bit bucketed qsgd must satisfy delta > 0 (hidden-state stability)."""
+    q = make_quantizer("qsgd8")
+    x = _rand(4, 100_000)
+    e = q.qdq_leaf(x, jax.random.PRNGKey(0))
+    rel = float(jnp.sum((e - x) ** 2) / jnp.sum(x ** 2))
+    assert rel < 0.01
+
+
+def test_qsgd_bucket_error_dimension_independent():
+    q = make_quantizer("qsgd4")
+    rels = []
+    for d in (1_000, 30_000, 300_000):
+        x = _rand(d, d)
+        e = q.qdq_leaf(x, jax.random.PRNGKey(d))
+        rels.append(float(jnp.sum((e - x) ** 2) / jnp.sum(x ** 2)))
+    assert max(rels) < 1.0  # contracts at every size (the paper's 4-bit regime)
+    assert max(rels) / min(rels) < 1.5  # and does not grow with d
+
+
+def test_identity_is_exact():
+    q = make_quantizer("identity")
+    tree = {"a": _rand(5, 10), "b": {"c": _rand(6, 7)}}
+    out = q.qdq(tree, jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert jnp.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Wire format: encode/decode roundtrip == qdq semantics; byte accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["qsgd2", "qsgd4", "qsgd8", "top_k0.1",
+                                  "rand_k0.1", "identity"])
+def test_encode_decode_structure(name):
+    q = make_quantizer(name)
+    tree = {"w": _rand(7, 333).reshape(9, 37), "b": _rand(8, 9)}
+    enc = q.encode(tree, jax.random.PRNGKey(0))
+    dec = q.decode(enc)
+    assert jax.tree.structure(dec) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_qsgd_wire_bits_match_paper_model():
+    """n-bit qsgd ~= n bits/coord + one fp32 norm per bucket (paper App. E)."""
+    spec = QuantizerSpec("qsgd", bits=4, bucket_size=128)
+    d = 29282  # the paper's CNN dimension (117.128 kB / 4 B)
+    bits_per_coord = spec.wire_bits(d) / d
+    assert 4.2 < bits_per_coord < 4.3
+    assert QuantizerSpec("identity").wire_bits(d) == 32 * d
+
+
+def test_qsgd_deterministic_given_key():
+    q = make_quantizer("qsgd4")
+    x = _rand(9, 5000)
+    k = jax.random.PRNGKey(42)
+    e1 = q.encode({"x": x}, k)
+    e2 = q.encode({"x": x}, k)
+    assert jnp.array_equal(e1["msgs"][0]["packed"], e2["msgs"][0]["packed"])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(min_value=1, max_value=2000),
+       bits=st.sampled_from([2, 4, 8]),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_qsgd_per_coordinate_error_bound(d, bits, seed):
+    """|deq - x|_i <= bucket_norm / s pointwise (stochastic rounding bound)."""
+    spec = QuantizerSpec("qsgd", bits=bits)
+    q = make_quantizer(spec)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
+    e = q.qdq_leaf(x, jax.random.PRNGKey(seed + 1))
+    s = spec.levels
+    b = spec.bucket_size
+    pad = (-d) % b
+    xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, b)
+    ep = np.pad(np.asarray(e), (0, pad)).reshape(-1, b)
+    norms = np.linalg.norm(xp, axis=1, keepdims=True)
+    step = norms / s
+    assert (np.abs(ep - xp) <= step + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(min_value=2, max_value=500),
+       frac=st.floats(min_value=0.01, max_value=1.0),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_topk_keeps_largest(d, frac, seed):
+    import math
+    q = make_quantizer(QuantizerSpec("top_k", fraction=frac))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
+    e = np.asarray(q.qdq_leaf(x, jax.random.PRNGKey(0)))
+    k = max(1, math.ceil(frac * d))
+    kept = np.flatnonzero(e != 0)
+    assert len(kept) <= k
+    # every kept coordinate is >= every dropped coordinate in magnitude
+    if len(kept) and len(kept) < d:
+        dropped = np.setdiff1d(np.arange(d), kept)
+        assert np.abs(np.asarray(x))[kept].min() >= np.abs(np.asarray(x))[dropped].max() - 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rand_k_scaled_unbiased(seed):
+    """E[Q(x)] = x for scaled rand_k. The estimator's per-coordinate std is
+    |x_i| sqrt((d/k - 1)/N); the bound is 5 sigma of the max coordinate."""
+    q = make_quantizer(QuantizerSpec("rand_k", fraction=0.25, scaled=True))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,), jnp.float32)
+    n = 400
+    recon = jnp.stack([q.qdq_leaf(x, jax.random.PRNGKey(i)) for i in range(n)])
+    bound = 5.0 * float(jnp.abs(x).max()) * (3.0 / n) ** 0.5
+    assert float(jnp.abs(recon.mean(0) - x).max()) < bound

@@ -1,0 +1,176 @@
+"""Substrate tests: data pipeline, optimizers, checkpointing, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs as config_registry
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data import FederatedPartition, SyntheticCelebA, synthetic_batch_for_config
+from repro.data.federated import dirichlet_partition
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+from repro.sharding.rules import ShardingRules, param_pspecs, batch_pspecs
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_celeba_learnable_structure():
+    ds = SyntheticCelebA(n_samples=500)
+    assert ds.images.shape == (500, 32, 32, 3)
+    # the smile arc curves up for label 1 and down for label 0: the
+    # (upper-rows minus lower-rows) contrast in the mouth region separates
+    # the classes by ~2 sigma
+    def contrast(ims):
+        return ims[:, 19:23, 10:22, 0].mean() - ims[:, 24:28, 10:22, 0].mean()
+    c1 = contrast(ds.images[ds.labels == 1])
+    c0 = contrast(ds.images[ds.labels == 0])
+    assert c1 - c0 > 1.0, (c1, c0)
+
+
+def test_dirichlet_partition_shapes():
+    labels = np.random.default_rng(0).integers(0, 2, 1000)
+    shards = dirichlet_partition(labels, 50, alpha=0.5, min_samples=1,
+                                 max_samples=32, seed=1)
+    assert len(shards) == 50
+    sizes = [len(s) for s in shards]
+    assert min(sizes) >= 1 and max(sizes) <= 32
+
+
+def test_federated_partition_split():
+    ds = SyntheticCelebA(n_samples=300)
+    part = FederatedPartition(labels=ds.labels, n_clients=100)
+    assert len(part.train_clients) == 80
+    assert len(part.val_clients) == 10
+    assert len(part.test_clients) == 10
+    b = part.client_batch(ds, 3, 4, np.random.default_rng(0))
+    assert b["images"].shape == (4, 32, 32, 3)
+
+
+@pytest.mark.parametrize("arch", ["musicgen-large", "internvl2-1b", "gemma2-2b"])
+def test_synthetic_batch_contract(arch):
+    cfg = config_registry.get_reduced(arch)
+    b = synthetic_batch_for_config(cfg, np.random.default_rng(0), 3, 48)
+    if cfg.modality == "audio":
+        assert b["tokens"].shape == (3, 48, cfg.audio_codebooks)
+    elif cfg.modality == "vlm":
+        assert b["patch_embeddings"].shape == (3, cfg.n_prefix_embeddings, cfg.d_model)
+        assert b["tokens"].shape == (3, 48 - cfg.n_prefix_embeddings)
+    assert int(np.max(b["tokens"])) < cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("momentum", 0.02),
+                                     ("adamw", 0.02)])
+def test_optimizer_reduces_quadratic(name, lr):
+    # momentum's effective step is lr/(1-beta) = 10x lr; adamw's is ~lr/step
+    # regardless of curvature — rates chosen so each contracts on sum(w^2).
+    opt = make_optimizer(name, lr=lr)
+    params = {"w": jnp.full((8,), 5.0)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    init = float(loss(params))
+    step = jax.jit(lambda p, s: opt.update(jax.grad(loss)(p), s, p))
+    for _ in range(400):
+        params, state = step(params, state)
+    # sgd/momentum reach machine-zero; adamw's slow sqrt(v) memory (b2=.999)
+    # gives geometric decay on shrinking gradients — require >=99% reduction.
+    assert float(loss(params)) < 0.01 * init, float(loss(params))
+
+
+def test_adamw_weight_decay():
+    opt = make_optimizer("adamw", lr=0.1, weight_decay=0.5)
+    params = {"w": jnp.full((4,), 2.0)}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros((4,))}
+    params2, _ = opt.update(zero_g, state, params)
+    assert float(params2["w"][0]) < 2.0  # decay shrinks even with zero grads
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                   "d": jnp.asarray(3, jnp.int32)}}
+    d = str(tmp_path)
+    save_checkpoint(d, 7, state, {"note": "test"})
+    assert latest_step(d) == 7
+    restored = load_checkpoint(d, 7, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 1, {"w": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (on the real 16x16 production mesh via abstract mesh devices
+# is impossible in-process; validate the pure spec logic instead)
+# ---------------------------------------------------------------------------
+
+
+class FakeMesh:
+    """Duck-typed mesh: shape mapping + axis names (specs are pure logic)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+    @property
+    def size(self):
+        out = 1
+        for v in self.shape.values():
+            out *= v
+        return out
+
+
+@pytest.mark.parametrize("arch", config_registry.list_archs())
+def test_param_specs_divisibility(arch):
+    cfg = config_registry.get_config(arch)
+    rules = ShardingRules(mesh=FakeMesh({"data": 16, "model": 16}), fsdp=True)
+    abstract = T.abstract_params(cfg)
+    specs = param_pspecs(rules, cfg, abstract)
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(abstract)[0],
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        assert len(spec) <= leaf.ndim, (arch, path, spec)
+        used = []
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                assert leaf.shape[i] % rules.mesh.shape[a] == 0, \
+                    (arch, jax.tree_util.keystr(path), leaf.shape, spec)
+                used.append(a)
+        assert len(used) == len(set(used)), (arch, path, spec)  # no dup axes
+
+
+def test_batch_specs_fallbacks():
+    rules = ShardingRules(mesh=FakeMesh({"pod": 2, "data": 16, "model": 16}))
+    tree = {"big": jax.ShapeDtypeStruct((128, 5), jnp.float32),
+            "b1": jax.ShapeDtypeStruct((1, 5), jnp.float32),
+            "b16": jax.ShapeDtypeStruct((16, 5), jnp.float32)}
+    specs = batch_pspecs(rules, tree, batch_dim=0)
+    assert specs["big"] == P(("pod", "data"), None)
+    assert specs["b1"] == P(None, None)
+    assert specs["b16"] == P(("data",), None)

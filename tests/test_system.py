@@ -1,0 +1,84 @@
+"""End-to-end system tests: the async QAFeL pipeline on the paper's CNN task.
+
+This is the integration surface of the whole stack: synthetic CelebA, non-IID
+federated partition, event-driven async timeline with half-normal durations,
+buffered aggregation, bidirectional quantization with real packed wire
+messages, hidden-state replicas, byte metering.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QAFeL, QAFeLConfig
+from repro.data import FederatedPartition, SyntheticCelebA
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.sim import AsyncFLSimulator, SimConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = SyntheticCelebA(n_samples=1200)
+    part = FederatedPartition(labels=ds.labels, n_clients=120)
+    params0 = init_cnn(jax.random.PRNGKey(0))
+
+    def loss_fn(params, batch, key):
+        return cnn_loss(params, batch, train=True, key=key)[0]
+
+    rng = np.random.default_rng(0)
+
+    def client_batches(cid, key):
+        b = [part.client_batch(ds, cid, 8, rng) for _ in range(2)]
+        return {k: jnp.stack([jnp.asarray(bi[k]) for bi in b]) for k in b[0]}
+
+    test_idx = part.split_indices(part.val_clients)[:256]
+    test_batch = {k: jnp.asarray(v) for k, v in ds.batch(test_idx).items()}
+    eval_fn = jax.jit(lambda p: cnn_accuracy(p, test_batch))
+    return loss_fn, params0, client_batches, eval_fn
+
+
+def run_sim(setup, cq, sq, max_uploads=40, seed=0):
+    loss_fn, params0, client_batches, eval_fn = setup
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=4, local_steps=2,
+                       client_quantizer=cq, server_quantizer=sq)
+    algo = QAFeL(qcfg, loss_fn, params0)
+    sim = AsyncFLSimulator(
+        algo, SimConfig(concurrency=8, max_uploads=max_uploads,
+                        eval_every_steps=5, seed=seed),
+        client_batches, eval_fn)
+    return sim.run(), algo
+
+
+def test_async_pipeline_runs_and_replicas_sync(setup):
+    res, algo = run_sim(setup, "qsgd4", "qsgd4")
+    assert res.uploads == 40
+    assert res.server_steps == 10  # K = 4
+    assert res.metrics["replicas_in_sync"]
+    assert res.metrics["hidden_drift"] < 1.0
+    assert np.isfinite(res.final_accuracy)
+
+
+def test_byte_metering_matches_quantizer_spec(setup):
+    res, algo = run_sim(setup, "qsgd4", "qsgd8")
+    expected_up = algo.cq.wire_bytes_tree(algo.state.x)
+    assert abs(res.metrics["upload_MB"] * 1e6 / res.uploads - expected_up) \
+        < 0.02 * expected_up
+    # broadcast uses the 8-bit server quantizer: bigger messages than 4-bit up
+    per_bcast = res.metrics["broadcast_MB"] * 1e6 / res.metrics["broadcasts"]
+    assert per_bcast > expected_up
+
+
+def test_quantized_vs_fullprecision_same_protocol(setup):
+    """QAFeL messages ~7.5x smaller than FedBuff's at equal upload count."""
+    res_q, _ = run_sim(setup, "qsgd4", "qsgd4")
+    res_f, _ = run_sim(setup, "identity", "identity")
+    assert res_q.uploads == res_f.uploads
+    ratio = res_f.metrics["upload_MB"] / res_q.metrics["upload_MB"]
+    assert 7.0 < ratio < 8.0
+
+
+def test_staleness_bounded(setup):
+    res, _ = run_sim(setup, "qsgd4", "qsgd4")
+    assert res.metrics["tau_max"] <= res.uploads // 4
+    assert res.metrics["tau_mean"] >= 0.0
