@@ -83,8 +83,9 @@ def run_protocol(task: Task, cq: str, sq: str, *, concurrency: int = 16,
         "upload_MB": m["upload_MB"],
         "broadcast_MB": m["broadcast_MB"],
         "kB_per_upload": m["kB_per_upload"],
-        "kB_per_download": (m["broadcast_MB"] * 1e3 / m["broadcasts"]
-                            if m["broadcasts"] else 0.0),
+        # per-message size (paper table metric); broadcast_MB now counts the
+        # downlink fan-out to all concurrently active clients
+        "kB_per_download": m["kB_per_broadcast"],
         "acc": res.final_accuracy,
         "tau_max": m["tau_max"],
         "hidden_drift": m["hidden_drift"],

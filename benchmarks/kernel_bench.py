@@ -13,7 +13,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.buffer import UpdateBuffer
+from repro.core.quantizers import make_quantizer
 from repro.kernels import ops
+from repro.models.cnn import init_cnn
 
 
 def _time(fn, *args, iters=5):
@@ -52,3 +55,52 @@ def main(report):
     naive = k * (stack.nbytes // k + x.nbytes) + (k + 1) * x.nbytes
     report("kernel/buffer_agg_K10_1M", us,
            f"fused_hbm_bytes={hbm};naive_hbm_bytes={naive};saving=x{naive/hbm:.2f}")
+    wire_path_bench(report)
+
+
+def wire_path_bench(report):
+    """Packed single-buffer wire path vs the legacy per-leaf path on the
+    paper's multi-leaf CNN (18 leaves, sizes 2 .. 25600): encode and the
+    buffered server flush. Per-leaf pays one kernel dispatch per leaf, each
+    padded to a full 32768-element tile; packed pays exactly one dispatch
+    per message with a single padding tail, and the flush is one fused
+    dequantize-accumulate pass instead of K separate decodes + K adds."""
+    q = make_quantizer("qsgd4")
+    params = init_cnn(jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(params))
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    key = jax.random.PRNGKey(1)
+
+    us_leaf = _time(lambda: [m["packed"] for m in
+                             q.encode_leafwise(params, key)["msgs"]], iters=3)
+    us_packed = _time(lambda: q.encode(params, key)["packed"], iters=3)
+    report("wire/encode_cnn_per_leaf", us_leaf, f"leaves={n_leaves};d={d}")
+    report("wire/encode_cnn_packed", us_packed,
+           f"kernel_calls=1;speedup=x{us_leaf / us_packed:.2f}")
+
+    k = 10
+    encs = [q.encode(params, jax.random.PRNGKey(10 + i)) for i in range(k)]
+    encs_leaf = [q.encode_leafwise(params, jax.random.PRNGKey(10 + i))
+                 for i in range(k)]
+    w = [1.0 / (1.0 + i) ** 0.5 for i in range(k)]
+
+    def flush_per_leaf():
+        acc = jax.tree.map(lambda x: x * w[0], q.decode(encs_leaf[0]))
+        for e, wi in zip(encs_leaf[1:], w[1:]):
+            acc = jax.tree.map(lambda a, x: a + wi * x, acc, q.decode(e))
+        return jax.tree.leaves(acc)
+
+    def flush_packed():
+        buf = UpdateBuffer(capacity=k, quantizer=q)
+        for e, wi in zip(encs, w):
+            buf.add_encoded(e, weight=wi)
+        return jax.tree.leaves(buf.flush())
+
+    us_fleaf = _time(flush_per_leaf, iters=3)
+    us_fpacked = _time(flush_packed, iters=3)
+    report("wire/flush_cnn_K10_per_leaf", us_fleaf, f"decodes={k * n_leaves}")
+    report("wire/flush_cnn_K10_packed", us_fpacked,
+           f"fused_kernel_calls=1;speedup=x{us_fleaf / us_fpacked:.2f}")
+    report("wire/encode_flush_cnn_total", us_packed + us_fpacked,
+           f"per_leaf_total={us_leaf + us_fleaf:.1f};"
+           f"speedup=x{(us_leaf + us_fleaf) / (us_packed + us_fpacked):.2f}")

@@ -8,7 +8,8 @@
 * ``staleness``    — Assumption 3.4 monitoring + 1/sqrt(1+tau) weighting
 * ``protocol``     — wire messages and exact byte accounting
 """
-from repro.core.quantizers import Quantizer, QuantizerSpec, make_quantizer
+from repro.core.quantizers import (Quantizer, QuantizerSpec, TreeLayout,
+                                   flatten_tree, make_quantizer)
 from repro.core.qafel import QAFeL, QAFeLConfig, ServerState, client_update, server_apply
 from repro.core.fedbuff import fedbuff_config, make_fedbuff
 from repro.core.hidden_state import HiddenState, server_broadcast_delta

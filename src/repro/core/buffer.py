@@ -1,29 +1,52 @@
 """Server-side update buffer (the "Buff" in FedBuff/QAFeL, Algorithm 1).
 
-Accumulates decoded client deltas (weighted by staleness scaling) until K
-samples have arrived, then releases the aggregate and resets. Aggregation
-happens in accumulator form — O(1) memory in K — matching the fused
-dequantize-accumulate Pallas kernel used on-device.
+Two modes:
+
+* **Tree mode** (``add``): accumulates already-decoded client deltas
+  (weighted by staleness scaling) in accumulator form — O(1) memory in K.
+  Used by callers that hold full-precision deltas (e.g. the FedBuff
+  identity-quantizer limit driven without a wire path).
+* **Packed mode** (``add_encoded``, enabled by passing ``quantizer=``):
+  stores the K uploads exactly as they arrived on the wire — stacked uint8
+  qsgd codes + per-bucket norms (O(K * bits/32) of the f32 footprint), or
+  sparse (idx, vals) pairs for top_k/rand_k — and defers ALL dequantization
+  to ``flush``, which runs the fused dequantize-accumulate Pallas kernel
+  (``repro.kernels.buffer_agg``) once with the staleness weights folded into
+  the kernel's ``weights`` vector. No decoded f32 delta ever exists between
+  flushes; the buffer is a compressed store decoded once per flush, not K
+  times per round.
+
+Both modes release the aggregate when K samples have arrived, then reset.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, List, Optional
 
-import jax
+import jax.numpy as jnp
 
-from repro.common.tree import tree_axpy, tree_scale, tree_zeros_like
+from repro.common.tree import tree_axpy, tree_scale
+from repro.core.quantizers import Quantizer, TreeLayout
 
 
 @dataclasses.dataclass
 class UpdateBuffer:
     capacity: int  # K
-    _acc: Any = None  # running sum of weighted deltas
+    quantizer: Optional[Quantizer] = None  # set -> packed mode available
+    _acc: Any = None  # tree mode: running sum of weighted deltas
     _weightsum: float = 0.0
     count: int = 0
     flushes: int = 0
+    # packed mode: raw wire tensors + weights, stacked lazily at flush
+    _packed: List[Any] = dataclasses.field(default_factory=list)
+    _weights: List[float] = dataclasses.field(default_factory=list)
+    _layout: Optional[TreeLayout] = None
+    _bits: Optional[int] = None
+    _n: Optional[int] = None
+    _flat_acc: Any = None  # identity packed mode: flat f32 accumulator
 
     def add(self, delta, weight: float = 1.0) -> None:
+        """Tree mode: accumulate an already-decoded delta."""
         if self._acc is None:
             self._acc = tree_scale(delta, weight)
         else:
@@ -31,9 +54,81 @@ class UpdateBuffer:
         self._weightsum += float(weight)
         self.count += 1
 
+    def add_encoded(self, enc: dict, weight: float = 1.0) -> None:
+        """Packed mode: store the wire payload itself; no dequantization.
+
+        ``enc`` is a ``Quantizer.encode`` packed message dict. qsgd uploads
+        are kept as (codes, norms); top_k/rand_k as (idx, vals); identity
+        payloads (already f32 on the wire) fold into a flat accumulator.
+        """
+        if self.quantizer is None:
+            raise RuntimeError("add_encoded requires a quantizer (packed mode)")
+        if enc.get("format") != "packed":
+            raise ValueError("add_encoded expects a packed message; use "
+                             "Quantizer.encode (not encode_leafwise)")
+        if enc["kind"] != self.quantizer.spec.kind:
+            raise ValueError(f"message kind {enc['kind']!r} does not match "
+                             f"buffer quantizer {self.quantizer.spec.kind!r}")
+        # validate EVERYTHING before mutating any state, so a rejected
+        # message leaves the buffer exactly as it was
+        kind = enc["kind"]
+        if self._layout is not None:
+            if enc["layout"] != self._layout:
+                raise ValueError("message layout mismatch: all buffered uploads "
+                                 "must encode the same pytree structure")
+            if enc.get("bits") != self._bits:
+                raise ValueError(f"message bits mismatch: {enc.get('bits')} != "
+                                 f"{self._bits}")
+        if kind == "qsgd":
+            from repro.kernels import ops as kops
+            if enc["norms"].shape[0] != kops.rows_for(enc["n"]):
+                raise ValueError("corrupt qsgd message: norms/rows mismatch")
+        if self._layout is None:
+            self._layout = enc["layout"]
+            self._n = enc["n"]
+            self._bits = enc.get("bits")
+
+        if kind == "qsgd":
+            self._packed.append((enc["packed"], enc["norms"]))
+        elif kind == "identity":
+            if self._flat_acc is None:
+                self._flat_acc = enc["payload"] * weight
+            else:
+                self._flat_acc = self._flat_acc + enc["payload"] * weight
+        else:  # top_k / rand_k: wire-sized sparse pairs
+            self._packed.append((enc["idx"], enc["vals"]))
+        self._weightsum += float(weight)
+        self._weights.append(float(weight))
+        self.count += 1
+
     @property
     def full(self) -> bool:
         return self.count >= self.capacity
+
+    def _flush_packed(self, denom: float):
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        kind = self.quantizer.spec.kind
+        if kind == "qsgd":
+            # One fused kernel pass: dequantize + weighted accumulate of all K
+            # messages, with staleness weights and the 1/denom normalization
+            # folded into the kernel's weights vector.
+            stack = jnp.stack([p for p, _ in self._packed])
+            norms = jnp.stack([nm for _, nm in self._packed])
+            w = jnp.asarray(self._weights, jnp.float32) / denom
+            flat = kops.buffer_aggregate(stack, norms, w, self._bits, self._n)
+        elif kind == "identity":
+            flat = self._flat_acc / denom
+        else:  # sparse: scatter-add each (idx, vals) pair into one flat sum
+            flat = jnp.zeros((self._n,), jnp.float32)
+            for (idx, vals), w in zip(self._packed, self._weights):
+                flat = flat.at[idx].add(vals * (w / denom))
+        out = self._layout.unflatten(flat)
+        if self._acc is not None:
+            # tree-mode adds (e.g. a legacy per-leaf message decoded eagerly)
+            # landed in the same fill window: fold them in, don't drop them
+            out = tree_axpy(1.0 / denom, self._acc, out)
+        return out
 
     def flush(self, *, normalize: str = "capacity"):
         """Return the aggregate Delta-bar and reset.
@@ -44,9 +139,18 @@ class UpdateBuffer:
         if not self.full:
             raise RuntimeError(f"flush before full: {self.count}/{self.capacity}")
         denom = float(self.capacity) if normalize == "capacity" else max(self._weightsum, 1e-12)
-        out = tree_scale(self._acc, 1.0 / denom)
+        if self._packed or self._flat_acc is not None:
+            out = self._flush_packed(denom)
+        else:
+            out = tree_scale(self._acc, 1.0 / denom)
         self._acc = None
         self._weightsum = 0.0
+        self._packed = []
+        self._weights = []
+        self._layout = None
+        self._bits = None
+        self._n = None
+        self._flat_acc = None
         self.count = 0
         self.flushes += 1
         return out

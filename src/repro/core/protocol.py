@@ -1,11 +1,19 @@
 """Wire protocol: message framing and exact byte accounting.
 
 Every client->server upload and server->client broadcast in the host-level
-simulator is a ``Message`` carrying a real encoded payload (packed uint8
-codes for qsgd, index/value pairs for top_k/rand_k) plus its exact wire
-size. The byte model matches the paper's Appendix E tables:
-``n bits / coordinate + one fp32 norm`` per tensor for n-bit qsgd, and
-``64 bits / kept coordinate`` for top_k / rand_k.
+simulator is a ``Message`` carrying a real encoded payload — a single
+contiguous packed buffer per message (uint8 qsgd codes + bucket norms, or
+sparse index/value pairs for top_k/rand_k) produced by ``Quantizer.encode``.
+The byte model matches the paper's Appendix E tables applied to the whole
+flattened model: ``n bits / coordinate + one fp32 norm per 128-coordinate
+bucket`` for n-bit qsgd, and ``64 bits / kept coordinate`` for top_k /
+rand_k. Because the packed format shares bucket norms across leaf
+boundaries, its exact size is <= the per-leaf sum (equal when every leaf is
+bucket-aligned).
+
+Broadcasts fan out: one encoded server message is delivered to every
+concurrently active client, so ``TrafficMeter.record`` takes the receiver
+count and ``broadcast_MB`` accounts bytes actually sent on the downlink.
 """
 from __future__ import annotations
 
@@ -21,7 +29,7 @@ HIDDEN_BROADCAST = "hidden_broadcast"
 @dataclasses.dataclass
 class Message:
     kind: str
-    payload: Any  # Quantizer.encode(...) output (or a raw tree for identity)
+    payload: Any  # Quantizer.encode(...) packed dict (or legacy per-leaf dict)
     wire_bytes: float
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -29,7 +37,8 @@ class Message:
 def encode_message(kind: str, quantizer: Quantizer, tree, key, **meta) -> Message:
     enc = quantizer.encode(tree, key)
     return Message(kind=kind, payload=enc,
-                   wire_bytes=quantizer.wire_bytes_tree(tree), meta=dict(meta))
+                   wire_bytes=quantizer.wire_bytes_packed(enc["layout"]),
+                   meta=dict(meta))
 
 
 def decode_message(quantizer: Quantizer, msg: Message):
@@ -38,12 +47,20 @@ def decode_message(quantizer: Quantizer, msg: Message):
 
 @dataclasses.dataclass
 class TrafficMeter:
-    """Accumulates the paper's communication metrics."""
+    """Accumulates the paper's communication metrics.
+
+    ``broadcast_bytes`` counts downlink fan-out: a server message delivered
+    to ``n_receivers`` concurrent clients costs ``n_receivers *`` its wire
+    size. ``broadcast_wire_bytes`` keeps the per-message (single-copy) total
+    so kB-per-broadcast stays comparable to the paper's tables.
+    """
 
     uploads: int = 0
     broadcasts: int = 0
     upload_bytes: float = 0.0
     broadcast_bytes: float = 0.0
+    broadcast_wire_bytes: float = 0.0
+    broadcast_receivers: int = 0
 
     def record(self, msg: Message, n_receivers: int = 1):
         if msg.kind == CLIENT_UPDATE:
@@ -52,6 +69,8 @@ class TrafficMeter:
         else:
             self.broadcasts += 1
             self.broadcast_bytes += msg.wire_bytes * n_receivers
+            self.broadcast_wire_bytes += msg.wire_bytes
+            self.broadcast_receivers += n_receivers
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -60,4 +79,8 @@ class TrafficMeter:
             "upload_MB": self.upload_bytes / 1e6,
             "broadcast_MB": self.broadcast_bytes / 1e6,
             "kB_per_upload": (self.upload_bytes / self.uploads / 1e3) if self.uploads else 0.0,
+            "kB_per_broadcast": (self.broadcast_wire_bytes / self.broadcasts / 1e3
+                                 if self.broadcasts else 0.0),
+            "mean_broadcast_fanout": (self.broadcast_receivers / self.broadcasts
+                                      if self.broadcasts else 0.0),
         }

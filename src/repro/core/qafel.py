@@ -121,7 +121,9 @@ class QAFeL:
             hidden=HiddenState.init(params0),
             momentum=tree_zeros_like(params0),
             t=0)
-        self.buffer = UpdateBuffer(capacity=qcfg.buffer_size)
+        # Packed mode: the buffer stores uploads as wire tensors (uint8 codes
+        # + bucket norms) and dequantizes once per flush via the fused kernel.
+        self.buffer = UpdateBuffer(capacity=qcfg.buffer_size, quantizer=self.cq)
         self.meter = TrafficMeter()
         self.staleness = StalenessMonitor(max_allowed=qcfg.max_staleness)
         self._client_update = jax.jit(
@@ -141,14 +143,24 @@ class QAFeL:
         return msg, self.state.t
 
     # -- server side ------------------------------------------------------
-    def receive(self, msg: Message, key) -> Optional[Message]:
-        """Algorithm 1 lines 5-16. Returns the broadcast message on a flush."""
+    def receive(self, msg: Message, key, n_receivers: int = 1) -> Optional[Message]:
+        """Algorithm 1 lines 5-16. Returns the broadcast message on a flush.
+
+        The upload is NOT decoded here: its packed wire payload goes straight
+        into the buffer, and the fused dequantize-accumulate kernel decodes
+        all K messages in one pass when the buffer flushes. ``n_receivers``
+        is the number of concurrently active clients the resulting broadcast
+        fans out to (downlink byte accounting).
+        """
         self.meter.record(msg)
         tau = self.state.t - msg.meta["version"]
         self.staleness.observe(tau)
         w = float(staleness_weight(tau, self.qcfg.staleness_scaling))
-        delta = decode_message(self.cq, msg)
-        self.buffer.add(delta, weight=w)
+        payload = msg.payload
+        if isinstance(payload, dict) and payload.get("format") == "packed":
+            self.buffer.add_encoded(payload, weight=w)
+        else:  # legacy per-leaf message: decode eagerly
+            self.buffer.add(decode_message(self.cq, msg), weight=w)
         if not self.buffer.full:
             return None
 
@@ -162,7 +174,7 @@ class QAFeL:
         bmsg = encode_message(HIDDEN_BROADCAST, self.sq, diff, key,
                               t=self.state.t)
         q = decode_message(self.sq, bmsg)
-        self.meter.record(bmsg)
+        self.meter.record(bmsg, n_receivers=n_receivers)
         self.state = ServerState(
             x=x_new,
             hidden=self.state.hidden.apply(q),

@@ -20,13 +20,21 @@ Two call surfaces are provided:
 
 * ``qdq(x, key)``: quantize-dequantize in floating point. This is what runs
   *inside* jitted/pjit'd training steps (the reconstruction is all the math
-  needs; the wire format is accounted analytically).
+  needs; the wire format is accounted analytically). Operates leaf-wise with
+  independent randomness per leaf.
 * ``encode(x, key)`` / ``decode(msg)``: the actual packed wire format (uint8
   payloads) used by the host-level async simulator and the byte-accounting
-  benchmarks. For qsgd the packing runs through the Pallas kernel wrappers in
-  ``repro.kernels.ops`` (interpret mode on CPU, real kernels on TPU).
+  benchmarks. ``encode`` flattens the WHOLE pytree into one contiguous f32
+  vector (``TreeLayout`` records leaf shapes/dtypes/offsets) and compresses
+  it in a single pass — for qsgd that is exactly one quantize-pack Pallas
+  kernel dispatch per message (interpret mode on CPU, real kernels on TPU),
+  one padding tail, and one contiguous uint8 payload + bucket-norm vector
+  that the server buffer can stack and feed straight into the fused
+  dequantize-accumulate kernel (``repro.kernels.buffer_agg``) without ever
+  materialising the decoded f32 delta. See DESIGN.md ("Packed wire layout").
 
-Both surfaces operate leaf-wise on pytrees via the helpers at the bottom.
+The legacy per-leaf wire path is kept as ``encode_leafwise``/
+``decode_leafwise`` for A/B benchmarking; ``decode`` accepts both formats.
 """
 from __future__ import annotations
 
@@ -116,6 +124,59 @@ class QuantizerSpec:
 
 
 # ---------------------------------------------------------------------------
+# Packed pytree layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeLayout:
+    """Static description of a pytree flattened into one contiguous vector.
+
+    Records, in flattening order, each leaf's shape/dtype/size so a packed
+    flat f32 payload can be split back into the original tree. The layout is
+    host-side metadata only — it never travels through a kernel.
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple  # dtype names, e.g. "float32"
+    sizes: tuple
+
+    @property
+    def total_size(self) -> int:
+        return sum(self.sizes)
+
+    @staticmethod
+    def of(tree) -> "TreeLayout":
+        leaves, treedef = jax.tree.flatten(tree)
+        return TreeLayout(
+            treedef=treedef,
+            shapes=tuple(x.shape for x in leaves),
+            dtypes=tuple(str(jnp.asarray(x).dtype) for x in leaves),
+            sizes=tuple(int(jnp.asarray(x).size) for x in leaves),
+        )
+
+    def unflatten(self, flat: jnp.ndarray):
+        """Split a flat f32 vector back into the original (shaped, typed) tree."""
+        leaves = []
+        off = 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            leaves.append(flat[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+def flatten_tree(tree):
+    """Concatenate all leaves into one flat f32 vector; returns (flat, layout)."""
+    layout = TreeLayout.of(tree)
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate(
+        [jnp.asarray(x).reshape(-1).astype(jnp.float32) for x in leaves]
+    ) if leaves else jnp.zeros((0,), jnp.float32)
+    return flat, layout
+
+
+# ---------------------------------------------------------------------------
 # qsgd math (pure jnp; the Pallas kernel in repro/kernels mirrors this)
 # ---------------------------------------------------------------------------
 
@@ -140,14 +201,10 @@ def _qsgd_qdq_flat(x: jnp.ndarray, key, s: int, bucket: int) -> jnp.ndarray:
 
 def _top_k_qdq_flat(x: jnp.ndarray, k: int) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
-    # threshold = k-th largest magnitude
-    vals, _ = jax.lax.top_k(jnp.abs(xf), k)
-    thresh = vals[-1]
-    keep = jnp.abs(xf) >= thresh
-    # Break ties deterministically: keep at most k by cumulative count.
+    # Single deterministic mask: argsort breaks magnitude ties by index, so
+    # exactly k coordinates are kept.
     order = jnp.argsort(-jnp.abs(xf))
     mask = jnp.zeros_like(xf, dtype=bool).at[order[:k]].set(True)
-    del keep, thresh
     return jnp.where(mask, xf, 0.0).astype(x.dtype)
 
 
@@ -247,23 +304,93 @@ class Quantizer:
             out = jnp.zeros((msg["n"],), jnp.float32).at[msg["idx"]].set(msg["vals"])
         return out.reshape(msg["shape"]).astype(msg["dtype"])
 
-    def encode(self, tree, key):
+    # ---- packed wire format (the default path) --------------------------
+    def encode(self, tree, key) -> dict:
+        """Encode a whole pytree as ONE contiguous packed message.
+
+        The tree is flattened into a single flat f32 vector (``TreeLayout``
+        records how to undo it) and compressed in one pass — for qsgd this is
+        exactly one quantize-pack kernel dispatch with a single padding tail,
+        regardless of how many leaves the model has.
+        """
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        spec = self.spec
+        flat, layout = flatten_tree(tree)
+        n = int(flat.size)
+        if spec.kind == "identity":
+            return {"format": "packed", "kind": "identity", "payload": flat,
+                    "n": n, "layout": layout}
+        if spec.kind == "qsgd":
+            packed, norms = kops.qsgd_quantize(flat, key, spec.bits)
+            return {"format": "packed", "kind": "qsgd", "packed": packed,
+                    "norms": norms, "bits": spec.bits, "n": n, "layout": layout}
+        k = max(1, math.ceil(spec.fraction * n))
+        if spec.kind == "top_k":
+            order = jnp.argsort(-jnp.abs(flat))
+            idx = order[:k]
+            vals = flat[idx]
+        else:  # rand_k
+            idx = jax.random.choice(key, n, shape=(k,), replace=False)
+            vals = flat[idx]
+            if spec.scaled:
+                vals = vals * (n / k)
+        return {"format": "packed", "kind": spec.kind, "idx": idx.astype(jnp.int32),
+                "vals": vals, "n": n, "layout": layout}
+
+    def decode_flat(self, enc) -> jnp.ndarray:
+        """Dequantize a packed message to its flat f32 vector (no unflatten)."""
+        from repro.kernels import ops as kops
+
+        kind = enc["kind"]
+        if kind == "identity":
+            return enc["payload"]
+        if kind == "qsgd":
+            return kops.qsgd_dequantize(enc["packed"], enc["norms"],
+                                        enc["bits"], enc["n"])
+        return jnp.zeros((enc["n"],), jnp.float32).at[enc["idx"]].set(enc["vals"])
+
+    def decode(self, enc):
+        """Decode either wire format (packed single-buffer or legacy per-leaf)."""
+        if "msgs" in enc:  # legacy per-leaf format
+            return self.decode_leafwise(enc)
+        return enc["layout"].unflatten(self.decode_flat(enc))
+
+    # ---- legacy per-leaf wire format (kept for A/B comparison) ----------
+    def encode_leafwise(self, tree, key):
+        """One message dict per leaf — one kernel dispatch per leaf, each
+        padded to a full tile. Superseded by ``encode``; kept as the baseline
+        the packed path is benchmarked and tested against."""
         keys = split_key_tree(key, tree)
         leaves, treedef = jax.tree.flatten(tree)
         kleaves = jax.tree.leaves(keys)
         msgs = [self.encode_leaf(x, k) for x, k in zip(leaves, kleaves)]
         return {"treedef": treedef, "msgs": msgs}
 
-    def decode(self, enc):
+    def decode_leafwise(self, enc):
         leaves = [self.decode_leaf(m) for m in enc["msgs"]]
         return jax.tree.unflatten(enc["treedef"], leaves)
 
     # ---- accounting ------------------------------------------------------
     def wire_bits_tree(self, tree) -> int:
+        """Per-leaf analytic accounting (the paper's Appendix E model)."""
         return sum(self.spec.wire_bits(int(x.size)) for x in jax.tree.leaves(tree))
 
     def wire_bytes_tree(self, tree) -> float:
         return self.wire_bits_tree(tree) / 8.0
+
+    def wire_bits_packed(self, tree_or_layout) -> int:
+        """Exact bits on the wire for the packed single-buffer format: the
+        whole tree is one d-dimensional message, so bucket norms are shared
+        across leaf boundaries (<= the per-leaf sum)."""
+        if isinstance(tree_or_layout, TreeLayout):
+            d = tree_or_layout.total_size
+        else:
+            d = sum(int(x.size) for x in jax.tree.leaves(tree_or_layout))
+        return self.spec.wire_bits(d)
+
+    def wire_bytes_packed(self, tree_or_layout) -> float:
+        return self.wire_bits_packed(tree_or_layout) / 8.0
 
     def delta_tree(self, tree) -> float:
         """Worst-case (min over leaves) compression parameter."""

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import shard_map
 from repro.common.tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
 from repro.core.qafel import QAFeLConfig, server_apply
 from repro.core.quantizers import make_quantizer
@@ -240,7 +241,7 @@ def _make_podq_round(cfg: ModelConfig, qcfg: QAFeLConfig, cq, sq, *,
     def round_fn(state: RoundState, batch, weights, key):
         key_data = jax.random.key_data(key)
         b_specs = jax.tree.map(lambda l: batch_spec(l), batch)
-        sm = jax.shard_map(
+        sm = shard_map(
             pod_body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: rep, state.x),
                       jax.tree.map(lambda _: rep, state.hidden),

@@ -3,6 +3,12 @@
 Handles arbitrary flat lengths (padding to (BLOCK_ROWS, 128) tiles), backend
 dispatch (interpret=True off-TPU so the kernel bodies execute in Python on
 CPU for correctness validation), and per-row bucket-norm bookkeeping.
+
+These wrappers are the packed wire path's only kernel entry points: a whole
+pytree message is one flat vector, so ``qsgd_quantize`` is exactly one
+dispatch per message (one padding tail, not one per leaf), and the server
+buffer stacks the resulting (codes, norms) pairs verbatim for the single
+fused ``buffer_aggregate`` pass at flush time.
 """
 from __future__ import annotations
 
@@ -24,6 +30,11 @@ def _interpret() -> bool:
 
 def padded_len(n: int) -> int:
     return ((n + TILE - 1) // TILE) * TILE
+
+
+def rows_for(n: int) -> int:
+    """Number of 128-lane rows (= bucket norms) a length-n message packs into."""
+    return padded_len(n) // BUCKET
 
 
 def _to_tiles(flat: jnp.ndarray) -> jnp.ndarray:

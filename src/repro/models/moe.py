@@ -19,6 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import shard_map
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, gated_mlp, init_gated_mlp
 
@@ -235,7 +236,7 @@ def moe_forward_ep(cfg: ModelConfig, params, x, *,
                           * jax.lax.pmean(p_e, tuple(manual)))
         return out_loc, aux
 
-    sm = jax.shard_map(
+    sm = shard_map(
         local_moe, mesh=mesh,
         in_specs=(x_spec, rep, w3_spec, w3_spec, w3_spec),
         out_specs=(x_spec, rep),

@@ -128,14 +128,18 @@ class AsyncFLSimulator:
                 next_arrival += 1.0 / rate
                 next_finish = heap[0][0] if heap else math.inf
 
-            # deliver the earliest completion
+            # deliver the earliest completion; a flush's broadcast fans out to
+            # every client still training (in flight) at that instant
             now, s, cid = heapq.heappop(heap)
             msg = pending.pop(s)
-            bmsg = algo.receive(msg, self._next_key())
+            bmsg = algo.receive(msg, self._next_key(),
+                                n_receivers=max(1, len(heap)))
             uploads += 1
 
             if bmsg is not None:
-                # all tracked client replicas apply the same wire message
+                # decode the packed broadcast ONCE; every tracked replica
+                # applies the identical decoded increment (Algorithm 3) —
+                # which is exactly what keeps them bit-identical to the server
                 q = decode_message(algo.sq, bmsg)
                 self.replicas = [jax.tree.map(lambda a, d: a + d, rep, q)
                                  for rep in self.replicas]

@@ -1,0 +1,339 @@
+"""Packed single-buffer wire path: codec roundtrips on mixed pytrees, the
+decode-free packed server buffer (fused flush == sum of individual dequants
+at the pytree level), exact byte accounting, and broadcast fan-out metering.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QAFeL, QAFeLConfig, TrafficMeter, UpdateBuffer,
+                        decode_message, flatten_tree, make_quantizer)
+from repro.core.protocol import CLIENT_UPDATE, HIDDEN_BROADCAST, Message
+from repro.core.quantizers import TreeLayout
+
+
+def mixed_tree(seed=0):
+    """Mixed shapes AND dtypes; sizes deliberately not bucket-aligned."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "conv": {"w": jax.random.normal(ks[0], (5, 5, 3, 7), jnp.float32),
+                 "b": jax.random.normal(ks[1], (7,), jnp.float32).astype(jnp.bfloat16)},
+        "head": jax.random.normal(ks[2], (33, 3), jnp.float32),
+        "scale": jax.random.normal(ks[3], (1,), jnp.float32).astype(jnp.float16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_tree_roundtrip_is_exact():
+    tree = mixed_tree()
+    flat, layout = flatten_tree(tree)
+    assert flat.dtype == jnp.float32
+    assert flat.size == layout.total_size == sum(
+        int(x.size) for x in jax.tree.leaves(tree))
+    back = layout.unflatten(flat)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["qsgd2", "qsgd4", "qsgd8", "top_k0.2",
+                                  "rand_k0.2", "identity"])
+def test_packed_roundtrip_structure_mixed_tree(name):
+    q = make_quantizer(name)
+    tree = mixed_tree()
+    enc = q.encode(tree, jax.random.PRNGKey(1))
+    assert enc["format"] == "packed"
+    dec = q.decode(enc)
+    assert jax.tree.structure(dec) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_packed_equals_per_leaf_for_identity():
+    """The two wire formats decode to the same tree wherever both are exact."""
+    q = make_quantizer("identity")
+    tree = mixed_tree()
+    key = jax.random.PRNGKey(2)
+    dp = q.decode(q.encode(tree, key))
+    dl = q.decode(q.encode_leafwise(tree, key))
+    for a, b in zip(jax.tree.leaves(dp), jax.tree.leaves(dl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_equals_per_leaf_for_full_fraction_topk():
+    """fraction=1.0 top_k keeps everything -> both paths are lossless (up to
+    the f32 cast of low-precision leaves) and must agree exactly."""
+    q = make_quantizer("top_k1.0")
+    tree = mixed_tree()
+    key = jax.random.PRNGKey(3)
+    dp = q.decode(q.encode(tree, key))
+    dl = q.decode(q.encode_leafwise(tree, key))
+    for a, b in zip(jax.tree.leaves(dp), jax.tree.leaves(dl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_qsgd_single_kernel_call_and_error_bound():
+    """One quantize-pack dispatch for the whole tree; the reconstruction
+    obeys the per-bucket qsgd bound on the CONCATENATED layout."""
+    from repro.kernels import ops
+    q = make_quantizer("qsgd4")
+    tree = mixed_tree()
+    calls = []
+    orig = ops.qsgd_quantize
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    ops.qsgd_quantize, _saved = counting, orig
+    try:
+        enc = q.encode(tree, jax.random.PRNGKey(4))
+    finally:
+        ops.qsgd_quantize = _saved
+    assert len(calls) == 1  # exactly one kernel call per message, not per leaf
+
+    flat, _ = flatten_tree(tree)
+    deq, _ = flatten_tree(q.decode(enc))
+    s = (1 << (4 - 1)) - 1
+    pad = ops.padded_len(flat.size) - flat.size
+    xp = np.pad(np.asarray(flat), (0, pad)).reshape(-1, ops.BUCKET)
+    dq = np.pad(np.asarray(deq), (0, pad)).reshape(-1, ops.BUCKET)
+    step = np.asarray(enc["norms"])[:, None] / s
+    # bf16/f16 leaves re-quantize on the cast back; allow that rounding too
+    assert (np.abs(dq - xp) <= step + 2e-2).all()
+
+
+def test_packed_wire_accounting():
+    """Exact packed size == analytic model on total d; <= the per-leaf sum
+    (shared bucket norms), equal when every leaf is bucket-aligned."""
+    tree = mixed_tree()
+    d = sum(int(x.size) for x in jax.tree.leaves(tree))
+    for name, expected_bits in [
+        ("qsgd4", 4 * d + 32 * math.ceil(d / 128)),
+        ("identity", 32 * d),
+        ("top_k0.2", 64 * max(1, math.ceil(0.2 * d))),
+    ]:
+        q = make_quantizer(name)
+        assert q.wire_bits_packed(tree) == expected_bits, name
+        assert q.wire_bits_packed(tree) <= q.wire_bits_tree(tree), name
+    # bucket-aligned leaves: packed == per-leaf accounting, bit for bit
+    aligned = {"a": jnp.zeros((256,)), "b": jnp.zeros((128, 2))}
+    q = make_quantizer("qsgd4")
+    assert q.wire_bits_packed(aligned) == q.wire_bits_tree(aligned)
+
+
+# ---------------------------------------------------------------------------
+# Packed buffer: fused flush == sum of individual dequants (pytree level)
+# ---------------------------------------------------------------------------
+
+
+def f32_tree(seed=0):
+    """Mixed shapes, all f32 (for bit-tight fused-vs-manual comparison)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"w": jax.random.normal(ks[0], (5, 5, 3, 7), jnp.float32),
+            "b": jax.random.normal(ks[1], (7,), jnp.float32),
+            "head": jax.random.normal(ks[2], (33, 3), jnp.float32)}
+
+
+@pytest.mark.parametrize("name", ["qsgd4", "qsgd8", "identity", "top_k0.3",
+                                  "rand_k0.3"])
+def test_packed_buffer_flush_equals_sum_of_dequants(name):
+    """Pytree-level version of
+    test_kernels.py::test_buffer_aggregate_equals_sum_of_dequants: the fused
+    packed flush must equal K separate decodes + weighted tree sum."""
+    q = make_quantizer(name)
+    k = 5
+    trees = [f32_tree(seed=i) for i in range(k)]
+    encs = [q.encode(t, jax.random.PRNGKey(100 + i)) for i, t in enumerate(trees)]
+    weights = [1.0 / math.sqrt(1 + i) for i in range(k)]
+
+    buf = UpdateBuffer(capacity=k, quantizer=q)
+    for e, w in zip(encs, weights):
+        buf.add_encoded(e, weight=w)
+        assert buf._acc is None  # no decoded f32 delta between flushes
+    fused = buf.flush(normalize="capacity")
+
+    manual = None
+    for e, w in zip(encs, weights):
+        dec = jax.tree.map(lambda x: x * (w / k), q.decode(e))
+        manual = dec if manual is None else jax.tree.map(jnp.add, manual, dec)
+    for a, b in zip(jax.tree.leaves(fused), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    assert buf.count == 0 and buf.flushes == 1 and not buf._packed
+
+
+def test_packed_buffer_flush_mixed_dtypes():
+    """Same equality on a mixed-dtype tree; the fused path accumulates in f32
+    and casts once at the end, so low-precision leaves agree to cast error."""
+    q = make_quantizer("qsgd8")
+    k = 4
+    encs = [q.encode(mixed_tree(seed=i), jax.random.PRNGKey(200 + i))
+            for i in range(k)]
+    weights = [1.0] * k
+    buf = UpdateBuffer(capacity=k, quantizer=q)
+    for e, w in zip(encs, weights):
+        buf.add_encoded(e, weight=w)
+    fused = buf.flush()
+    manual = None
+    for e, w in zip(encs, weights):
+        dec = jax.tree.map(lambda x: x.astype(jnp.float32) * (w / k), q.decode(e))
+        manual = dec if manual is None else jax.tree.map(jnp.add, manual, dec)
+    for a, b in zip(jax.tree.leaves(fused), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a, dtype=np.float32),
+                                   np.asarray(b, dtype=np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_packed_buffer_normalize_weights():
+    q = make_quantizer("qsgd8")
+    tree = {"w": jnp.ones((200,), jnp.float32)}
+    buf = UpdateBuffer(capacity=2, quantizer=q)
+    buf.add_encoded(q.encode(tree, jax.random.PRNGKey(0)), weight=1.0)
+    buf.add_encoded(q.encode(tree, jax.random.PRNGKey(1)), weight=3.0)
+    out = buf.flush(normalize="weights")  # weighted mean of ~1.0 vectors
+    # qsgd8 step on a 128-bucket of ones: sqrt(128)/127 ~ 0.09 per coordinate
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, atol=0.15)
+
+
+def test_mixed_add_and_add_encoded_are_both_counted():
+    """Tree-mode add() in the same fill window must fold into the packed
+    flush, not silently vanish."""
+    q = make_quantizer("qsgd8")
+    tree = {"w": jnp.ones((128,), jnp.float32)}
+    buf = UpdateBuffer(capacity=2, quantizer=q)
+    buf.add(tree, weight=1.0)  # e.g. a decoded legacy per-leaf message
+    buf.add_encoded(q.encode(tree, jax.random.PRNGKey(0)), weight=1.0)
+    out = buf.flush()  # mean of two ~ones vectors must stay ~1, not drop to ~0.5
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, atol=0.15)
+
+
+def test_add_encoded_rejects_kind_mismatch():
+    q4 = make_quantizer("qsgd4")
+    topk = make_quantizer("top_k0.5")
+    tree = {"w": jnp.ones((64,), jnp.float32)}
+    buf = UpdateBuffer(capacity=2, quantizer=q4)
+    with pytest.raises(ValueError, match="kind"):
+        buf.add_encoded(topk.encode(tree, jax.random.PRNGKey(0)))
+
+
+def test_add_encoded_rejects_incompatible_messages():
+    """bits and pytree-layout mismatches fail fast at add time, not with an
+    opaque stack/unflatten error K messages later at flush."""
+    q4, q8 = make_quantizer("qsgd4"), make_quantizer("qsgd8")
+    tree = {"w": jnp.ones((64,), jnp.float32)}
+    buf = UpdateBuffer(capacity=3, quantizer=q4)
+    buf.add_encoded(q4.encode(tree, jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="bits"):
+        buf.add_encoded(q8.encode(tree, jax.random.PRNGKey(1)))
+    # same total size n, different structure -> layout mismatch
+    other = {"a": jnp.ones((32,), jnp.float32), "b": jnp.ones((32,), jnp.float32)}
+    with pytest.raises(ValueError, match="layout"):
+        buf.add_encoded(q4.encode(other, jax.random.PRNGKey(2)))
+
+
+def test_rejected_first_message_leaves_buffer_clean():
+    """A corrupt message rejected at add time must not pin the empty buffer
+    to its metadata — well-formed uploads afterwards must still be accepted."""
+    q = make_quantizer("qsgd4")
+    tree = {"w": jnp.ones((64,), jnp.float32)}
+    buf = UpdateBuffer(capacity=1, quantizer=q)
+    bad = dict(q.encode(tree, jax.random.PRNGKey(0)))
+    bad["norms"] = bad["norms"][:-1]  # truncated bucket norms
+    with pytest.raises(ValueError, match="norms"):
+        buf.add_encoded(bad)
+    assert buf.count == 0 and buf._layout is None
+    buf.add_encoded(q.encode(tree, jax.random.PRNGKey(1)))  # must not raise
+    assert buf.full
+
+
+def test_packed_buffer_requires_packed_format():
+    q = make_quantizer("qsgd4")
+    buf = UpdateBuffer(capacity=2, quantizer=q)
+    with pytest.raises(ValueError):
+        buf.add_encoded(q.encode_leafwise({"w": jnp.ones((8,))},
+                                          jax.random.PRNGKey(0)))
+    with pytest.raises(RuntimeError):
+        UpdateBuffer(capacity=2).add_encoded(
+            q.encode({"w": jnp.ones((8,))}, jax.random.PRNGKey(0)))
+
+
+def test_qafel_receive_is_decode_free_until_flush():
+    """QAFeL.receive buffers raw wire tensors; dense f32 appears only at flush."""
+    def loss(params, batch, key):
+        return jnp.sum((params["w"] - batch["t"]) ** 2)
+
+    qcfg = QAFeLConfig(client_lr=0.1, buffer_size=3, local_steps=1,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+    algo = QAFeL(qcfg, loss, {"w": jnp.zeros((300,), jnp.float32)})
+    key = jax.random.PRNGKey(0)
+    for i in range(3):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        b = {"t": jax.random.normal(k1, (1, 300))}
+        msg, _ = algo.run_client(b, k2)
+        assert msg.payload["format"] == "packed"
+        bmsg = algo.receive(msg, k3)
+        if i < 2:
+            assert bmsg is None
+            assert algo.buffer._acc is None
+            assert len(algo.buffer._packed) == i + 1
+            # stored as uint8 codes + f32 bucket norms, nothing model-sized
+            for p, nm in algo.buffer._packed:
+                assert p.dtype == jnp.uint8 and nm.dtype == jnp.float32
+    assert bmsg is not None and algo.buffer.count == 0
+
+
+# ---------------------------------------------------------------------------
+# Broadcast fan-out metering (regression: n_receivers was never plumbed)
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_meter_counts_fanout():
+    meter = TrafficMeter()
+    up = Message(kind=CLIENT_UPDATE, payload=None, wire_bytes=100.0)
+    bc = Message(kind=HIDDEN_BROADCAST, payload=None, wire_bytes=40.0)
+    meter.record(up)
+    meter.record(bc, n_receivers=7)
+    meter.record(bc, n_receivers=3)
+    s = meter.summary()
+    assert s["upload_MB"] * 1e6 == 100.0
+    assert s["broadcast_MB"] * 1e6 == 40.0 * 7 + 40.0 * 3
+    assert s["kB_per_broadcast"] * 1e3 == 40.0
+    assert s["mean_broadcast_fanout"] == 5.0
+
+
+def test_simulator_broadcast_accounts_fanout():
+    """With C concurrent clients, downlink MB must exceed uploads-per-flush
+    times the single-copy broadcast size — the old meter undercounted by the
+    whole fan-out factor."""
+    from repro.sim import AsyncFLSimulator, SimConfig
+
+    def loss(params, batch, key):
+        return jnp.sum((params["w"] - batch["t"]) ** 2)
+
+    qcfg = QAFeLConfig(client_lr=0.05, buffer_size=4, local_steps=1,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+    algo = QAFeL(qcfg, loss, {"w": jnp.zeros((256,), jnp.float32)})
+
+    def client_batches(cid, key):
+        return {"t": jax.random.normal(key, (1, 256))}
+
+    sim = AsyncFLSimulator(
+        algo, SimConfig(concurrency=6, max_uploads=24, eval_every_steps=100,
+                        track_hidden_replicas=1),
+        client_batches, lambda p: 0.0)
+    res = sim.run()
+    m = res.metrics
+    assert m["replicas_in_sync"]
+    assert m["mean_broadcast_fanout"] > 1.0  # concurrency 6 -> real fan-out
+    single_copy = m["kB_per_broadcast"] * 1e3 * m["broadcasts"]
+    assert m["broadcast_MB"] * 1e6 == pytest.approx(
+        single_copy * m["mean_broadcast_fanout"], rel=1e-6)

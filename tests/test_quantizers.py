@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.quantizers import QuantizerSpec, make_quantizer
 
@@ -107,60 +106,5 @@ def test_qsgd_deterministic_given_key():
     k = jax.random.PRNGKey(42)
     e1 = q.encode({"x": x}, k)
     e2 = q.encode({"x": x}, k)
-    assert jnp.array_equal(e1["msgs"][0]["packed"], e2["msgs"][0]["packed"])
-
-
-# ---------------------------------------------------------------------------
-# Hypothesis property tests
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=20, deadline=None)
-@given(d=st.integers(min_value=1, max_value=2000),
-       bits=st.sampled_from([2, 4, 8]),
-       seed=st.integers(min_value=0, max_value=2**31 - 1))
-def test_qsgd_per_coordinate_error_bound(d, bits, seed):
-    """|deq - x|_i <= bucket_norm / s pointwise (stochastic rounding bound)."""
-    spec = QuantizerSpec("qsgd", bits=bits)
-    q = make_quantizer(spec)
-    x = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
-    e = q.qdq_leaf(x, jax.random.PRNGKey(seed + 1))
-    s = spec.levels
-    b = spec.bucket_size
-    pad = (-d) % b
-    xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, b)
-    ep = np.pad(np.asarray(e), (0, pad)).reshape(-1, b)
-    norms = np.linalg.norm(xp, axis=1, keepdims=True)
-    step = norms / s
-    assert (np.abs(ep - xp) <= step + 1e-5).all()
-
-
-@settings(max_examples=20, deadline=None)
-@given(d=st.integers(min_value=2, max_value=500),
-       frac=st.floats(min_value=0.01, max_value=1.0),
-       seed=st.integers(min_value=0, max_value=2**31 - 1))
-def test_topk_keeps_largest(d, frac, seed):
-    import math
-    q = make_quantizer(QuantizerSpec("top_k", fraction=frac))
-    x = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
-    e = np.asarray(q.qdq_leaf(x, jax.random.PRNGKey(0)))
-    k = max(1, math.ceil(frac * d))
-    kept = np.flatnonzero(e != 0)
-    assert len(kept) <= k
-    # every kept coordinate is >= every dropped coordinate in magnitude
-    if len(kept) and len(kept) < d:
-        dropped = np.setdiff1d(np.arange(d), kept)
-        assert np.abs(np.asarray(x))[kept].min() >= np.abs(np.asarray(x))[dropped].max() - 1e-6
-
-
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
-def test_rand_k_scaled_unbiased(seed):
-    """E[Q(x)] = x for scaled rand_k. The estimator's per-coordinate std is
-    |x_i| sqrt((d/k - 1)/N); the bound is 5 sigma of the max coordinate."""
-    q = make_quantizer(QuantizerSpec("rand_k", fraction=0.25, scaled=True))
-    x = jax.random.normal(jax.random.PRNGKey(seed), (64,), jnp.float32)
-    n = 400
-    recon = jnp.stack([q.qdq_leaf(x, jax.random.PRNGKey(i)) for i in range(n)])
-    bound = 5.0 * float(jnp.abs(x).max()) * (3.0 / n) ** 0.5
-    assert float(jnp.abs(recon.mean(0) - x).max()) < bound
+    assert jnp.array_equal(e1["packed"], e2["packed"])
+    assert jnp.array_equal(e1["norms"], e2["norms"])

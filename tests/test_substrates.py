@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro import configs as config_registry
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint

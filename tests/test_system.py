@@ -65,8 +65,13 @@ def test_byte_metering_matches_quantizer_spec(setup):
     assert abs(res.metrics["upload_MB"] * 1e6 / res.uploads - expected_up) \
         < 0.02 * expected_up
     # broadcast uses the 8-bit server quantizer: bigger messages than 4-bit up
-    per_bcast = res.metrics["broadcast_MB"] * 1e6 / res.metrics["broadcasts"]
+    # (kB_per_broadcast is the single-copy message size; broadcast_MB would be
+    # fan-out-inflated and pass even for a too-small server quantizer)
+    per_bcast = res.metrics["kB_per_broadcast"] * 1e3
     assert per_bcast > expected_up
+    # and downlink accounting includes the fan-out factor on top of that
+    assert res.metrics["broadcast_MB"] * 1e6 >= \
+        per_bcast * res.metrics["broadcasts"]
 
 
 def test_quantized_vs_fullprecision_same_protocol(setup):
