@@ -14,7 +14,7 @@ import numpy as np
 from repro.core import QAFeL, QAFeLConfig
 from repro.data import FederatedPartition, SyntheticCelebA
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
-from repro.sim import AsyncFLSimulator, SimConfig
+from repro.sim import AsyncFLSimulator, CohortAsyncFLSimulator, SimConfig
 
 TARGET_ACC = 0.90  # the paper's target validation accuracy
 
@@ -63,17 +63,35 @@ def make_task(n_samples: int = 3000, n_clients: int = 300, seed: int = 0,
 def run_protocol(task: Task, cq: str, sq: str, *, concurrency: int = 16,
                  max_uploads: int = 400, buffer_k: int = 10,
                  target: Optional[float] = TARGET_ACC, seed: int = 0,
-                 local_steps: int = 2) -> Dict[str, float]:
-    """One (quantizer-config, concurrency) cell of the paper's experiments."""
+                 local_steps: int = 2, engine: str = "sequential",
+                 scenario: str = "identity",
+                 cohort_size: int = 16) -> Dict[str, float]:
+    """One (quantizer-config, concurrency) cell of the paper's experiments.
+
+    ``engine`` selects the reference sequential simulator or the vectorized
+    cohort engine; ``scenario`` names a client-heterogeneity preset from
+    ``repro.sim.scenarios.SCENARIOS`` (cohort engine only — the sequential
+    reference implements exactly the identity scenario).
+    """
     qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
                        buffer_size=buffer_k, local_steps=local_steps,
                        client_quantizer=cq, server_quantizer=sq)
     algo = QAFeL(qcfg, task.loss_fn, task.params0)
-    sim = AsyncFLSimulator(
-        algo, SimConfig(concurrency=concurrency, max_uploads=max_uploads,
+    sim_cfg = SimConfig(concurrency=concurrency, max_uploads=max_uploads,
                         eval_every_steps=3, target_accuracy=target, seed=seed,
-                        track_hidden_replicas=1),
-        task.client_batches, task.eval_fn)
+                        track_hidden_replicas=1)
+    if engine == "cohort":
+        sim = CohortAsyncFLSimulator(algo, sim_cfg, task.client_batches,
+                                     task.eval_fn, scenario=scenario,
+                                     cohort_size=cohort_size)
+    elif engine == "sequential":
+        if scenario != "identity":
+            raise ValueError("the sequential engine only implements the "
+                             "identity scenario; use engine='cohort'")
+        sim = AsyncFLSimulator(algo, sim_cfg, task.client_batches,
+                               task.eval_fn)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
     t0 = time.time()
     res = sim.run()
     m = res.metrics

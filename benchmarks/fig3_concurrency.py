@@ -12,7 +12,14 @@ from __future__ import annotations
 from benchmarks.common import make_task, run_protocol
 
 
-def run(max_uploads: int = 300, target: float = 0.88):
+def run(max_uploads: int = 300, target: float = 0.88,
+        scenario: str = "identity", engine: str = None,
+        cohort_size: int = 16):
+    """Concurrency sweep; pass any name from repro.sim.scenarios.SCENARIOS
+    to rerun the figure under that heterogeneity regime (non-identity
+    scenarios force the cohort engine)."""
+    if engine is None:
+        engine = "sequential" if scenario == "identity" else "cohort"
     task = make_task(seed=1)
     rows = []
     for conc in (8, 16, 32):
@@ -20,7 +27,8 @@ def run(max_uploads: int = 300, target: float = 0.88):
                                ("qafel_4bit", ("qsgd4", "qsgd4"))]:
             r = run_protocol(task, cq, sq, concurrency=conc,
                              max_uploads=max_uploads, target=target,
-                             buffer_k=10)
+                             buffer_k=10, engine=engine, scenario=scenario,
+                             cohort_size=cohort_size)
             rows.append((f"conc{conc}/{name}", r))
     return rows
 

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import QAFeL, QAFeLConfig
 from repro.data import FederatedPartition, SyntheticCelebA
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
-from repro.sim import AsyncFLSimulator, SimConfig
+from repro.sim import AsyncFLSimulator, CohortAsyncFLSimulator, SimConfig
 
 
 def main():
@@ -25,7 +25,15 @@ def main():
     ap.add_argument("--uploads", type=int, default=400)
     ap.add_argument("--concurrency", type=int, default=16)
     ap.add_argument("--target", type=float, default=0.90)
+    ap.add_argument("--engine", choices=["sequential", "cohort"],
+                    default="sequential")
+    ap.add_argument("--scenario", default="identity",
+                    help="scenario name (cohort engine only); see "
+                         "repro.sim.scenarios.SCENARIOS")
+    ap.add_argument("--cohort-size", type=int, default=8)
     args = ap.parse_args()
+    if args.scenario != "identity" and args.engine != "cohort":
+        ap.error("--scenario requires --engine cohort")
 
     ds = SyntheticCelebA(n_samples=3000)
     part = FederatedPartition(labels=ds.labels, n_clients=300)
@@ -53,11 +61,15 @@ def main():
                            buffer_size=10, local_steps=2,
                            client_quantizer=cq, server_quantizer=sq)
         algo = QAFeL(qcfg, loss_fn, params0)
-        sim = AsyncFLSimulator(
-            algo, SimConfig(concurrency=args.concurrency,
-                            max_uploads=args.uploads, eval_every_steps=3,
-                            target_accuracy=args.target),
-            client_batches, eval_fn)
+        scfg = SimConfig(concurrency=args.concurrency,
+                         max_uploads=args.uploads, eval_every_steps=3,
+                         target_accuracy=args.target)
+        if args.engine == "cohort":
+            sim = CohortAsyncFLSimulator(algo, scfg, client_batches, eval_fn,
+                                         scenario=args.scenario,
+                                         cohort_size=args.cohort_size)
+        else:
+            sim = AsyncFLSimulator(algo, scfg, client_batches, eval_fn)
         res = sim.run()
         m = res.metrics
         print(f"\n== {name} ==")

@@ -24,6 +24,7 @@ import dataclasses
 from typing import Any, List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.tree import tree_axpy, tree_scale
 from repro.core.quantizers import Quantizer, TreeLayout
@@ -112,9 +113,15 @@ class UpdateBuffer:
         if kind == "qsgd":
             # One fused kernel pass: dequantize + weighted accumulate of all K
             # messages, with staleness weights and the 1/denom normalization
-            # folded into the kernel's weights vector.
-            stack = jnp.stack([p for p, _ in self._packed])
-            norms = jnp.stack([nm for _, nm in self._packed])
+            # folded into the kernel's weights vector. Cohort-encoded wire
+            # payloads are numpy (host bytes): stack them host-side — one
+            # transfer into the kernel call instead of K device stacks.
+            if all(isinstance(p, np.ndarray) for p, _ in self._packed):
+                stack = np.stack([p for p, _ in self._packed])
+                norms = np.stack([nm for _, nm in self._packed])
+            else:
+                stack = jnp.stack([p for p, _ in self._packed])
+                norms = jnp.stack([nm for _, nm in self._packed])
             w = jnp.asarray(self._weights, jnp.float32) / denom
             flat = kops.buffer_aggregate(stack, norms, w, self._bits, self._n)
         elif kind == "identity":

@@ -34,8 +34,12 @@ class Message:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
-def encode_message(kind: str, quantizer: Quantizer, tree, key, **meta) -> Message:
-    enc = quantizer.encode(tree, key)
+def encode_message(kind: str, quantizer: Quantizer, tree, key, *,
+                   fast: bool = False, **meta) -> Message:
+    """Frame one encoded pytree. ``fast=True`` routes through the batched
+    kernel entry's in-kernel dither (``Quantizer.encode_fast``) — same wire
+    format, used on the server's flush hot path."""
+    enc = quantizer.encode_fast(tree, key) if fast else quantizer.encode(tree, key)
     return Message(kind=kind, payload=enc,
                    wire_bytes=quantizer.wire_bytes_packed(enc["layout"]),
                    meta=dict(meta))

@@ -45,6 +45,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.tree import split_key_tree
 
@@ -337,6 +338,90 @@ class Quantizer:
                 vals = vals * (n / k)
         return {"format": "packed", "kind": spec.kind, "idx": idx.astype(jnp.int32),
                 "vals": vals, "n": n, "layout": layout}
+
+    def encode_batch(self, stacked_tree, keys) -> list:
+        """Encode a cohort of B deltas (leaves stacked on a leading B axis,
+        e.g. the output of a vmap'ed client update) as B packed messages.
+
+        For qsgd the whole (B, d) stack goes through ONE batched quantize-pack
+        kernel dispatch (``kops.qsgd_quantize_batch``) whose stochastic-
+        rounding dither is generated in-kernel from each message's key, so
+        B > 1 messages differ bit-wise from ``encode``'s threefry dither
+        (same wire format, unbiasedness and error bound). A cohort of one IS
+        a single message: B == 1 delegates to ``encode`` and is bit-identical
+        to the sequential path — the seeded-equivalence anchor. ``keys`` is a
+        (B, ...) stack of per-message PRNG keys. Returns a list of B message
+        dicts in the packed wire format ``encode`` produces.
+        """
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        spec = self.spec
+        leaves = jax.tree.leaves(stacked_tree)
+        if not leaves:
+            raise ValueError("encode_batch needs a non-empty tree")
+        b = int(leaves[0].shape[0])
+        if b == 1:
+            return [self.encode(jax.tree.map(lambda l: l[0], stacked_tree),
+                                jnp.asarray(keys)[0])]
+        layout = TreeLayout.of(jax.tree.map(lambda l: l[0], stacked_tree))
+        if len(leaves) == 1:
+            flat2d = leaves[0].reshape(b, -1).astype(jnp.float32)
+        else:
+            flat2d = jnp.concatenate(
+                [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+        n = int(flat2d.shape[1])
+        keys = jnp.asarray(keys)
+        # per-message payloads are handed back as numpy: the host-level wire
+        # format is plain bytes, and numpy slicing is a view, not one
+        # dispatched device op per message
+        if spec.kind == "identity":
+            flat2d = np.asarray(flat2d)
+            return [{"format": "packed", "kind": "identity", "payload": flat2d[i],
+                     "n": n, "layout": layout} for i in range(b)]
+        if spec.kind == "qsgd":
+            packed, norms = kops.qsgd_quantize_batch(flat2d, keys, spec.bits)
+            packed, norms = np.asarray(packed), np.asarray(norms)
+            return [{"format": "packed", "kind": "qsgd", "packed": packed[i],
+                     "norms": norms[i], "bits": spec.bits, "n": n,
+                     "layout": layout} for i in range(b)]
+        k = max(1, math.ceil(spec.fraction * n))
+        if spec.kind == "top_k":
+            idx = jnp.argsort(-jnp.abs(flat2d), axis=1)[:, :k]
+            vals = jnp.take_along_axis(flat2d, idx, axis=1)
+        else:  # rand_k: independent index draws per message
+            idx = jax.vmap(
+                lambda kk: jax.random.choice(kk, n, shape=(k,), replace=False)
+            )(keys)
+            vals = jnp.take_along_axis(flat2d, idx, axis=1)
+            if spec.scaled:
+                vals = vals * (n / k)
+        idx = np.asarray(idx.astype(jnp.int32))
+        vals = np.asarray(vals)
+        return [{"format": "packed", "kind": spec.kind,
+                 "idx": idx[i], "vals": vals[i], "n": n,
+                 "layout": layout} for i in range(b)]
+
+    def encode_fast(self, tree, key) -> dict:
+        """Single-message encode through the batched kernel entry.
+
+        Same packed wire format as ``encode``, but the stochastic-rounding
+        dither is the batched kernel's in-kernel counter hash — no host-side
+        threefry pass and no per-cell interpret machinery off-TPU. Used on
+        the server's flush hot path (one hidden-state broadcast per K
+        uploads). Non-qsgd quantizers have no kernel in the loop and simply
+        delegate to ``encode``.
+        """
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        if self.spec.kind != "qsgd":
+            return self.encode(tree, key)
+        flat, layout = flatten_tree(tree)
+        n = int(flat.size)
+        packed, norms = kops.qsgd_quantize_batch(
+            flat[None], jnp.asarray(key).reshape(1, -1), self.spec.bits)
+        return {"format": "packed", "kind": "qsgd", "packed": packed[0],
+                "norms": norms[0], "bits": self.spec.bits, "n": n,
+                "layout": layout}
 
     def decode_flat(self, enc) -> jnp.ndarray:
         """Dequantize a packed message to its flat f32 vector (no unflatten)."""

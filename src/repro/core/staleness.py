@@ -29,6 +29,10 @@ class StalenessMonitor:
     history: List[int] = dataclasses.field(default_factory=list)
 
     def observe(self, tau: int) -> None:
+        if tau < 0:
+            raise ValueError(
+                f"negative staleness {tau}: the update claims a model version "
+                "newer than the server's (clock skew or replay)")
         if self.max_allowed and tau > self.max_allowed:
             raise RuntimeError(
                 f"staleness {tau} exceeds tau_max={self.max_allowed} "

@@ -12,6 +12,11 @@ norms) through VMEM, dequantizes each in registers, and accumulates
 in one pass (w_k carries both the 1/K mean and FedBuff's staleness
 down-weighting 1/sqrt(1+tau_k)). One HBM read of K * bits/32 of the f32
 footprint + one write — the minimum traffic the server step can do.
+
+Off-TPU the pallas interpreter's per-cell block copies dominate the
+memory-bound body, so ``buffer_aggregate`` routes the SAME reduction as one
+XLA-fused computation (identical fori_loop accumulation order — bit-exact
+vs the interpreted kernel; ``force_pallas=True`` pins it in tests).
 """
 from __future__ import annotations
 
@@ -24,8 +29,10 @@ from jax.experimental import pallas as pl
 from repro.kernels.qsgd import BLOCK_ROWS, LANES
 
 
-def _buffer_agg_kernel(w_ref, p_ref, n_ref, out_ref, *, bits: int, k: int):
-    """w (K, 1); p (K, R, 128/per_byte) uint8; n (K, R, 1) -> out f32 (R, 128)."""
+def _weighted_dequant_sum(w, p, n3, *, bits: int, k: int, rows: int):
+    """Shared reduction body: sum_k w[k,0] * dequant(p[k], n3[k]) -> (rows,
+    128) f32. ``w``/``p``/``n3`` may be arrays or pallas refs (indexed per
+    k); accumulation is an ascending-k fori_loop on both routes."""
     s = (1 << (bits - 1)) - 1
     per_byte = 8 // bits
     code_mask = jnp.uint32((1 << bits) - 1)
@@ -33,36 +40,55 @@ def _buffer_agg_kernel(w_ref, p_ref, n_ref, out_ref, *, bits: int, k: int):
     shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(1, 1, per_byte)
 
     def body(i, acc):
-        p = p_ref[i].astype(jnp.uint32)  # (R, LANES/per_byte)
-        r = p.shape[0]
-        codes = ((p[:, :, None] >> shifts) & code_mask).reshape(r, LANES)
+        pi = p[i].astype(jnp.uint32)  # (rows, LANES/per_byte)
+        codes = ((pi[:, :, None] >> shifts) & code_mask).reshape(rows, LANES)
         mag = (codes & mag_mask).astype(jnp.float32)
         sign = 1.0 - 2.0 * ((codes >> (bits - 1)) & 1).astype(jnp.float32)
-        scale = w_ref[i, 0] * n_ref[i] / float(s)  # (R, 1): weight * norms / s
+        scale = w[i, 0] * n3[i] / float(s)  # (rows, 1): weight * norms / s
         return acc + sign * mag * scale
 
-    out_ref[...] = jax.lax.fori_loop(
-        0, k, body, jnp.zeros((p_ref.shape[1], LANES), jnp.float32))
+    return jax.lax.fori_loop(0, k, body,
+                             jnp.zeros((rows, LANES), jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def _buffer_agg_kernel(w_ref, p_ref, n_ref, out_ref, *, bits: int, k: int):
+    """w (K, 1); p (K, R, 128/per_byte) uint8; n (K, R, 1) -> out f32 (R, 128)."""
+    out_ref[...] = _weighted_dequant_sum(w_ref, p_ref, n_ref, bits=bits, k=k,
+                                         rows=p_ref.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "force_pallas"))
 def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
                      weights: jnp.ndarray, bits: int,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret: bool = True,
+                     force_pallas: bool = False) -> jnp.ndarray:
     """Fused weighted dequantized sum of K packed messages.
 
-    packed_stack: (K, rows, 128*bits//8) uint8, rows % BLOCK_ROWS == 0
+    packed_stack: (K, rows, 128*bits//8) uint8 wire-layout codes
     norms:        (K, rows) f32 per-row bucket norms
     weights:      (K,) f32 aggregation weights (mean + staleness scaling)
     returns:      (rows, 128) f32 == sum_k weights[k] * dequant(msg_k)
+
+    The pallas route needs rows padded to a BLOCK_ROWS multiple (done here,
+    zero rows are numerically inert and sliced off); the fused off-TPU
+    route takes wire rows as they come.
     """
     k, rows, in_lanes = packed_stack.shape
     per_byte = 8 // bits
-    assert in_lanes == LANES // per_byte and rows % BLOCK_ROWS == 0
+    assert in_lanes == LANES // per_byte, packed_stack.shape
     w = weights.reshape(k, 1).astype(jnp.float32)
     n3 = norms.reshape(k, rows, 1).astype(jnp.float32)
-    grid = (rows // BLOCK_ROWS,)
-    return pl.pallas_call(
+    if interpret and not force_pallas:
+        return _weighted_dequant_sum(w, packed_stack, n3, bits=bits, k=k,
+                                     rows=rows)
+    rpad = (-rows) % BLOCK_ROWS
+    if rpad:
+        packed_stack = jnp.concatenate(
+            [packed_stack, jnp.zeros((k, rpad, in_lanes), jnp.uint8)], axis=1)
+        n3 = jnp.concatenate(
+            [n3, jnp.zeros((k, rpad, 1), jnp.float32)], axis=1)
+    grid = ((rows + rpad) // BLOCK_ROWS,)
+    out = pl.pallas_call(
         functools.partial(_buffer_agg_kernel, bits=bits, k=k),
         grid=grid,
         in_specs=[
@@ -71,6 +97,7 @@ def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
             pl.BlockSpec((k, BLOCK_ROWS, 1), lambda i: (0, i, 0)),
         ],
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows + rpad, LANES), jnp.float32),
         interpret=interpret,
     )(w, packed_stack, n3)
+    return out[:rows]

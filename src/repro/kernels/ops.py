@@ -1,14 +1,24 @@
 """Public jitted wrappers around the Pallas kernels.
 
-Handles arbitrary flat lengths (padding to (BLOCK_ROWS, 128) tiles), backend
-dispatch (interpret=True off-TPU so the kernel bodies execute in Python on
-CPU for correctness validation), and per-row bucket-norm bookkeeping.
+Handles backend dispatch (interpret=True off-TPU so the kernel bodies
+execute in Python on CPU for correctness validation) and the two layouts a
+message lives in:
+
+* **wire layout** — what travels and is stored in the server buffer:
+  ``rows_for(n) = ceil(n / 128)`` packed code rows + one fp32 bucket norm
+  per row. Sized to the message, no tile padding (a 2048-coordinate message
+  carries 16 rows, not a full kernel tile).
+* **kernel tile layout** — what the Pallas grid needs: rows padded to a
+  BLOCK_ROWS multiple. The padding (zero rows -> zero codes, numerically
+  inert) is applied here at dispatch time and sliced off the results; it
+  never reaches the wire or the buffer.
 
 These wrappers are the packed wire path's only kernel entry points: a whole
 pytree message is one flat vector, so ``qsgd_quantize`` is exactly one
 dispatch per message (one padding tail, not one per leaf), and the server
 buffer stacks the resulting (codes, norms) pairs verbatim for the single
-fused ``buffer_aggregate`` pass at flush time.
+fused ``buffer_aggregate`` pass at flush time. ``qsgd_quantize_batch``
+quantizes a whole client cohort's (B, n) stack in one dispatch.
 """
 from __future__ import annotations
 
@@ -29,42 +39,87 @@ def _interpret() -> bool:
 
 
 def padded_len(n: int) -> int:
+    """Length of the kernel-tile layout for an n-element message."""
     return ((n + TILE - 1) // TILE) * TILE
 
 
 def rows_for(n: int) -> int:
-    """Number of 128-lane rows (= bucket norms) a length-n message packs into."""
+    """Number of 128-lane rows (= bucket norms) a length-n message packs
+    into on the wire."""
+    return (n + BUCKET - 1) // BUCKET
+
+
+def tile_rows_for(n: int) -> int:
+    """Rows of the kernel-tile layout (wire rows padded to BLOCK_ROWS)."""
     return padded_len(n) // BUCKET
 
 
-def _to_tiles(flat: jnp.ndarray) -> jnp.ndarray:
-    n = flat.shape[0]
-    pad = padded_len(n) - n
+def _pad_rows(x2d: jnp.ndarray, tile_rows: int) -> jnp.ndarray:
+    """Pad a (rows, ...) array with zero rows up to the kernel tile layout."""
+    pad = tile_rows - x2d.shape[0]
     if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat.reshape(-1, _qsgd.LANES)
+        x2d = jnp.concatenate(
+            [x2d, jnp.zeros((pad,) + x2d.shape[1:], x2d.dtype)])
+    return x2d
 
 
 @functools.partial(jax.jit, static_argnames=("bits",))
 def qsgd_quantize(flat: jnp.ndarray, key, bits: int = 4):
     """Quantize a flat f32 vector.
 
-    Returns (packed uint8 (rows, 128*bits//8), norms f32 (rows,)) — one norm
-    per 128-element bucket. The packed payload covers the padded layout;
-    callers keep the true length to slice after dequantize. Padded tail
-    elements are zeros -> zero codes, numerically inert.
+    Returns (packed uint8 (rows, 128*bits//8), norms f32 (rows,)) in wire
+    layout — one norm per 128-element bucket, rows = ceil(n / 128). Callers
+    keep the true length n to slice after dequantize.
     """
     flat = flat.astype(jnp.float32)
-    x2d = _to_tiles(flat)
-    u2d = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    n = flat.shape[0]
+    rows, tile_rows = rows_for(n), tile_rows_for(n)
+    pad = rows * BUCKET - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    x2d = _pad_rows(flat.reshape(rows, BUCKET), tile_rows)
+    # dither only for wire rows; padded tail rows are zeros -> zero codes
+    # regardless of noise
+    u2d = _pad_rows(jax.random.uniform(key, (rows, BUCKET), dtype=jnp.float32),
+                    tile_rows)
     packed, norms = _qsgd.qsgd_quantize_pack(x2d, u2d, bits, interpret=_interpret())
-    return packed, norms.reshape(-1)
+    return packed[:rows], norms.reshape(-1)[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def qsgd_quantize_batch(flat_batch: jnp.ndarray, keys, bits: int = 4):
+    """Quantize a (B, n) stack of flat f32 messages in ONE kernel dispatch.
+
+    ``keys`` is a (B, 2) stack of PRNG keys, one per message; their raw
+    uint32 words seed the kernel's in-kernel counter-based dither
+    (independent noise per client, no host-side threefry pass — see
+    ``qsgd.qsgd_quantize_pack_batch``). The rounding noise therefore
+    differs from ``qsgd_quantize``'s threefry uniforms message-for-message,
+    but the wire format, unbiasedness and per-bucket error bound are
+    identical. Returns (packed uint8 (B, rows, 128*bits//8), norms f32
+    (B, rows)) in wire layout.
+    """
+    flat_batch = flat_batch.astype(jnp.float32)
+    b, n = flat_batch.shape
+    rows = rows_for(n)
+    pad = rows * BUCKET - n
+    if pad:
+        flat_batch = jnp.concatenate(
+            [flat_batch, jnp.zeros((b, pad), flat_batch.dtype)], axis=1)
+    x3d = flat_batch.reshape(b, rows, BUCKET)
+    seeds = jnp.asarray(keys).reshape(b, -1)[:, :2].astype(jnp.uint32)
+    packed, norms = _qsgd.qsgd_quantize_pack_batch(x3d, seeds, bits,
+                                                   interpret=_interpret())
+    return packed, norms.reshape(b, rows)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "n"))
 def qsgd_dequantize(packed: jnp.ndarray, norms: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
-    """Dequantize packed codes back to a flat f32 vector of length n."""
-    x2d = _qsgd.qsgd_unpack_dequantize(packed, norms, bits, interpret=_interpret())
+    """Dequantize wire-layout packed codes back to a flat f32 vector of
+    length n. (Kernel-tile padding, if the backend needs it, happens inside
+    the kernel wrapper.)"""
+    x2d = _qsgd.qsgd_unpack_dequantize(jnp.asarray(packed), jnp.asarray(norms),
+                                       bits, interpret=_interpret())
     return x2d.reshape(-1)[:n]
 
 
@@ -73,7 +128,9 @@ def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
                      weights: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
     """Fused weighted dequantized sum over the K buffered messages -> flat (n,).
 
-    norms: (K, rows) per-message bucket norms."""
-    out2d = _agg.buffer_aggregate(packed_stack, norms, weights, bits,
+    packed_stack: (K, rows, 128*bits//8) wire-layout codes
+    norms:        (K, rows) per-message bucket norms."""
+    out2d = _agg.buffer_aggregate(jnp.asarray(packed_stack),
+                                  jnp.asarray(norms), weights, bits,
                                   interpret=_interpret())
     return out2d.reshape(-1)[:n]

@@ -34,13 +34,13 @@ BLOCK_ROWS = 256  # (256, 128) fp32 block = 128 KiB in VMEM; well under budget
 # ---------------------------------------------------------------------------
 
 
-def _quantize_pack_kernel(x_ref, u_ref, out_ref, norm_ref, *, bits: int):
-    """One block: f32 (R, 128) + uniforms -> packed uint8 (R, 128/per_byte)
-    plus per-row norms (R, 1)."""
+def _quantize_pack_block(x, u, bits: int):
+    """Shared block math: f32 (R, 128) + uniforms -> (packed uint8
+    (R, 128/per_byte), norms f32 (R, 1)). Used by both the single-message
+    and the batched kernel so the two are bit-identical per row."""
     s = (1 << (bits - 1)) - 1
     per_byte = 8 // bits
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...]
+    x = x.astype(jnp.float32)
     norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))  # (R, 1)
     inv = jnp.where(norm > 0.0, s / jnp.maximum(norm, 1e-30), 0.0)
 
@@ -54,7 +54,15 @@ def _quantize_pack_kernel(x_ref, u_ref, out_ref, norm_ref, *, bits: int):
     r = code.shape[0]
     grouped = code.reshape(r, LANES // per_byte, per_byte)
     shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(1, 1, per_byte)
-    out_ref[...] = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    packed = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    return packed, norm
+
+
+def _quantize_pack_kernel(x_ref, u_ref, out_ref, norm_ref, *, bits: int):
+    """One block: f32 (R, 128) + uniforms -> packed uint8 (R, 128/per_byte)
+    plus per-row norms (R, 1)."""
+    packed, norm = _quantize_pack_block(x_ref[...], u_ref[...], bits)
+    out_ref[...] = packed
     norm_ref[...] = norm
 
 
@@ -91,37 +99,180 @@ def qsgd_quantize_pack(x2d: jnp.ndarray, u2d: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Batched quantize + pack (one dispatch for a whole client cohort)
+# ---------------------------------------------------------------------------
+
+
+# messages per grid cell of the batched kernel: an (8, 256, 128) f32 block is
+# 1 MiB in VMEM (x + outputs ~ 1.3 MiB, well under budget), and 8x fewer
+# grid steps than one-message-per-cell.
+BATCH_TILE = 8
+
+
+def _hash_uniform(seed0, seed1, idx):
+    """Counter-based dither: uint32 (seed0, seed1, element index) -> f32 in
+    [0, 1). Two murmur3-style finalizer rounds (xorshift-multiply avalanche)
+    keyed by the per-message seed — the in-kernel analogue of
+    ``pltpu.prng_random_bits``, so the batched kernel needs no host-generated
+    uniforms (no threefry precompute, half the HBM reads). Plain uint32
+    jnp arithmetic: identical on the pallas and fused-XLA routes.
+    """
+    def fmix32(x):
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(0x85EBCA6B)
+        x = x ^ (x >> 13)
+        x = x * jnp.uint32(0xC2B2AE35)
+        x = x ^ (x >> 16)
+        return x
+
+    x = fmix32(idx * jnp.uint32(0x9E3779B9) + seed0)
+    x = fmix32(x ^ seed1)
+    # top 24 bits -> [0, 1): exactly representable in f32
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _quantize_pack_batch_block(x, seed0, seed1, row_offset, bits: int):
+    """Shared batched block math: f32 (BT, R, 128) + per-message seeds (BT,)
+    -> (packed uint8 (BT, R, 128/per_byte), norms (BT, R, 1)). Dither is
+    generated in-kernel from the global element index, so a message's codes
+    do not depend on how the batch is tiled."""
+    bt, r, lanes = x.shape
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (bt, r, lanes), 2)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (bt, r, lanes), 1)
+    idx = (row + jnp.uint32(row_offset)) * jnp.uint32(lanes) + lane
+    u = _hash_uniform(seed0.reshape(bt, 1, 1).astype(jnp.uint32),
+                      seed1.reshape(bt, 1, 1).astype(jnp.uint32), idx)
+    packed, norm = _quantize_pack_block(x.reshape(bt * r, lanes),
+                                        u.reshape(bt * r, lanes), bits)
+    return packed.reshape(bt, r, -1), norm.reshape(bt, r, 1)
+
+
+def _quantize_pack_batch_kernel(x_ref, seed_ref, out_ref, norm_ref, *, bits: int):
+    """One (message-tile, row-block) grid cell; seed_ref is (BT, 2) uint32."""
+    row_offset = pl.program_id(1) * BLOCK_ROWS
+    packed, norm = _quantize_pack_batch_block(
+        x_ref[...], seed_ref[:, 0], seed_ref[:, 1], row_offset, bits)
+    out_ref[...] = packed
+    norm_ref[...] = norm
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "force_pallas"))
+def qsgd_quantize_pack_batch(x3d: jnp.ndarray, seeds: jnp.ndarray,
+                             bits: int, interpret: bool = True,
+                             force_pallas: bool = False):
+    """Quantize+pack a (B, rows, 128) stack of messages in ONE dispatch.
+
+    ``seeds`` is (B, 2) uint32 — one dither seed pair per message; the
+    stochastic-rounding noise is generated *in-kernel* by a counter-based
+    hash (``_hash_uniform``), so unlike the single-message kernel there is
+    no host-side threefry pass and no uniforms input (half the HBM reads).
+
+    On TPU (``interpret=False``) this is one pallas launch with grid
+    (B / BATCH_TILE, rows / BLOCK_ROWS), each cell streaming a BATCH_TILE-
+    message tile through VMEM. Off-TPU the interpreter's per-cell block
+    copies dominate, so the batched entry routes the SAME block math as one
+    XLA-fused computation over the whole stack — bit-identical to the
+    pallas route by construction (``force_pallas=True`` exercises the
+    interpreted pallas path; a test pins the equality). Returns (packed
+    uint8 (B, rows, 128*bits//8), norms f32 (B, rows, 1)).
+    """
+    b, rows, lanes = x3d.shape
+    assert lanes == LANES, x3d.shape
+    assert seeds.shape == (b, 2), seeds.shape
+    assert 8 % bits == 0, bits
+    per_byte = 8 // bits
+    out_lanes = LANES // per_byte
+    if interpret and not force_pallas:
+        packed, norm = _quantize_pack_batch_block(
+            x3d, seeds[:, 0], seeds[:, 1], 0, bits)
+        return packed, norm
+    # pad to full kernel tiles: batch to a BATCH_TILE multiple with zero
+    # messages, rows to a BLOCK_ROWS multiple with zero rows (zero codes,
+    # numerically inert; sliced off below)
+    rpad = (-rows) % BLOCK_ROWS
+    if rpad:
+        x3d = jnp.concatenate(
+            [x3d, jnp.zeros((b, rpad, lanes), x3d.dtype)], axis=1)
+    bpad = (-b) % BATCH_TILE
+    if bpad:
+        x3d = jnp.concatenate(
+            [x3d, jnp.zeros((bpad, rows + rpad, lanes), x3d.dtype)])
+        seeds = jnp.concatenate(
+            [seeds, jnp.zeros((bpad, 2), seeds.dtype)])
+    grid = ((b + bpad) // BATCH_TILE, (rows + rpad) // BLOCK_ROWS)
+    packed, norms = pl.pallas_call(
+        functools.partial(_quantize_pack_batch_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BATCH_TILE, BLOCK_ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((BATCH_TILE, 2), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BATCH_TILE, BLOCK_ROWS, out_lanes),
+                         lambda i, j: (i, j, 0)),
+            pl.BlockSpec((BATCH_TILE, BLOCK_ROWS, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b + bpad, rows + rpad, out_lanes), jnp.uint8),
+            jax.ShapeDtypeStruct((b + bpad, rows + rpad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x3d, seeds)
+    return packed[:b, :rows], norms[:b, :rows]
+
+
+# ---------------------------------------------------------------------------
 # Unpack + dequantize
 # ---------------------------------------------------------------------------
 
 
-def _unpack_dequantize_kernel(p_ref, norm_ref, out_ref, *, bits: int):
-    """One block: packed uint8 (R, 128/per_byte) + norms (R, 1) -> f32 (R, 128)."""
+def _unpack_dequantize_block(p, norm2d, bits: int):
+    """Shared block math: packed uint8 (R, 128/per_byte) + norms (R, 1) ->
+    f32 (R, 128). Used by the kernel and the fused off-TPU route."""
     s = (1 << (bits - 1)) - 1
     per_byte = 8 // bits
     mag_mask = jnp.uint32(s)
     code_mask = jnp.uint32((1 << bits) - 1)
-    p = p_ref[...].astype(jnp.uint32)
+    p = p.astype(jnp.uint32)
     r = p.shape[0]
     shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(1, 1, per_byte)
     codes = ((p[:, :, None] >> shifts) & code_mask).reshape(r, LANES)
     mag = (codes & mag_mask).astype(jnp.float32)
     sign = 1.0 - 2.0 * ((codes >> (bits - 1)) & 1).astype(jnp.float32)
-    scale = norm_ref[...] / float(s)  # (R, 1), broadcasts over lanes
-    out_ref[...] = sign * mag * scale
+    scale = norm2d / float(s)  # (R, 1), broadcasts over lanes
+    return sign * mag * scale
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def _unpack_dequantize_kernel(p_ref, norm_ref, out_ref, *, bits: int):
+    """One block: packed uint8 (R, 128/per_byte) + norms (R, 1) -> f32 (R, 128)."""
+    out_ref[...] = _unpack_dequantize_block(p_ref[...], norm_ref[...], bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "force_pallas"))
 def qsgd_unpack_dequantize(packed: jnp.ndarray, norms: jnp.ndarray,
-                           bits: int, interpret: bool = True) -> jnp.ndarray:
-    """Inverse of qsgd_quantize_pack; returns f32 (rows, 128)."""
+                           bits: int, interpret: bool = True,
+                           force_pallas: bool = False) -> jnp.ndarray:
+    """Inverse of qsgd_quantize_pack; returns f32 (rows, 128).
+
+    Accepts wire-layout rows; the pallas route pads to BLOCK_ROWS tiles
+    internally (zero rows, sliced off). Off-TPU the shared block math runs
+    as one XLA-fused computation — bit-identical to the interpreted kernel
+    (``force_pallas=True`` exercises it)."""
     per_byte = 8 // bits
     in_lanes = LANES // per_byte
     rows = packed.shape[0]
-    assert packed.shape[1] == in_lanes and rows % BLOCK_ROWS == 0, packed.shape
-    grid = (rows // BLOCK_ROWS,)
+    assert packed.shape[1] == in_lanes, packed.shape
     norms2d = norms.reshape(rows, 1).astype(jnp.float32)
-    return pl.pallas_call(
+    if interpret and not force_pallas:
+        return _unpack_dequantize_block(packed, norms2d, bits)
+    rpad = (-rows) % BLOCK_ROWS
+    if rpad:
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((rpad, in_lanes), jnp.uint8)])
+        norms2d = jnp.concatenate(
+            [norms2d, jnp.zeros((rpad, 1), jnp.float32)])
+    grid = ((rows + rpad) // BLOCK_ROWS,)
+    out = pl.pallas_call(
         functools.partial(_unpack_dequantize_kernel, bits=bits),
         grid=grid,
         in_specs=[
@@ -129,6 +280,7 @@ def qsgd_unpack_dequantize(packed: jnp.ndarray, norms: jnp.ndarray,
             pl.BlockSpec((BLOCK_ROWS, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows + rpad, LANES), jnp.float32),
         interpret=interpret,
     )(packed, norms2d)
+    return out[:rows]

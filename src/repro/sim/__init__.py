@@ -1,1 +1,4 @@
-from repro.sim.events import AsyncFLSimulator, SimConfig
+from repro.sim.cohort import CohortAsyncFLSimulator
+from repro.sim.events import AsyncFLSimulator, SimConfig, SimResult
+from repro.sim.scenarios import (SCENARIOS, ScenarioConfig, ScenarioSampler,
+                                 get_scenario)

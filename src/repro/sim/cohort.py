@@ -1,0 +1,225 @@
+"""Vectorized cohort engine: the async FL timeline, batched over cohorts.
+
+The sequential ``AsyncFLSimulator`` trains exactly one client per Python
+iteration, so host wall-clock grows linearly with concurrency and the
+paper's concurrency 100/500/1000 sweeps are out of reach. This engine
+admits arrivals in **cohorts** of ``cohort_size``:
+
+* one ``jax.vmap``-ed, jitted ``client_update`` call trains the whole
+  cohort (per-client batches and PRNG keys stacked on a leading axis),
+* one batched quantize-pack kernel dispatch (``Quantizer.encode_batch`` →
+  ``kernels.ops.qsgd_quantize_batch``) turns all resulting deltas into
+  packed wire messages at once,
+* the packed messages feed ``QAFeL.receive`` / ``UpdateBuffer`` verbatim,
+  so the server stays decode-free between flushes exactly as in the
+  sequential path.
+
+**Cohort admission model** (see DESIGN.md): whenever the arrival process
+reaches the next pending completion, the next ``cohort_size`` arrivals are
+admitted *together* and all train from the hidden state as of admission.
+Members whose nominal arrival time falls after an intervening broadcast
+train on a slightly older state than the sequential engine would give them
+— extra staleness bounded by the cohort's arrival span, and exactly zero
+for ``cohort_size=1``, where the engine consumes the jax and numpy RNG
+streams in the sequential order and reproduces the sequential trajectory
+bit for bit (pinned by tests/test_cohort_engine.py).
+
+Timing, dropouts, stragglers and per-client quantizer tiers come from a
+``ScenarioConfig`` (``repro.sim.scenarios``); tiered clients that upload
+through a non-default quantizer are decoded eagerly on receipt (the
+default-tier majority stays packed).
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protocol import CLIENT_UPDATE, Message
+from repro.core.qafel import QAFeL, QAFeLConfig, client_update
+from repro.core.quantizers import make_quantizer
+from repro.sim.events import BaseAsyncSimulator, SimConfig, SimResult
+from repro.sim.scenarios import ScenarioConfig, ScenarioSampler, get_scenario
+
+
+@functools.lru_cache(maxsize=32)
+def _batched_client_update(loss_fn: Callable, qcfg: QAFeLConfig):
+    """jit(vmap(client_update)) cached by (loss_fn, qcfg) so repeated engine
+    instances (benchmark sweeps) compile the cohort step once. Bounded:
+    loss_fn closures can capture datasets (see qafel._jitted_client_update)."""
+    return jax.jit(jax.vmap(functools.partial(client_update, loss_fn, qcfg),
+                            in_axes=(None, 0, 0)))
+
+
+@jax.jit
+def _stack_trees(*trees):
+    """One jitted call stacks a whole cohort's batches (B eager
+    expand_dims+concat ops per cohort otherwise — dispatch-bound). Module
+    level so traces are shared across engine instances."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class CohortAsyncFLSimulator(BaseAsyncSimulator):
+    """Drives a QAFeL instance through the async timeline, cohort-batched."""
+
+    def __init__(self, algo: QAFeL, sim_cfg: SimConfig,
+                 client_batches_fn: Callable[[int, Any], Any],
+                 eval_fn: Callable[[Any], float],
+                 scenario: Union[str, ScenarioConfig] = "identity",
+                 cohort_size: int = 32):
+        super().__init__(algo, sim_cfg, client_batches_fn, eval_fn)
+        self.scenario = get_scenario(scenario)
+        self.cohort_size = max(1, int(cohort_size))
+        self.sampler = ScenarioSampler(self.scenario, sim_cfg.concurrency,
+                                       self.rng)
+        self.tier_quantizers = [make_quantizer(name)
+                                for _, name in self.scenario.tiers]
+        self._cohort_update = _batched_client_update(algo.loss_fn, algo.qcfg)
+        self.dropped = 0
+        self._receive_keys: List[Any] = []
+
+    def _next_receive_key(self):
+        """Per-delivery key for ``QAFeL.receive`` (used on flushes only).
+
+        cohort_size=1 draws sequentially for the bit-exact replay; larger
+        cohorts refill a batch of subkeys in one split so the per-upload
+        cost is one numpy pop, not one device op.
+        """
+        if self.cohort_size == 1:
+            return self._next_key()
+        if not self._receive_keys:
+            subs = jax.random.split(self.key, 65)
+            self.key = subs[0]
+            self._receive_keys = list(np.asarray(subs[1:]))
+        return self._receive_keys.pop()
+
+    # -- cohort admission -------------------------------------------------
+    def _encode_cohort(self, deltas, enc_keys, version: int) -> List[Message]:
+        """Batched encode of a cohort's stacked deltas, grouped by tier.
+
+        ``enc_keys`` is a (B, 2) key array. The default tier (the vast
+        majority unless the scenario says otherwise) is one ``encode_batch``
+        call — one kernel dispatch for the whole group; each non-default
+        tier gets its own batched call through its narrower quantizer.
+        """
+        b = int(enc_keys.shape[0])
+        tiers = self.sampler.tier_indices(b)
+        msgs: List[Any] = [None] * b
+        for tier in sorted(set(tiers.tolist())):
+            q = self.algo.cq if tier < 0 else self.tier_quantizers[tier]
+            members = np.nonzero(tiers == tier)[0]
+            if members.size == b:
+                sub, keys = deltas, enc_keys
+            else:
+                midx = jnp.asarray(members)
+                sub = jax.tree.map(lambda l: l[midx], deltas)
+                keys = enc_keys[midx]
+            encs = q.encode_batch(sub, keys)
+            wire = q.wire_bytes_packed(encs[0]["layout"])
+            for i, enc in zip(members.tolist(), encs):
+                msgs[i] = Message(kind=CLIENT_UPDATE, payload=enc,
+                                  wire_bytes=wire,
+                                  meta={"version": version})
+        return msgs
+
+    def _admit_cohort(self, next_arrival: float, next_client: int):
+        """Train + encode one cohort starting at ``next_arrival``.
+
+        Returns (messages, arrival_times, durations, drop_mask,
+        new_next_arrival). RNG streams are consumed in the sequential
+        engine's order (per client: batches key, client key; then the numpy
+        duration draws), so cohort_size=1 replays it exactly.
+        """
+        b = self.cohort_size
+        inter = self.sampler.interarrivals(b)
+        arrivals = next_arrival + np.concatenate(
+            [[0.0], np.cumsum(inter[:-1])])
+        new_next_arrival = float(arrivals[-1] + inter[-1])
+
+        if b == 1:
+            # sequential key order (batches key, then client key) so the
+            # identity-scenario replay is bit-exact
+            batch_keys = [self._next_key()]
+            k_train, k_enc = jax.random.split(self._next_key())
+            train_keys = k_train[None]
+            enc_keys = k_enc[None]
+        else:
+            # one split covers the whole cohort: 2B+1 subkeys in two device
+            # ops instead of 2B sequential splits
+            subs = jax.random.split(self.key, 2 * b + 1)
+            self.key = subs[0]
+            batch_keys = np.asarray(subs[1:b + 1])
+            te = jax.vmap(jax.random.split)(subs[b + 1:])
+            train_keys, enc_keys = te[:, 0], te[:, 1]
+        batches = [self.client_batches_fn(next_client + i, batch_keys[i])
+                   for i in range(b)]
+        stacked = _stack_trees(*batches)
+        deltas = self._cohort_update(self.algo.state.hidden.value, stacked,
+                                     train_keys)
+        msgs = self._encode_cohort(deltas, enc_keys, self.algo.state.t)
+        durations = self.sampler.durations(b)
+        drops = self.sampler.dropouts(b)
+        return msgs, arrivals, durations, drops, new_next_arrival
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg, algo = self.cfg, self.algo
+        heap: List[tuple] = []  # (finish_time, seq, client_id)
+        pending: Dict[int, Message] = {}
+        # speculatively admitted members may have nominal arrival times in
+        # the future; broadcast fan-out must only count clients actually
+        # training at the flush instant (arrival <= now, not yet delivered)
+        arrival_heap: List[float] = []
+        started = 0
+        delivered = 0
+        accuracy_trace: List[tuple] = []
+        uploads = 0
+        next_client = 0
+        next_arrival = 0.0
+        now = 0.0
+        self._last_eval_step = -1
+        reached = False
+        seq = 0
+
+        while uploads < cfg.max_uploads and not reached:
+            # admit cohorts until the arrival process passes the next
+            # completion (a dropped-out cohort may leave the heap empty, in
+            # which case admission continues until an upload survives)
+            next_finish = heap[0][0] if heap else math.inf
+            while next_arrival <= next_finish:
+                msgs, arrivals, durations, drops, next_arrival = \
+                    self._admit_cohort(next_arrival, next_client)
+                for i in range(self.cohort_size):
+                    if drops[i]:
+                        self.dropped += 1
+                        continue
+                    heapq.heappush(heap, (float(arrivals[i] + durations[i]),
+                                          seq, next_client + i))
+                    heapq.heappush(arrival_heap, float(arrivals[i]))
+                    pending[seq] = msgs[i]
+                    seq += 1
+                next_client += self.cohort_size
+                next_finish = heap[0][0] if heap else math.inf
+
+            now, s, cid = heapq.heappop(heap)
+            msg = pending.pop(s)
+            while arrival_heap and arrival_heap[0] <= now:
+                heapq.heappop(arrival_heap)
+                started += 1
+            delivered += 1
+            bmsg = algo.receive(msg, self._next_receive_key(),
+                                n_receivers=max(1, started - delivered))
+            uploads += 1
+
+            if bmsg is not None:
+                reached = self._apply_broadcast(bmsg, now, uploads,
+                                                accuracy_trace)
+
+        return self._finalize(reached=reached, uploads=uploads, now=now,
+                              accuracy_trace=accuracy_trace,
+                              dropped_uploads=self.dropped)

@@ -35,8 +35,7 @@ import numpy as np
 
 from repro.core.protocol import decode_message
 from repro.core.qafel import QAFeL, QAFeLConfig
-
-HALF_NORMAL_MEAN = math.sqrt(2.0 / math.pi)
+from repro.sim.scenarios import HALF_NORMAL_MEAN
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,8 +63,10 @@ class SimResult:
     final_accuracy: float
 
 
-class AsyncFLSimulator:
-    """Drives a QAFeL (or FedBuff) instance through an async event timeline."""
+class BaseAsyncSimulator:
+    """State and bookkeeping shared by the sequential and cohort engines:
+    seeded RNG streams, tracked hidden-state replicas, the decode-once
+    broadcast application + eval cadence, and final result assembly."""
 
     def __init__(self, algo: QAFeL, sim_cfg: SimConfig,
                  client_batches_fn: Callable[[int, Any], Any],
@@ -81,6 +82,7 @@ class AsyncFLSimulator:
         # replicas of the hidden state held by tracked "clients"
         self.replicas = [jax.tree.map(lambda a: a.copy(), algo.state.hidden.value)
                          for _ in range(sim_cfg.track_hidden_replicas)]
+        self._last_eval_step = -1
 
     def _next_key(self):
         self.key, sub = jax.random.split(self.key)
@@ -94,6 +96,53 @@ class AsyncFLSimulator:
                     return False
         return True
 
+    def _apply_broadcast(self, bmsg, now: float, uploads: int,
+                         accuracy_trace: List[tuple]) -> bool:
+        """Decode the packed broadcast ONCE; every tracked replica applies
+        the identical decoded increment (Algorithm 3) — which is exactly
+        what keeps them bit-identical to the server. Evaluates on the
+        server-step cadence; returns True when the target accuracy is hit.
+        """
+        q = decode_message(self.algo.sq, bmsg)
+        self.replicas = [jax.tree.map(lambda a, d: a + d, rep, q)
+                         for rep in self.replicas]
+        step = self.algo.state.t
+        if step - self._last_eval_step >= self.cfg.eval_every_steps:
+            acc = float(self.eval_fn(self.algo.state.x))
+            accuracy_trace.append((now, uploads, step, acc))
+            self._last_eval_step = step
+            if self.cfg.target_accuracy and acc >= self.cfg.target_accuracy:
+                return True
+        return False
+
+    def _finalize(self, *, reached: bool, uploads: int, now: float,
+                  accuracy_trace: List[tuple], **extra_metrics) -> SimResult:
+        """Always evaluate the final server model: a run ending between
+        flushes (max_uploads < buffer_size, or any tail of uploads since
+        the last eval'd flush) would otherwise report a stale accuracy —
+        0.0 if no flush ever evaluated."""
+        final_acc = float(self.eval_fn(self.algo.state.x))
+        if not accuracy_trace or accuracy_trace[-1][1] != uploads:
+            accuracy_trace.append((now, uploads, self.algo.state.t, final_acc))
+        metrics = self.algo.metrics()
+        metrics["replicas_in_sync"] = self.verify_replicas()
+        metrics.update(extra_metrics)
+        return SimResult(
+            reached_target=reached,
+            uploads=uploads,
+            server_steps=self.algo.state.t,
+            sim_time=now,
+            metrics=metrics,
+            accuracy_trace=accuracy_trace,
+            final_accuracy=final_acc,
+        )
+
+
+class AsyncFLSimulator(BaseAsyncSimulator):
+    """Drives a QAFeL (or FedBuff) instance through an async event timeline,
+    one client per iteration (the reference implementation; the vectorized
+    cohort engine lives in repro.sim.cohort)."""
+
     def run(self) -> SimResult:
         cfg, algo = self.cfg, self.algo
         rate = cfg.arrival_rate
@@ -103,8 +152,7 @@ class AsyncFLSimulator:
         next_client = 0
         next_arrival = 0.0
         now = 0.0
-        last_eval_step = -1
-        acc = 0.0
+        self._last_eval_step = -1
         reached = False
 
         # Pending messages: client trains on the hidden state AS OF its start
@@ -137,28 +185,8 @@ class AsyncFLSimulator:
             uploads += 1
 
             if bmsg is not None:
-                # decode the packed broadcast ONCE; every tracked replica
-                # applies the identical decoded increment (Algorithm 3) —
-                # which is exactly what keeps them bit-identical to the server
-                q = decode_message(algo.sq, bmsg)
-                self.replicas = [jax.tree.map(lambda a, d: a + d, rep, q)
-                                 for rep in self.replicas]
-                step = algo.state.t
-                if step - last_eval_step >= cfg.eval_every_steps:
-                    acc = float(self.eval_fn(algo.state.x))
-                    accuracy_trace.append((now, uploads, step, acc))
-                    last_eval_step = step
-                    if cfg.target_accuracy and acc >= cfg.target_accuracy:
-                        reached = True
+                reached = self._apply_broadcast(bmsg, now, uploads,
+                                                accuracy_trace)
 
-        metrics = algo.metrics()
-        metrics["replicas_in_sync"] = self.verify_replicas()
-        return SimResult(
-            reached_target=reached,
-            uploads=uploads,
-            server_steps=algo.state.t,
-            sim_time=now,
-            metrics=metrics,
-            accuracy_trace=accuracy_trace,
-            final_accuracy=acc,
-        )
+        return self._finalize(reached=reached, uploads=uploads, now=now,
+                              accuracy_trace=accuracy_trace)

@@ -1,0 +1,302 @@
+"""Vectorized cohort engine: seeded equivalence against the sequential
+reference under the identity scenario, determinism, the scenario library,
+and the batched encode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QAFeL, QAFeLConfig, make_quantizer
+from repro.data import FederatedPartition, SyntheticCelebA
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.sim import (SCENARIOS, AsyncFLSimulator, CohortAsyncFLSimulator,
+                       ScenarioConfig, SimConfig, get_scenario)
+from repro.sim.scenarios import ScenarioSampler
+
+
+@pytest.fixture(scope="module")
+def task():
+    ds = SyntheticCelebA(n_samples=400)
+    part = FederatedPartition(labels=ds.labels, n_clients=40)
+    params0 = init_cnn(jax.random.PRNGKey(0))
+
+    def loss_fn(params, batch, key):
+        return cnn_loss(params, batch, train=True, key=key)[0]
+
+    def client_batches(cid, key):
+        # deterministic per client id so two runs (and both engines) see
+        # identical data regardless of call order
+        rng = np.random.default_rng(cid * 1009 + 7)
+        b = [part.client_batch(ds, cid, 8, rng) for _ in range(2)]
+        return {k: jnp.stack([jnp.asarray(bi[k]) for bi in b]) for k in b[0]}
+
+    test_idx = part.split_indices(part.val_clients)[:128]
+    test_batch = {k: jnp.asarray(v) for k, v in ds.batch(test_idx).items()}
+    eval_fn = jax.jit(lambda p: cnn_accuracy(p, test_batch))
+    return loss_fn, params0, client_batches, eval_fn
+
+
+def run_engine(task, engine, scenario="identity", cohort_size=4,
+               max_uploads=16, seed=0, cq="qsgd4", sq="qsgd4"):
+    loss_fn, params0, client_batches, eval_fn = task
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=4, local_steps=2,
+                       client_quantizer=cq, server_quantizer=sq)
+    algo = QAFeL(qcfg, loss_fn, params0)
+    scfg = SimConfig(concurrency=8, max_uploads=max_uploads,
+                     eval_every_steps=2, seed=seed, track_hidden_replicas=1)
+    if engine == "sequential":
+        sim = AsyncFLSimulator(algo, scfg, client_batches, eval_fn)
+    else:
+        sim = CohortAsyncFLSimulator(algo, scfg, client_batches, eval_fn,
+                                     scenario=scenario,
+                                     cohort_size=cohort_size)
+    return sim.run()
+
+
+# ---------------------------------------------------------------------------
+# Seeded equivalence (the acceptance anchor)
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_size1_identity_reproduces_sequential(task):
+    """Under the identity scenario with cohort_size=1 the cohort engine
+    consumes the jax and numpy RNG streams in the sequential order and must
+    reproduce the sequential simulator exactly: server-step count, final
+    accuracy, the whole accuracy trace, sim clock, and traffic meters."""
+    rs = run_engine(task, "sequential", max_uploads=16)
+    rc = run_engine(task, "cohort", cohort_size=1, max_uploads=16)
+    assert rc.server_steps == rs.server_steps
+    assert rc.uploads == rs.uploads
+    assert rc.final_accuracy == rs.final_accuracy
+    assert rc.accuracy_trace == rs.accuracy_trace
+    assert rc.sim_time == rs.sim_time
+    for key in ("upload_MB", "broadcast_MB", "tau_max", "tau_mean",
+                "broadcasts", "mean_broadcast_fanout"):
+        assert rc.metrics[key] == rs.metrics[key], key
+    assert rc.metrics["replicas_in_sync"] and rs.metrics["replicas_in_sync"]
+
+
+def test_cohort_batched_same_protocol_counts(task):
+    """Larger cohorts change per-message bits (batched dither) but not the
+    protocol structure: same uploads, same server-step count, replicas in
+    sync, finite accuracy."""
+    rs = run_engine(task, "sequential", max_uploads=16)
+    rc = run_engine(task, "cohort", cohort_size=8, max_uploads=16)
+    assert rc.uploads == rs.uploads
+    assert rc.server_steps == rs.server_steps  # K=4 -> uploads // 4
+    assert rc.metrics["replicas_in_sync"]
+    assert np.isfinite(rc.final_accuracy)
+    # byte accounting identical: same quantizer, same model, same counts
+    assert rc.metrics["upload_MB"] == rs.metrics["upload_MB"]
+    # under the identity scenario the event timeline (arrivals, durations,
+    # delivery order) is independent of cohort size, so downlink fan-out
+    # accounting must match the sequential engine EXACTLY: speculatively
+    # admitted members whose arrival is still in the future are not
+    # broadcast receivers
+    assert rc.metrics["mean_broadcast_fanout"] == \
+        rs.metrics["mean_broadcast_fanout"]
+    assert rc.metrics["broadcast_MB"] == rs.metrics["broadcast_MB"]
+
+
+# ---------------------------------------------------------------------------
+# Determinism (same seed -> identical run), both engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine,scenario,cohort_size", [
+    ("sequential", "identity", 1),
+    ("cohort", "lognormal_dropout", 4),
+])
+def test_same_seed_identical_runs(task, engine, scenario, cohort_size):
+    r1 = run_engine(task, engine, scenario=scenario, cohort_size=cohort_size,
+                    max_uploads=12, seed=3)
+    r2 = run_engine(task, engine, scenario=scenario, cohort_size=cohort_size,
+                    max_uploads=12, seed=3)
+    assert r1.accuracy_trace == r2.accuracy_trace
+    assert r1.final_accuracy == r2.final_accuracy
+    assert r1.sim_time == r2.sim_time
+    m1 = {k: v for k, v in r1.metrics.items()}
+    m2 = {k: v for k, v in r2.metrics.items()}
+    assert m1 == m2
+
+
+def test_different_seed_differs(task):
+    r1 = run_engine(task, "cohort", cohort_size=4, max_uploads=12, seed=0)
+    r2 = run_engine(task, "cohort", cohort_size=4, max_uploads=12, seed=1)
+    assert r1.sim_time != r2.sim_time  # different durations sampled
+
+
+# ---------------------------------------------------------------------------
+# Final-eval fix: accuracy is evaluated even when the run ends between
+# flushes (regression: final_accuracy stayed 0.0 when max_uploads < K)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["sequential", "cohort"])
+def test_final_eval_runs_when_no_flush_happens(task, engine):
+    res = run_engine(task, engine, max_uploads=2)  # < buffer_size=4
+    assert res.server_steps == 0
+    assert res.final_accuracy > 0.0
+    assert len(res.accuracy_trace) == 1
+    assert res.accuracy_trace[-1][1] == res.uploads
+
+
+# ---------------------------------------------------------------------------
+# Scenario library
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry_and_validation():
+    for name in SCENARIOS:
+        cfg = get_scenario(name)
+        assert isinstance(cfg, ScenarioConfig)
+        assert cfg.effective_mean_duration > 0.0
+    assert get_scenario(ScenarioConfig()) == ScenarioConfig()
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nope")
+    with pytest.raises(ValueError):
+        ScenarioConfig(latency="weird")
+    with pytest.raises(ValueError):
+        ScenarioConfig(latency="trace")  # empty trace
+    with pytest.raises(ValueError):
+        ScenarioConfig(dropout=1.0)
+    with pytest.raises(ValueError):
+        ScenarioConfig(straggler_mult=0.5)
+    with pytest.raises(ValueError):
+        ScenarioConfig(tiers=((0.7, "qsgd2"), (0.6, "qsgd8")))
+
+
+def test_arrival_rate_calibration():
+    """Little's law: rate * E[duration] == concurrency, stragglers included."""
+    cfg = ScenarioConfig(straggler_frac=0.5, straggler_mult=3.0)
+    rate = cfg.arrival_rate(100)
+    assert rate * cfg.effective_mean_duration == pytest.approx(100.0)
+    assert cfg.effective_mean_duration == pytest.approx(
+        2.0 * cfg.mean_duration)
+
+
+def test_sampler_stream_matches_sequential_for_identity():
+    """The identity sampler consumes the numpy stream exactly like the
+    sequential simulator's per-client abs-normal draw."""
+    rng1 = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    sampler = ScenarioSampler(ScenarioConfig(), 8, rng1)
+    got = np.concatenate([sampler.durations(1) for _ in range(5)])
+    want = np.array([abs(rng2.normal(0.0, 1.0)) for _ in range(5)])
+    np.testing.assert_array_equal(got, want)
+    assert not sampler.dropouts(3).any()
+    assert (sampler.tier_indices(3) == -1).all()
+
+
+def test_trace_replay_cycles():
+    cfg = ScenarioConfig(latency="trace", trace=(0.5, 1.0, 2.0))
+    sampler = ScenarioSampler(cfg, 8, np.random.default_rng(0))
+    d = sampler.durations(7)
+    np.testing.assert_allclose(d, [0.5, 1.0, 2.0, 0.5, 1.0, 2.0, 0.5])
+
+
+def test_dropout_scenario_loses_uploads(task):
+    cfg = ScenarioConfig(dropout=0.5)
+    res = run_engine(task, "cohort", scenario=cfg, cohort_size=8,
+                     max_uploads=12)
+    assert res.uploads == 12  # dropped clients never count as uploads
+    assert res.metrics["dropped_uploads"] > 0
+    assert res.metrics["replicas_in_sync"]
+
+
+def test_tiered_bits_scenario_shrinks_uploads(task):
+    """A low-bandwidth tier on 2-bit qsgd must reduce mean upload size and
+    still aggregate correctly (eager decode into the tree-mode accumulator)."""
+    cfg = ScenarioConfig(tiers=((0.5, "qsgd2"),))
+    r_tier = run_engine(task, "cohort", scenario=cfg, cohort_size=8,
+                        max_uploads=12)
+    r_flat = run_engine(task, "cohort", scenario="identity", cohort_size=8,
+                        max_uploads=12)
+    assert r_tier.metrics["kB_per_upload"] < r_flat.metrics["kB_per_upload"]
+    assert r_tier.server_steps == r_flat.server_steps
+    assert r_tier.metrics["replicas_in_sync"]
+
+
+@pytest.mark.parametrize("name", ["uniform_poisson", "trace_replay",
+                                  "bimodal_stragglers", "production_tail"])
+def test_named_scenarios_run(task, name):
+    res = run_engine(task, "cohort", scenario=name, cohort_size=4,
+                     max_uploads=8)
+    assert res.uploads == 8
+    assert res.metrics["replicas_in_sync"]
+    assert np.isfinite(res.final_accuracy)
+
+
+# ---------------------------------------------------------------------------
+# Batched encode path (Quantizer.encode_batch)
+# ---------------------------------------------------------------------------
+
+
+def _stacked_tree(b, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"w": jax.random.normal(ks[0], (b, 130, 7)),
+            "b": jax.random.normal(ks[1], (b, 50))}
+
+
+def test_encode_batch_b1_is_bit_identical_to_encode():
+    """A cohort of one IS a single sequential-path message."""
+    tree = _stacked_tree(1)
+    keys = jax.random.split(jax.random.PRNGKey(3), 1)
+    for name in ("qsgd4", "identity", "top_k0.1", "rand_k0.1"):
+        q = make_quantizer(name)
+        (enc_b,) = q.encode_batch(tree, keys)
+        enc_s = q.encode(jax.tree.map(lambda l: l[0], tree), keys[0])
+        assert enc_b.keys() == enc_s.keys()
+        for k in enc_s:
+            if k == "layout":
+                assert enc_b[k] == enc_s[k]
+            elif isinstance(enc_s[k], (int, str)):
+                assert enc_b[k] == enc_s[k], (name, k)
+            else:
+                np.testing.assert_array_equal(np.asarray(enc_b[k]),
+                                              np.asarray(enc_s[k]), (name, k))
+
+
+@pytest.mark.parametrize("name", ["qsgd4", "qsgd2", "identity", "top_k0.2",
+                                  "rand_k0.2"])
+def test_encode_batch_messages_decode_like_singles(name):
+    """B > 1: every batched message decodes to the original tree's structure
+    with the quantizer's usual reconstruction quality."""
+    b = 5
+    q = make_quantizer(name)
+    tree = _stacked_tree(b)
+    keys = jax.random.split(jax.random.PRNGKey(4), b)
+    encs = q.encode_batch(tree, keys)
+    assert len(encs) == b
+    for i, enc in enumerate(encs):
+        dec = q.decode(enc)
+        orig = jax.tree.map(lambda l: l[i], tree)
+        assert jax.tree.structure(dec) == jax.tree.structure(orig)
+        if name in ("identity", "top_k0.2"):
+            # deterministic operators: batch == per-message encode exactly
+            dec_s = q.decode(q.encode(orig, keys[i]))
+            for a, c in zip(jax.tree.leaves(dec), jax.tree.leaves(dec_s)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_mixed_tier_message_accepted_and_aggregated():
+    """QAFeL.receive folds a packed message from a different bit-width tier
+    into the buffer by eager decode, keeping the default tier packed."""
+    from repro.core.protocol import CLIENT_UPDATE, encode_message
+
+    def loss(params, batch, key):
+        return jnp.sum((params["w"] - batch["t"]) ** 2)
+
+    qcfg = QAFeLConfig(client_lr=0.1, buffer_size=2, local_steps=1,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+    algo = QAFeL(qcfg, loss, {"w": jnp.zeros((256,), jnp.float32)})
+    key = jax.random.PRNGKey(0)
+    msg, _ = algo.run_client({"t": jnp.ones((1, 256))}, key)
+    assert algo.receive(msg, key) is None
+    assert len(algo.buffer._packed) == 1
+    tier_msg = encode_message(CLIENT_UPDATE, make_quantizer("qsgd2"),
+                              {"w": jnp.full((256,), 0.1)}, key, version=0)
+    bmsg = algo.receive(tier_msg, key)  # flushes: K=2
+    assert bmsg is not None
+    assert float(jnp.abs(algo.state.x["w"]).max()) > 0.0

@@ -17,8 +17,11 @@ def test_quantize_pack_matches_oracle(bits, n):
     key = jax.random.PRNGKey(n * 13 + bits)
     x = jax.random.normal(key, (n,), jnp.float32) * 3.0
     packed, norms = ops.qsgd_quantize(x, key, bits)
-    x2d = ops._to_tiles(x)
-    u2d = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    rows = ops.rows_for(n)
+    assert packed.shape[0] == rows and norms.shape == (rows,)
+    pad = rows * LANES - n
+    x2d = jnp.concatenate([x, jnp.zeros((pad,))]).reshape(rows, LANES)
+    u2d = jax.random.uniform(key, (rows, LANES), dtype=jnp.float32)
     pr, nr = ref.quantize_pack(x2d, u2d, bits)
     assert packed.dtype == jnp.uint8
     np.testing.assert_array_equal(np.asarray(packed), np.asarray(pr))
@@ -36,11 +39,65 @@ def test_dequantize_roundtrip_error_bound(bits, n):
     assert deq.shape == (n,)
     s = (1 << (bits - 1)) - 1
     # per-coordinate error <= bucket_norm / s
-    pad = ops.padded_len(n) - n
+    pad = ops.rows_for(n) * LANES - n
     xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, LANES)
     dq = np.pad(np.asarray(deq), (0, pad)).reshape(-1, LANES)
     step = np.asarray(norms)[:, None] / s
     assert (np.abs(dq - xp) <= step + 1e-5).all()
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", [127, 1000, 100_003])
+def test_quantize_batch_roundtrip_error_bound(bits, n):
+    """Batched entry (in-kernel hash dither): wire shape + per-coordinate
+    error bound per message."""
+    b = 5
+    key = jax.random.PRNGKey(n * 3 + bits)
+    xb = jax.random.normal(key, (b, n), jnp.float32)
+    keys = jax.random.split(key, b)
+    packed, norms = ops.qsgd_quantize_batch(xb, keys, bits)
+    rows = ops.rows_for(n)
+    assert packed.shape[:2] == (b, rows) and norms.shape == (b, rows)
+    s = (1 << (bits - 1)) - 1
+    pad = rows * LANES - n
+    for i in range(b):
+        deq = ops.qsgd_dequantize(packed[i], norms[i], bits, n)
+        xp = np.pad(np.asarray(xb[i]), (0, pad)).reshape(rows, LANES)
+        dq = np.pad(np.asarray(deq), (0, pad)).reshape(rows, LANES)
+        step = np.asarray(norms[i])[:, None] / s
+        assert (np.abs(dq - xp) <= step + 1e-5).all(), i
+
+
+def test_fast_routes_match_interpreted_pallas():
+    """The fused off-TPU routes are bit-identical to the interpreted pallas
+    kernels (shared block math)."""
+    from repro.kernels import buffer_agg as _agg
+    from repro.kernels import qsgd as _qsgd
+
+    n, b, bits = 100_003, 5, 4
+    rows = ops.rows_for(n)
+    key = jax.random.PRNGKey(0)
+    xb = jax.random.normal(key, (b, n), jnp.float32)
+    pad = rows * LANES - n
+    x3d = jnp.concatenate([xb, jnp.zeros((b, pad))], axis=1).reshape(b, rows, LANES)
+    seeds = jax.random.split(key, b).astype(jnp.uint32)
+    p_fast, n_fast = _qsgd.qsgd_quantize_pack_batch(x3d, seeds, bits)
+    p_pal, n_pal = _qsgd.qsgd_quantize_pack_batch(x3d, seeds, bits,
+                                                  force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(p_fast), np.asarray(p_pal))
+    np.testing.assert_array_equal(np.asarray(n_fast), np.asarray(n_pal))
+
+    d_fast = _qsgd.qsgd_unpack_dequantize(p_fast[0], n_fast[0].reshape(-1),
+                                          bits)
+    d_pal = _qsgd.qsgd_unpack_dequantize(p_fast[0], n_fast[0].reshape(-1),
+                                         bits, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(d_fast), np.asarray(d_pal))
+
+    w = jnp.linspace(0.2, 1.0, b)
+    norms2 = n_fast.reshape(b, rows)
+    a_fast = _agg.buffer_aggregate(p_fast, norms2, w, bits)
+    a_pal = _agg.buffer_aggregate(p_fast, norms2, w, bits, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a_fast), np.asarray(a_pal))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])

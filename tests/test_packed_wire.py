@@ -103,7 +103,7 @@ def test_packed_qsgd_single_kernel_call_and_error_bound():
     flat, _ = flatten_tree(tree)
     deq, _ = flatten_tree(q.decode(enc))
     s = (1 << (4 - 1)) - 1
-    pad = ops.padded_len(flat.size) - flat.size
+    pad = ops.rows_for(flat.size) * ops.BUCKET - flat.size
     xp = np.pad(np.asarray(flat), (0, pad)).reshape(-1, ops.BUCKET)
     dq = np.pad(np.asarray(deq), (0, pad)).reshape(-1, ops.BUCKET)
     step = np.asarray(enc["norms"])[:, None] / s

@@ -160,6 +160,29 @@ def test_staleness_monitor_enforces_assumption():
         algo.staleness.observe(2)
 
 
+def test_staleness_monitor_rejects_negative():
+    from repro.core import StalenessMonitor
+    mon = StalenessMonitor()
+    with pytest.raises(ValueError, match="negative staleness"):
+        mon.observe(-1)
+    assert mon.history == []
+
+
+def test_receive_rejects_future_version():
+    """Clock-skew / replay guard: a message claiming a model version the
+    server has not produced yet must be rejected, not turned into a
+    negative staleness and an amplifying weight."""
+    algo = make_algo()
+    key = jax.random.PRNGKey(0)
+    msg, _ = algo.run_client(batches(key), key)
+    msg.meta["version"] = algo.state.t + 1
+    with pytest.raises(ValueError, match="ahead of the server clock"):
+        algo.receive(msg, key)
+    # nothing was recorded or buffered
+    assert algo.meter.uploads == 0
+    assert algo.buffer.count == 0
+
+
 def test_tau_max_buffer_property():
     assert tau_max_for_buffer(10, 1) == 10
     assert tau_max_for_buffer(10, 3) == 4
