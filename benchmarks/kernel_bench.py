@@ -57,6 +57,7 @@ def main(report):
            f"fused_hbm_bytes={hbm};naive_hbm_bytes={naive};saving=x{naive/hbm:.2f}")
     batch_encode_bench(report)
     wire_path_bench(report)
+    server_flush_bench(report)
     sim_engine_bench(report)
 
 
@@ -76,6 +77,88 @@ def batch_encode_bench(report):
         report(f"kernel/qsgd4_quantize_batch_B{b}", us_batch,
                f"dispatches=1;per_msg_total={us_one:.1f};"
                f"speedup=x{us_one / us_batch:.2f}")
+
+
+def server_flush_bench(report):
+    """The device-resident flat server state's fused single-dispatch flush
+    (``kernels.ops.server_flush_step`` via ``QAFeL.receive``) vs the
+    pre-refactor eager tree composition: fused aggregate + unflatten +
+    per-leaf tree_axpy server update + encode + decode + per-leaf hidden
+    apply. Both cycles ingest the same K pre-encoded uploads.
+
+    The structural quantities that transfer off CPU: one host-issued device
+    dispatch per flush vs ~9 + O(10 * n_leaves) eager ops, and zero
+    per-leaf pytree traffic between kernels. Three sizes: flat d=2048 and
+    d=98304 (single leaf — the quickstart and wire-size scales) and the
+    paper's 18-leaf CNN (per-leaf tree traffic dominates the legacy path;
+    the fused win is largest here). CPU latency caveat: single-leaf
+    large-d is memory-bandwidth-bound and its wall-clock ratio is noisy /
+    near parity in interpret mode — the dispatch-count column is the
+    robust quantity."""
+    from repro.common.tree import tree_add, tree_axpy, tree_sub
+    from repro.core import QAFeL, QAFeLConfig
+    from repro.core.protocol import (CLIENT_UPDATE, HIDDEN_BROADCAST, Message,
+                                     decode_message, encode_message)
+
+    k = 10
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=k, local_steps=1,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+
+    def unused_loss(params, batch, key):
+        del batch, key
+        return 0.0
+
+    for tag, params in (("d2048", {"w": jnp.zeros((2048,), jnp.float32)}),
+                        ("d98304", {"w": jnp.zeros((98304,), jnp.float32)}),
+                        ("cnn18", init_cnn(jax.random.PRNGKey(0)))):
+        cq, sq = qcfg.cq(), qcfg.sq()
+        n_leaves = len(jax.tree.leaves(params))
+        d = sum(int(x.size) for x in jax.tree.leaves(params))
+        key = jax.random.PRNGKey(1)
+        encs = [cq.encode(jax.tree.map(
+            lambda a, i=i: jax.random.normal(jax.random.PRNGKey(7 * i), a.shape),
+            params), jax.random.PRNGKey(100 + i)) for i in range(k)]
+        msgs = [Message(CLIENT_UPDATE, e, wire_bytes=0.0, meta={"version": 0})
+                for e in encs]
+        layout = encs[0]["layout"]
+
+        algo = QAFeL(qcfg, unused_loss, params)
+
+        def fused_cycle():
+            bmsg = None
+            for m in msgs:
+                bmsg = algo.receive(m, key)
+            return bmsg.payload["packed"]
+
+        # pre-refactor composition over the same uploads (tree state)
+        x_t = jax.tree.map(jnp.array, params)
+        h_t = jax.tree.map(jnp.array, params)
+        m_t = jax.tree.map(jnp.zeros_like, params)
+
+        def legacy_cycle():
+            stack = jnp.stack([e["packed"] for e in encs])
+            norms = jnp.stack([e["norms"] for e in encs])
+            w = jnp.asarray([1.0] * k, jnp.float32) / k
+            flat = ops.buffer_aggregate(stack, norms, w, 4, d)
+            out = layout.unflatten(flat)
+            m_new = tree_axpy(qcfg.server_momentum, m_t, out)
+            x_new = tree_axpy(qcfg.server_lr, m_new, x_t)
+            diff = tree_sub(x_new, h_t)
+            bmsg = encode_message(HIDDEN_BROADCAST, sq, diff, key, fast=True)
+            q = decode_message(sq, bmsg)
+            h_new = tree_add(h_t, q)
+            return jax.tree.leaves(h_new)
+
+        us_fused = _time(fused_cycle, iters=5)
+        us_legacy = _time(legacy_cycle, iters=5)
+        host_ops = 9 + 10 * n_leaves  # eager device ops the legacy path issues
+        report(f"server/flush_fused_{tag}", us_fused,
+               f"dispatches=1;d={d};K={k};leaves={n_leaves}")
+        report(f"server/flush_legacy_{tag}", us_legacy,
+               f"dispatches~{host_ops};d={d};K={k};leaves={n_leaves}")
+        report(f"server/flush_speedup_{tag}", 0.0,
+               f"x{us_legacy / us_fused:.2f};dispatch_reduction=x{host_ops}")
 
 
 def sim_engine_bench(report):

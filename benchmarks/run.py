@@ -4,17 +4,51 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured cell).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only kernel,roofline
+    PYTHONPATH=src python -m benchmarks.run --only kernel --json BENCH_PR3.json
+
+``--json PATH`` additionally writes every row as machine-readable JSON
+(with the ``k=v;k=v`` derived string parsed into a dict) so CI can archive
+the perf trajectory across PRs — uploads/sec, flush latency, dispatch
+counts, compression ratios.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
+_ROWS: list = []
+
 
 def report(name: str, us_per_call: float, derived: str = "") -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": _parse_derived(derived)})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _parse_derived(derived: str):
+    """Best-effort parse of the 'k=v;k=v' derived string (numbers where
+    possible); non-conforming fragments are kept verbatim under 'notes'."""
+    if not derived:
+        return {}
+    out, notes = {}, []
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+        elif part:
+            notes.append(part)
+    if notes:
+        out["notes"] = ";".join(notes)
+    return out
 
 
 SUITES = ["kernel", "roofline", "table1", "fig3", "table2"]
@@ -24,6 +58,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as machine-readable JSON")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else SUITES
     print("name,us_per_call,derived")
@@ -53,6 +89,19 @@ def main() -> None:
             report(f"{suite}/ERROR", 0.0, f"{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
     report("total_wall", (time.time() - t0) * 1e6, f"failures={failures}")
+    if args.json:
+        import jax
+
+        payload = {
+            "suites": chosen,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "failures": failures,
+            "rows": _ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {len(_ROWS)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,9 +10,12 @@
 """
 from repro.core.quantizers import (Quantizer, QuantizerSpec, TreeLayout,
                                    flatten_tree, make_quantizer)
-from repro.core.qafel import QAFeL, QAFeLConfig, ServerState, client_update, server_apply
+from repro.core.qafel import (QAFeL, QAFeLConfig, ServerState, client_update,
+                              server_apply, server_apply_flat)
 from repro.core.fedbuff import fedbuff_config, make_fedbuff
-from repro.core.hidden_state import HiddenState, server_broadcast_delta
-from repro.core.buffer import UpdateBuffer
+from repro.core.hidden_state import HiddenState, hidden_apply, server_broadcast_delta
+from repro.core.buffer import FlushBatch, UpdateBuffer
 from repro.core.staleness import StalenessMonitor, staleness_weight, tau_max_for_buffer
-from repro.core.protocol import Message, TrafficMeter, encode_message, decode_message
+from repro.core.protocol import (Message, TrafficMeter, decode_message,
+                                 decode_message_flat, encode_message,
+                                 encode_message_flat, frame_packed_message)

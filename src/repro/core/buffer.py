@@ -1,22 +1,34 @@
 """Server-side update buffer (the "Buff" in FedBuff/QAFeL, Algorithm 1).
 
-Two modes:
+The buffer is **flat-first**: every accepted upload ultimately lands in the
+single flat-f32 coordinate space of the server's ``TreeLayout`` (PR 1/2's
+packed wire format already proves that is the natural server
+representation), and nothing is ever unflattened inside the buffer.
+
+Two ingestion modes:
 
 * **Tree mode** (``add``): accumulates already-decoded client deltas
-  (weighted by staleness scaling) in accumulator form — O(1) memory in K.
-  Used by callers that hold full-precision deltas (e.g. the FedBuff
-  identity-quantizer limit driven without a wire path).
+  (weighted by staleness scaling) into one flat f32 accumulator — O(1)
+  memory in K. ``add_decoded_flat`` is the same thing for callers that
+  already hold the flat vector (no tree round-trip).
 * **Packed mode** (``add_encoded``, enabled by passing ``quantizer=``):
   stores the K uploads exactly as they arrived on the wire — stacked uint8
   qsgd codes + per-bucket norms (O(K * bits/32) of the f32 footprint), or
   sparse (idx, vals) pairs for top_k/rand_k — and defers ALL dequantization
-  to ``flush``, which runs the fused dequantize-accumulate Pallas kernel
-  (``repro.kernels.buffer_agg``) once with the staleness weights folded into
-  the kernel's ``weights`` vector. No decoded f32 delta ever exists between
-  flushes; the buffer is a compressed store decoded once per flush, not K
-  times per round.
+  to flush time.
 
-Both modes release the aggregate when K samples have arrived, then reset.
+Three release surfaces once K samples have arrived:
+
+* ``drain()`` → ``FlushBatch``: the raw ingredients (stacked codes, norms,
+  normalized weights, pre-scaled flat residual) for the fused one-dispatch
+  ``server_flush_step`` — the aggregation itself happens *inside* the
+  server's single jitted flush, so no aggregate is materialized here.
+* ``flush_flat()`` → the aggregated flat f32 Delta-bar (one fused
+  dequantize-accumulate kernel pass for qsgd stacks).
+* ``flush()`` → the tree view of ``flush_flat()`` — the legacy surface,
+  kept for callers that still want pytrees (tests, A/B benchmarks).
+
+All three reset the buffer.
 """
 from __future__ import annotations
 
@@ -26,15 +38,45 @@ from typing import Any, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.tree import tree_axpy, tree_scale
-from repro.core.quantizers import Quantizer, TreeLayout
+from repro.core.quantizers import Quantizer, TreeLayout, flatten_tree
+
+
+@dataclasses.dataclass
+class FlushBatch:
+    """The raw, pre-aggregation contents of one full buffer window.
+
+    ``weights`` is already divided by the normalization denominator and
+    ``extra`` (identity/sparse/tree-mode residual) is already scaled by
+    1/denom, so the consumer's job is exactly
+    ``sum_k weights[k] * dequant(stack[k], norms[k]) + extra``.
+    """
+
+    n: int
+    layout: TreeLayout
+    bits: Optional[int] = None  # qsgd stack bit-width (None when no stack)
+    stack: Any = None  # (K, rows, 128*bits//8) uint8 codes, or None
+    norms: Any = None  # (K, rows) f32 bucket norms, or None
+    weights: Any = None  # (K,) f32, normalized, or None
+    extra: Any = None  # (n,) flat f32 residual, pre-scaled, or None
+
+    def reduce(self):
+        """Aggregate to the flat Delta-bar (the non-fused reference path)."""
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        if self.stack is not None:
+            flat = kops.buffer_aggregate(self.stack, self.norms, self.weights,
+                                         self.bits, self.n)
+            if self.extra is not None:
+                flat = self.extra + flat
+            return flat
+        return self.extra
 
 
 @dataclasses.dataclass
 class UpdateBuffer:
     capacity: int  # K
     quantizer: Optional[Quantizer] = None  # set -> packed mode available
-    _acc: Any = None  # tree mode: running sum of weighted deltas
+    _acc: Any = None  # tree/flat mode: running flat f32 sum of weighted deltas
     _weightsum: float = 0.0
     count: int = 0
     flushes: int = 0
@@ -47,11 +89,28 @@ class UpdateBuffer:
     _flat_acc: Any = None  # identity packed mode: flat f32 accumulator
 
     def add(self, delta, weight: float = 1.0) -> None:
-        """Tree mode: accumulate an already-decoded delta."""
+        """Tree mode: accumulate an already-decoded delta (flattened here)."""
+        flat, layout = flatten_tree(delta)
+        self.add_decoded_flat(flat, weight, layout=layout)
+
+    def add_decoded_flat(self, flat, weight: float = 1.0, *,
+                         layout: Optional[TreeLayout] = None) -> None:
+        """Accumulate an already-decoded *flat f32* delta (no tree view)."""
+        if self._layout is None:
+            if layout is None:
+                raise ValueError("add_decoded_flat into an empty buffer needs "
+                                 "a layout (pass layout=, or use add())")
+            self._layout = layout
+            self._n = int(flat.size)
+        elif layout is not None and layout != self._layout:
+            raise ValueError("delta layout mismatch: all buffered uploads "
+                             "must share the same pytree structure")
+        elif int(flat.size) != self._n:
+            raise ValueError(f"flat delta size {flat.size} != n={self._n}")
         if self._acc is None:
-            self._acc = tree_scale(delta, weight)
+            self._acc = weight * flat
         else:
-            self._acc = tree_axpy(weight, delta, self._acc)
+            self._acc = weight * flat + self._acc
         self._weightsum += float(weight)
         self.count += 1
 
@@ -77,7 +136,7 @@ class UpdateBuffer:
             if enc["layout"] != self._layout:
                 raise ValueError("message layout mismatch: all buffered uploads "
                                  "must encode the same pytree structure")
-            if enc.get("bits") != self._bits:
+            if enc.get("bits") != self._bits and self._bits is not None:
                 raise ValueError(f"message bits mismatch: {enc.get('bits')} != "
                                  f"{self._bits}")
         if kind == "qsgd":
@@ -87,6 +146,7 @@ class UpdateBuffer:
         if self._layout is None:
             self._layout = enc["layout"]
             self._n = enc["n"]
+        if self._bits is None:
             self._bits = enc.get("bits")
 
         if kind == "qsgd":
@@ -106,50 +166,14 @@ class UpdateBuffer:
     def full(self) -> bool:
         return self.count >= self.capacity
 
-    def _flush_packed(self, denom: float):
-        from repro.kernels import ops as kops  # local import: kernels are optional
+    @property
+    def layout(self) -> Optional[TreeLayout]:
+        """The pytree layout of the current fill window (None when empty).
+        Exposed so the server can validate uploads against its own layout
+        BEFORE ``drain()`` irreversibly resets the window."""
+        return self._layout
 
-        kind = self.quantizer.spec.kind
-        if kind == "qsgd":
-            # One fused kernel pass: dequantize + weighted accumulate of all K
-            # messages, with staleness weights and the 1/denom normalization
-            # folded into the kernel's weights vector. Cohort-encoded wire
-            # payloads are numpy (host bytes): stack them host-side — one
-            # transfer into the kernel call instead of K device stacks.
-            if all(isinstance(p, np.ndarray) for p, _ in self._packed):
-                stack = np.stack([p for p, _ in self._packed])
-                norms = np.stack([nm for _, nm in self._packed])
-            else:
-                stack = jnp.stack([p for p, _ in self._packed])
-                norms = jnp.stack([nm for _, nm in self._packed])
-            w = jnp.asarray(self._weights, jnp.float32) / denom
-            flat = kops.buffer_aggregate(stack, norms, w, self._bits, self._n)
-        elif kind == "identity":
-            flat = self._flat_acc / denom
-        else:  # sparse: scatter-add each (idx, vals) pair into one flat sum
-            flat = jnp.zeros((self._n,), jnp.float32)
-            for (idx, vals), w in zip(self._packed, self._weights):
-                flat = flat.at[idx].add(vals * (w / denom))
-        out = self._layout.unflatten(flat)
-        if self._acc is not None:
-            # tree-mode adds (e.g. a legacy per-leaf message decoded eagerly)
-            # landed in the same fill window: fold them in, don't drop them
-            out = tree_axpy(1.0 / denom, self._acc, out)
-        return out
-
-    def flush(self, *, normalize: str = "capacity"):
-        """Return the aggregate Delta-bar and reset.
-
-        normalize: "capacity" -> divide by K (Algorithm 1 line 11);
-                   "weights"  -> divide by the sum of staleness weights.
-        """
-        if not self.full:
-            raise RuntimeError(f"flush before full: {self.count}/{self.capacity}")
-        denom = float(self.capacity) if normalize == "capacity" else max(self._weightsum, 1e-12)
-        if self._packed or self._flat_acc is not None:
-            out = self._flush_packed(denom)
-        else:
-            out = tree_scale(self._acc, 1.0 / denom)
+    def _reset(self) -> None:
         self._acc = None
         self._weightsum = 0.0
         self._packed = []
@@ -160,4 +184,63 @@ class UpdateBuffer:
         self._flat_acc = None
         self.count = 0
         self.flushes += 1
-        return out
+
+    def drain(self, *, normalize: str = "capacity") -> FlushBatch:
+        """Hand the window's raw ingredients to the fused flush, and reset.
+
+        qsgd uploads come back as one stacked (codes, norms, weights)
+        batch; everything else (identity payload accumulator, sparse
+        scatter-adds, tree-mode residual) is pre-reduced into one
+        pre-scaled flat ``extra`` vector. The op order of the pre-reduction
+        matches the eager reference exactly (scaled residual + aggregate).
+        """
+        if not self.full:
+            raise RuntimeError(f"flush before full: {self.count}/{self.capacity}")
+        denom = (float(self.capacity) if normalize == "capacity"
+                 else max(self._weightsum, 1e-12))
+        n, layout, bits = self._n, self._layout, self._bits
+        kind = self.quantizer.spec.kind if self.quantizer is not None else None
+
+        stack = norms = weights = extra = None
+        if self._packed and kind == "qsgd":
+            # Cohort-encoded wire payloads are numpy (host bytes): stack
+            # them host-side — one transfer into the kernel call instead of
+            # K device stacks.
+            if all(isinstance(p, np.ndarray) for p, _ in self._packed):
+                stack = np.stack([p for p, _ in self._packed])
+                norms = np.stack([nm for _, nm in self._packed])
+            else:
+                stack = jnp.stack([p for p, _ in self._packed])
+                norms = jnp.stack([nm for _, nm in self._packed])
+            weights = jnp.asarray(self._weights, jnp.float32) / denom
+        elif self._packed:  # sparse: scatter-add into one flat sum
+            extra = jnp.zeros((n,), jnp.float32)
+            for (idx, vals), w in zip(self._packed, self._weights):
+                extra = extra.at[idx].add(vals * (w / denom))
+        if self._flat_acc is not None:  # identity packed payloads
+            flat = self._flat_acc / denom
+            extra = flat if extra is None else extra + flat
+        if self._acc is not None:
+            # decoded (tree/flat-mode) adds landed in the same fill window
+            # (e.g. a bit-width-tier client): fold them in, don't drop them
+            scaled = (1.0 / denom) * self._acc
+            extra = scaled if extra is None else scaled + extra
+        batch = FlushBatch(n=n, layout=layout, bits=bits, stack=stack,
+                           norms=norms, weights=weights, extra=extra)
+        self._reset()
+        return batch
+
+    def flush_flat(self, *, normalize: str = "capacity"):
+        """Return the aggregated flat f32 Delta-bar and reset."""
+        return self.drain(normalize=normalize).reduce()
+
+    def flush(self, *, normalize: str = "capacity"):
+        """Return the aggregate Delta-bar as a tree view and reset.
+
+        normalize: "capacity" -> divide by K (Algorithm 1 line 11);
+                   "weights"  -> divide by the sum of staleness weights.
+        """
+        layout = self._layout
+        if layout is None:
+            raise RuntimeError(f"flush before full: {self.count}/{self.capacity}")
+        return layout.unflatten(self.flush_flat(normalize=normalize))

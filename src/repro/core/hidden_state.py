@@ -7,6 +7,12 @@ suite asserts exact equality. Because the broadcast encodes the difference
 to the *hidden* state rather than a direct quantization of the server
 model, quantization error does not compound across rounds (the error-
 feedback / EF21-style construction the paper builds on).
+
+On the server, x-hat canonically lives as a flat f32 vector inside
+``repro.core.qafel.ServerState`` and is updated *inside* the fused
+``server_flush_step`` — ``HiddenState`` is the tree-view wrapper used at
+client/eval boundaries and by tree-holding callers (the distributed round,
+the FedBuff identity-limit drivers, simulator replicas in legacy form).
 """
 from __future__ import annotations
 
@@ -15,8 +21,16 @@ from typing import Any
 
 import jax
 
-from repro.common.tree import tree_add, tree_sub
+from repro.common.tree import tree_sub
 from repro.core.quantizers import Quantizer
+
+
+def hidden_apply(value, q_decoded):
+    """x-hat^{t+1} = x-hat^t + q^t (Equation 4), leaf-wise, preserving each
+    leaf's storage dtype. Shared by ``HiddenState.apply`` and the
+    distributed round step (``repro.distributed.steps``); the fused server
+    flush runs the same ``h + q`` on the flat vector."""
+    return jax.tree.map(lambda h, d: (h + d).astype(h.dtype), value, q_decoded)
 
 
 @dataclasses.dataclass
@@ -29,7 +43,7 @@ class HiddenState:
 
     def apply(self, q_decoded) -> "HiddenState":
         """x-hat^{t+1} = x-hat^t + q^t (Equation 4)."""
-        return HiddenState(value=tree_add(self.value, q_decoded))
+        return HiddenState(value=hidden_apply(self.value, q_decoded))
 
 
 def server_broadcast_delta(quantizer: Quantizer, x_new, x_hat, key):

@@ -45,8 +45,33 @@ def encode_message(kind: str, quantizer: Quantizer, tree, key, *,
                    meta=dict(meta))
 
 
+def encode_message_flat(kind: str, quantizer: Quantizer, flat, layout, key, *,
+                        fast: bool = False, **meta) -> Message:
+    """Flat-first framing: encode an already-flat f32 vector (the server's
+    device-resident representation) without materializing a tree view."""
+    enc = (quantizer.encode_fast_flat(flat, layout, key) if fast
+           else quantizer.encode_flat(flat, layout, key))
+    return Message(kind=kind, payload=enc,
+                   wire_bytes=quantizer.wire_bytes_packed(layout),
+                   meta=dict(meta))
+
+
+def frame_packed_message(kind: str, quantizer: Quantizer, enc: dict,
+                         **meta) -> Message:
+    """Frame an already-encoded packed payload (e.g. the broadcast bits
+    produced inside the fused ``server_flush_step``) as a wire Message."""
+    return Message(kind=kind, payload=enc,
+                   wire_bytes=quantizer.wire_bytes_packed(enc["layout"]),
+                   meta=dict(meta))
+
+
 def decode_message(quantizer: Quantizer, msg: Message):
     return quantizer.decode(msg.payload)
+
+
+def decode_message_flat(quantizer: Quantizer, msg: Message):
+    """Decode a packed message to its flat f32 vector (no unflatten)."""
+    return quantizer.decode_flat(msg.payload)
 
 
 @dataclasses.dataclass
@@ -65,6 +90,10 @@ class TrafficMeter:
     broadcast_bytes: float = 0.0
     broadcast_wire_bytes: float = 0.0
     broadcast_receivers: int = 0
+    # uploads rejected by the server's staleness drop policy: the bytes were
+    # still spent on the uplink, but the update never entered the buffer
+    uploads_dropped: int = 0
+    dropped_bytes: float = 0.0
 
     def record(self, msg: Message, n_receivers: int = 1):
         if msg.kind == CLIENT_UPDATE:
@@ -75,6 +104,11 @@ class TrafficMeter:
             self.broadcast_bytes += msg.wire_bytes * n_receivers
             self.broadcast_wire_bytes += msg.wire_bytes
             self.broadcast_receivers += n_receivers
+
+    def record_dropped(self, msg: Message):
+        """An upload rejected at the server (e.g. staleness bound exceeded)."""
+        self.uploads_dropped += 1
+        self.dropped_bytes += msg.wire_bytes
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -87,4 +121,6 @@ class TrafficMeter:
                                  if self.broadcasts else 0.0),
             "mean_broadcast_fanout": (self.broadcast_receivers / self.broadcasts
                                       if self.broadcasts else 0.0),
+            "uploads_dropped": self.uploads_dropped,
+            "dropped_MB": self.dropped_bytes / 1e6,
         }

@@ -7,12 +7,23 @@ assigned decoder architecture.
 
 Two surfaces:
 
-* **Jittable round math** (``client_update``, ``server_apply``): pure
-  functions used both by the host-level async simulator and by the
-  distributed pjit'd round step in ``repro.distributed``.
+* **Jittable round math** (``client_update``, ``server_apply``/
+  ``server_apply_flat``): pure functions used by the host-level async
+  simulator, by the fused device flush, and by the distributed pjit'd round
+  step in ``repro.distributed``.
 * **Host orchestration** (``QAFeL`` class): server state, buffer, hidden
   state, staleness bookkeeping, wire encoding. The async event timeline
   itself lives in ``repro.sim`` and drives this class.
+
+The server state is **device-resident and flat**: ``x``, ``x-hat`` and the
+momentum live as flat f32 vectors keyed by one ``TreeLayout``, and the
+entire buffer flush — fused dequantize-accumulate of the K packed uploads,
+momentum + server update, broadcast quantize-pack, and the hidden-state
+apply of the decoded broadcast bits — executes as ONE jitted,
+buffer-donated dispatch (``repro.kernels.ops.server_flush_step``). Tree
+views materialize lazily (and are cached per server step) only at the
+eval / client-update boundaries. See DESIGN.md ("Device-resident flat
+server state").
 
 FedBuff is recovered *exactly* with identity quantizers (the paper's
 infinite-precision limit) — ``repro.core.fedbuff.make_fedbuff`` is that
@@ -28,12 +39,15 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.tree import tree_add, tree_axpy, tree_scale, tree_sub, tree_zeros_like
-from repro.core.buffer import UpdateBuffer
-from repro.core.hidden_state import HiddenState, server_broadcast_delta
+from repro.common.tree import tree_sub
+from repro.core.buffer import FlushBatch, UpdateBuffer
+from repro.core.hidden_state import HiddenState
 from repro.core.protocol import (CLIENT_UPDATE, HIDDEN_BROADCAST, Message,
-                                 TrafficMeter, decode_message, encode_message)
-from repro.core.quantizers import Quantizer, QuantizerSpec, make_quantizer
+                                 TrafficMeter, decode_message, encode_message,
+                                 encode_message_flat, frame_packed_message)
+from repro.core.quantizers import (Quantizer, TreeLayout, flatten_tree,
+                                   make_quantizer, packed_identity_payload,
+                                   packed_qsgd_payload)
 from repro.core.staleness import StalenessMonitor
 
 
@@ -47,7 +61,11 @@ class QAFeLConfig:
     client_quantizer: Any = "qsgd4"  # spec/string; "identity" -> FedBuff upload
     server_quantizer: Any = "qsgd4"
     staleness_scaling: bool = True  # 1/sqrt(1+tau) down-weighting (Fig. 3 runs)
-    max_staleness: int = 0  # 0 = unbounded (Assumption 3.4 monitoring only)
+    # 0 = unbounded (Assumption 3.4 monitored only). > 0 is a real drop
+    # policy: ``receive`` rejects uploads with tau > max_staleness before
+    # they reach the buffer, and the rejects show up in the TrafficMeter /
+    # StalenessMonitor summaries.
+    max_staleness: int = 0
 
     def cq(self) -> Quantizer:
         return make_quantizer(self.client_quantizer)
@@ -85,15 +103,45 @@ def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key):
     return tree_sub(y_final, x_hat)
 
 
-def server_apply(qcfg: QAFeLConfig, x, momentum, delta_bar):
-    """Algorithm 1 line 12 (+ FedBuff server momentum):
-    m <- beta m + Delta-bar;  x <- x + eta_g m."""
-    if qcfg.server_momentum:
-        momentum = tree_axpy(qcfg.server_momentum, momentum, delta_bar)
+def server_apply_flat(x, momentum, delta, *, lr, beta, boundary=None):
+    """The ONE FedBuff server-update implementation (Algorithm 1 line 12 +
+    server momentum): m <- beta m + Delta-bar; x <- x + eta_g m.
+
+    Operates on single arrays — the server's flat f32 vectors, or one pytree
+    leaf at a time (``server_apply`` maps it over trees for the distributed
+    round). ``beta is None`` disables momentum.
+
+    ``boundary`` is the fused flush's materialization hook
+    (``repro.kernels.ops.hard_boundary``): eagerly each multiply and add is
+    its own dispatch, but inside one jitted computation XLA would contract
+    the scalar multiply into its consumer's add (FMA) and change bits, so
+    the fused caller pins the products at a hard boundary. Eager and
+    in-graph tree callers leave it None.
+
+    Returns ``(x_new, momentum_new)``.
+    """
+    hard = boundary if boundary is not None else (lambda v: v)
+    if beta is not None:
+        t1 = hard(beta * momentum)
+        momentum = (t1 + delta).astype(delta.dtype)
     else:
-        momentum = delta_bar
-    x_new = tree_axpy(qcfg.server_lr, momentum, x)
-    return x_new, momentum
+        momentum = delta
+    t2 = hard(lr * momentum)
+    x = (t2 + x).astype(x.dtype)
+    return x, momentum
+
+
+def server_apply(qcfg: QAFeLConfig, x, momentum, delta_bar):
+    """Pytree view of ``server_apply_flat`` (the distributed round and the
+    FedBuff identity-limit drivers hold trees)."""
+    beta = qcfg.server_momentum if qcfg.server_momentum else None
+    leaves_x, treedef = jax.tree.flatten(x)
+    leaves_m = jax.tree.leaves(momentum)
+    leaves_d = jax.tree.leaves(delta_bar)
+    out = [server_apply_flat(xi, mi, di, lr=qcfg.server_lr, beta=beta)
+           for xi, mi, di in zip(leaves_x, leaves_m, leaves_d)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
 
 
 @functools.lru_cache(maxsize=32)
@@ -105,6 +153,16 @@ def _jitted_client_update(loss_fn: Callable, qcfg: QAFeLConfig):
     return jax.jit(functools.partial(client_update, loss_fn, qcfg))
 
 
+@jax.jit
+def _hidden_drift_ratio(x_flat, hidden_flat):
+    """|| x - x-hat || / || x || as ONE jitted flat reduction (the device
+    sync happens only when the caller converts the result to float)."""
+    d = (x_flat - hidden_flat).astype(jnp.float32)
+    num = jnp.sqrt(jnp.sum(d * d))
+    den = jnp.sqrt(jnp.sum(x_flat.astype(jnp.float32) ** 2))
+    return num / jnp.maximum(den, 1e-30)
+
+
 # ---------------------------------------------------------------------------
 # Host orchestration
 # ---------------------------------------------------------------------------
@@ -112,10 +170,53 @@ def _jitted_client_update(loss_fn: Callable, qcfg: QAFeLConfig):
 
 @dataclasses.dataclass
 class ServerState:
-    x: Any  # full-precision server model
-    hidden: HiddenState  # shared x-hat
-    momentum: Any
+    """Device-resident server state.
+
+    ``x`` (full-precision model), ``x-hat`` (shared hidden state) and the
+    server momentum are flat f32 vectors in the coordinate space of one
+    ``TreeLayout``. The flush updates them in place (buffer donation); tree
+    views are materialized lazily and cached per server step — they exist
+    only at the eval / client-update boundaries, never on the flush path.
+    """
+
+    x_flat: jnp.ndarray
+    hidden_flat: jnp.ndarray
+    momentum_flat: jnp.ndarray
+    layout: TreeLayout
     t: int = 0  # server step counter (model version)
+    _x_tree: Any = dataclasses.field(default=None, repr=False, compare=False)
+    _hidden_tree: Any = dataclasses.field(default=None, repr=False, compare=False)
+
+    @staticmethod
+    def init(params0) -> "ServerState":
+        flat, layout = flatten_tree(params0)
+        return ServerState(x_flat=flat, hidden_flat=jnp.array(flat),
+                           momentum_flat=jnp.zeros_like(flat),
+                           layout=layout, t=0)
+
+    @property
+    def x(self):
+        """Lazy (cached) tree view of the full-precision server model."""
+        if self._x_tree is None:
+            self._x_tree = self.layout.unflatten(self.x_flat)
+        return self._x_tree
+
+    @property
+    def hidden_tree(self):
+        """Lazy (cached) tree view of the shared hidden state x-hat."""
+        if self._hidden_tree is None:
+            self._hidden_tree = self.layout.unflatten(self.hidden_flat)
+        return self._hidden_tree
+
+    @property
+    def hidden(self) -> HiddenState:
+        """Back-compat wrapper: ``state.hidden.value`` is the x-hat tree view."""
+        return HiddenState(value=self.hidden_tree)
+
+    @property
+    def momentum(self):
+        """Tree view of the server momentum (uncached; diagnostics only)."""
+        return self.layout.unflatten(self.momentum_flat)
 
 
 class QAFeL:
@@ -126,13 +227,13 @@ class QAFeL:
         self.loss_fn = loss_fn
         self.cq = qcfg.cq()
         self.sq = qcfg.sq()
-        self.state = ServerState(
-            x=jax.tree.map(lambda a: a.copy(), params0),
-            hidden=HiddenState.init(params0),
-            momentum=tree_zeros_like(params0),
-            t=0)
+        self.state = ServerState.init(params0)
+        # the runtime-True predicate behind the fused flush's hard
+        # materialization boundaries (see kernels.ops.hard_boundary)
+        self._flag = jnp.asarray(True)
         # Packed mode: the buffer stores uploads as wire tensors (uint8 codes
-        # + bucket norms) and dequantizes once per flush via the fused kernel.
+        # + bucket norms) and dequantizes once per flush inside the fused
+        # server_flush_step.
         self.buffer = UpdateBuffer(capacity=qcfg.buffer_size, quantizer=self.cq)
         self.meter = TrafficMeter()
         self.staleness = StalenessMonitor(max_allowed=qcfg.max_staleness)
@@ -146,7 +247,7 @@ class QAFeL:
         delivers the message later (after the sampled training duration).
         """
         k_train, k_enc = jax.random.split(key)
-        delta = self._client_update(self.state.hidden.value, batches, k_train)
+        delta = self._client_update(self.state.hidden_tree, batches, k_train)
         msg = encode_message(CLIENT_UPDATE, self.cq, delta, k_enc,
                              version=self.state.t)
         return msg, self.state.t
@@ -156,10 +257,10 @@ class QAFeL:
         """Algorithm 1 lines 5-16. Returns the broadcast message on a flush.
 
         The upload is NOT decoded here: its packed wire payload goes straight
-        into the buffer, and the fused dequantize-accumulate kernel decodes
-        all K messages in one pass when the buffer flushes. ``n_receivers``
-        is the number of concurrently active clients the resulting broadcast
-        fans out to (downlink byte accounting).
+        into the buffer, and the fused dequantize-accumulate runs inside the
+        single-dispatch ``server_flush_step`` when the buffer flushes.
+        ``n_receivers`` is the number of concurrently active clients the
+        resulting broadcast fans out to (downlink byte accounting).
         """
         version = msg.meta["version"]
         if version > self.state.t:
@@ -169,8 +270,14 @@ class QAFeL:
             raise ValueError(
                 f"message version {version} is ahead of the server clock "
                 f"t={self.state.t} (clock skew or replay)")
-        self.meter.record(msg)
         tau = self.state.t - version
+        if self.staleness.would_drop(tau):
+            # Assumption 3.4 as a drop policy: the upload is rejected before
+            # it reaches the buffer; the uplink bytes were still spent.
+            self.meter.record_dropped(msg)
+            self.staleness.record_dropped(tau)
+            return None
+        self.meter.record(msg)
         self.staleness.observe(tau)
         # host-side scalar of staleness_weight: a jnp call here would force a
         # device sync on every single upload
@@ -183,45 +290,85 @@ class QAFeL:
             else:
                 # a bit-width-tier client uploaded through a different
                 # quantizer: its packed payload is self-describing, so decode
-                # eagerly into the buffer's tree-mode accumulator (the
-                # default-tier majority stays packed and decode-free)
-                self.buffer.add(self.cq.decode(payload), weight=w)
+                # eagerly — straight to the buffer's FLAT accumulator, no
+                # tree view (the default-tier majority stays packed)
+                self.buffer.add_decoded_flat(self.cq.decode_flat(payload),
+                                             weight=w, layout=payload["layout"])
         else:  # legacy per-leaf message: decode eagerly
             self.buffer.add(decode_message(self.cq, msg), weight=w)
         if not self.buffer.full:
             return None
+        return self._flush(key, n_receivers)
 
-        delta_bar = self.buffer.flush(normalize="capacity")
-        x_new, momentum = server_apply(self.qcfg, self.state.x,
-                                       self.state.momentum, delta_bar)
-        # Broadcast q^t = Q_s(x^{t+1} - x-hat^t). The server applies the
-        # *decoded wire message itself* — the exact bits every client decodes
-        # — which is what keeps all x-hat replicas bit-identical.
-        diff = tree_sub(x_new, self.state.hidden.value)
-        bmsg = encode_message(HIDDEN_BROADCAST, self.sq, diff, key,
-                              fast=True, t=self.state.t)
-        q = decode_message(self.sq, bmsg)
+    def _flush(self, key, n_receivers: int) -> Message:
+        """Algorithm 1 lines 11-16 as one fused device dispatch.
+
+        The broadcast carries q^t = Q_s(x^{t+1} - x-hat^t), and the server
+        applies the *decoded wire bits themselves* — the exact increment
+        every client decodes — which is what keeps all x-hat replicas
+        bit-identical. Both the quantize-pack and that decode-apply happen
+        inside the single jitted step.
+        """
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        st = self.state
+        # validate BEFORE drain(): drain resets the window, so failing after
+        # it would silently discard the K buffered uploads
+        if self.buffer.layout != st.layout:
+            raise ValueError("buffered uploads do not match the server's "
+                             "parameter layout")
+        batch: FlushBatch = self.buffer.drain(normalize="capacity")
+        kind = self.sq.spec.kind
+        if kind in ("qsgd", "identity"):
+            sbits = self.sq.spec.bits if kind == "qsgd" else None
+            key2d = jnp.asarray(key).reshape(1, -1) if kind == "qsgd" else None
+            beta = self.qcfg.server_momentum if self.qcfg.server_momentum else None
+            x_new, h_new, m_new, payload = kops.server_flush_step(
+                st.x_flat, st.hidden_flat, st.momentum_flat,
+                batch.stack, batch.norms, batch.weights, batch.extra,
+                key2d, self._flag,
+                bits=batch.bits if batch.bits is not None else 0,
+                sbits=sbits, n=batch.n, lr=self.qcfg.server_lr, beta=beta)
+            if kind == "qsgd":
+                enc = packed_qsgd_payload(payload[0], payload[1], sbits,
+                                          batch.n, st.layout)
+            else:
+                enc = packed_identity_payload(payload[0], batch.n, st.layout)
+            bmsg = frame_packed_message(HIDDEN_BROADCAST, self.sq, enc, t=st.t)
+        else:
+            # top_k / rand_k server quantizers have data-dependent wire
+            # shapes (argsort / gather): a short flat-vector chain instead
+            # of the single fused dispatch — still no pytree anywhere.
+            delta = batch.reduce()
+            beta = self.qcfg.server_momentum if self.qcfg.server_momentum else None
+            x_new, m_new = server_apply_flat(
+                st.x_flat, st.momentum_flat, delta,
+                lr=self.qcfg.server_lr, beta=beta)
+            diff = x_new - st.hidden_flat
+            bmsg = encode_message_flat(HIDDEN_BROADCAST, self.sq, diff,
+                                       st.layout, key, fast=True, t=st.t)
+            h_new = st.hidden_flat + self.sq.decode_flat(bmsg.payload)
         self.meter.record(bmsg, n_receivers=n_receivers)
-        self.state = ServerState(
-            x=x_new,
-            hidden=self.state.hidden.apply(q),
-            momentum=momentum,
-            t=self.state.t + 1)
+        self.state = ServerState(x_flat=x_new, hidden_flat=h_new,
+                                 momentum_flat=m_new, layout=st.layout,
+                                 t=st.t + 1)
         return bmsg
 
     # -- invariant checks / metrics ----------------------------------------
     def hidden_drift(self) -> float:
-        """|| x - x-hat || / || x || — the quantization term of Lemma F.9."""
-        num = jnp.sqrt(sum(jnp.sum((a - b).astype(jnp.float32) ** 2)
-                           for a, b in zip(jax.tree.leaves(self.state.x),
-                                           jax.tree.leaves(self.state.hidden.value))))
-        den = jnp.sqrt(sum(jnp.sum(a.astype(jnp.float32) ** 2)
-                           for a in jax.tree.leaves(self.state.x)))
-        return float(num / jnp.maximum(den, 1e-30))
+        """|| x - x-hat || / || x || — the quantization term of Lemma F.9.
 
-    def metrics(self) -> Dict[str, Any]:
+        One jitted flat reduction; the float() conversion is the only device
+        sync, and it happens only when this is explicitly called (metrics()
+        skips it by default in hot loops).
+        """
+        return float(_hidden_drift_ratio(self.state.x_flat,
+                                         self.state.hidden_flat))
+
+    def metrics(self, drift: bool = False) -> Dict[str, Any]:
         out = dict(self.meter.summary())
         out.update(self.staleness.summary())
         out["server_steps"] = self.state.t
-        out["hidden_drift"] = self.hidden_drift()
+        if drift:
+            out["hidden_drift"] = self.hidden_drift()
         return out

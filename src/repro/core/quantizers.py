@@ -177,6 +177,22 @@ def flatten_tree(tree):
     return flat, layout
 
 
+def packed_qsgd_payload(packed, norms, bits: int, n: int,
+                        layout: TreeLayout) -> dict:
+    """The one source of truth for the packed qsgd wire-payload schema.
+
+    Used by every qsgd encode entry point AND by the fused server flush,
+    which frames the broadcast bits produced in-graph."""
+    return {"format": "packed", "kind": "qsgd", "packed": packed,
+            "norms": norms, "bits": bits, "n": n, "layout": layout}
+
+
+def packed_identity_payload(flat, n: int, layout: TreeLayout) -> dict:
+    """Packed wire-payload schema for identity (full-precision) messages."""
+    return {"format": "packed", "kind": "identity", "payload": flat,
+            "n": n, "layout": layout}
+
+
 # ---------------------------------------------------------------------------
 # qsgd math (pure jnp; the Pallas kernel in repro/kernels mirrors this)
 # ---------------------------------------------------------------------------
@@ -314,18 +330,26 @@ class Quantizer:
         exactly one quantize-pack kernel dispatch with a single padding tail,
         regardless of how many leaves the model has.
         """
+        flat, layout = flatten_tree(tree)
+        return self.encode_flat(flat, layout, key)
+
+    def encode_flat(self, flat: jnp.ndarray, layout: TreeLayout, key) -> dict:
+        """Flat-first encode: compress an already-flat f32 vector.
+
+        This is the canonical wire entry point for callers that hold the
+        model in its device-resident flat form (the server's flush path) —
+        no tree is ever materialized. ``encode`` is the tree-view
+        convenience wrapper around it.
+        """
         from repro.kernels import ops as kops  # local import: kernels are optional
 
         spec = self.spec
-        flat, layout = flatten_tree(tree)
         n = int(flat.size)
         if spec.kind == "identity":
-            return {"format": "packed", "kind": "identity", "payload": flat,
-                    "n": n, "layout": layout}
+            return packed_identity_payload(flat, n, layout)
         if spec.kind == "qsgd":
             packed, norms = kops.qsgd_quantize(flat, key, spec.bits)
-            return {"format": "packed", "kind": "qsgd", "packed": packed,
-                    "norms": norms, "bits": spec.bits, "n": n, "layout": layout}
+            return packed_qsgd_payload(packed, norms, spec.bits, n, layout)
         k = max(1, math.ceil(spec.fraction * n))
         if spec.kind == "top_k":
             order = jnp.argsort(-jnp.abs(flat))
@@ -376,14 +400,13 @@ class Quantizer:
         # dispatched device op per message
         if spec.kind == "identity":
             flat2d = np.asarray(flat2d)
-            return [{"format": "packed", "kind": "identity", "payload": flat2d[i],
-                     "n": n, "layout": layout} for i in range(b)]
+            return [packed_identity_payload(flat2d[i], n, layout)
+                    for i in range(b)]
         if spec.kind == "qsgd":
             packed, norms = kops.qsgd_quantize_batch(flat2d, keys, spec.bits)
             packed, norms = np.asarray(packed), np.asarray(norms)
-            return [{"format": "packed", "kind": "qsgd", "packed": packed[i],
-                     "norms": norms[i], "bits": spec.bits, "n": n,
-                     "layout": layout} for i in range(b)]
+            return [packed_qsgd_payload(packed[i], norms[i], spec.bits, n,
+                                        layout) for i in range(b)]
         k = max(1, math.ceil(spec.fraction * n))
         if spec.kind == "top_k":
             idx = jnp.argsort(-jnp.abs(flat2d), axis=1)[:, :k]
@@ -411,17 +434,20 @@ class Quantizer:
         uploads). Non-qsgd quantizers have no kernel in the loop and simply
         delegate to ``encode``.
         """
+        flat, layout = flatten_tree(tree)
+        return self.encode_fast_flat(flat, layout, key)
+
+    def encode_fast_flat(self, flat: jnp.ndarray, layout: TreeLayout, key) -> dict:
+        """Flat-first variant of ``encode_fast`` (no tree ever materialized)."""
         from repro.kernels import ops as kops  # local import: kernels are optional
 
         if self.spec.kind != "qsgd":
-            return self.encode(tree, key)
-        flat, layout = flatten_tree(tree)
+            return self.encode_flat(flat, layout, key)
         n = int(flat.size)
         packed, norms = kops.qsgd_quantize_batch(
             flat[None], jnp.asarray(key).reshape(1, -1), self.spec.bits)
-        return {"format": "packed", "kind": "qsgd", "packed": packed[0],
-                "norms": norms[0], "bits": self.spec.bits, "n": n,
-                "layout": layout}
+        return packed_qsgd_payload(packed[0], norms[0], self.spec.bits, n,
+                                   layout)
 
     def decode_flat(self, enc) -> jnp.ndarray:
         """Dequantize a packed message to its flat f32 vector (no unflatten)."""

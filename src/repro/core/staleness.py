@@ -25,8 +25,18 @@ def staleness_weight(tau, enabled: bool = True):
 
 @dataclasses.dataclass
 class StalenessMonitor:
+    """Tracks accepted staleness values and drop-policy rejections.
+
+    ``max_allowed > 0`` makes ``observe`` raise on violation — the invariant
+    check for callers that are supposed to have filtered already.
+    ``QAFeL.receive`` enforces the bound as a *drop policy* instead: an
+    upload with tau > max_allowed is rejected before it reaches the buffer
+    and recorded here via ``record_dropped``.
+    """
+
     max_allowed: int = 0  # 0 = unbounded; >0 enforces Assumption 3.4
     history: List[int] = dataclasses.field(default_factory=list)
+    dropped: List[int] = dataclasses.field(default_factory=list)
 
     def observe(self, tau: int) -> None:
         if tau < 0:
@@ -39,6 +49,13 @@ class StalenessMonitor:
                 "(Assumption 3.4 violated)")
         self.history.append(int(tau))
 
+    def would_drop(self, tau: int) -> bool:
+        """True when the drop policy rejects an upload of staleness tau."""
+        return bool(self.max_allowed) and tau > self.max_allowed
+
+    def record_dropped(self, tau: int) -> None:
+        self.dropped.append(int(tau))
+
     @property
     def tau_max(self) -> int:
         return max(self.history, default=0)
@@ -49,7 +66,9 @@ class StalenessMonitor:
 
     def summary(self) -> Dict[str, float]:
         return {"tau_max": self.tau_max, "tau_mean": self.tau_mean,
-                "n": len(self.history)}
+                "n": len(self.history),
+                "stale_dropped": len(self.dropped),
+                "tau_max_dropped": max(self.dropped, default=0)}
 
 
 def tau_max_for_buffer(tau_max_1: int, k: int) -> int:

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.common.compat import shard_map
 from repro.common.tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
+from repro.core.hidden_state import hidden_apply
 from repro.core.qafel import QAFeLConfig, server_apply
 from repro.core.quantizers import make_quantizer
 from repro.models import transformer as T
@@ -112,10 +113,10 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
 
         delta_bar = tree_scale(buf, 1.0 / qcfg.buffer_size)
         x_new, m_new = server_apply(qcfg, state.x, state.momentum, delta_bar)
-        # Hidden-state update: q = Q_s(x^{t+1} - x-hat), applied on both sides.
+        # Hidden-state update: q = Q_s(x^{t+1} - x-hat), applied on both sides
+        # via the same hidden_apply the host path uses.
         q = sq.qdq(tree_sub(x_new, state.hidden), k_server)
-        hidden_new = jax.tree.map(lambda h, d: (h + d).astype(h.dtype),
-                                  state.hidden, q)
+        hidden_new = hidden_apply(state.hidden, q)
         new_state = RoundState(x=x_new, hidden=hidden_new, momentum=m_new,
                                t=state.t + 1)
         metrics = {"loss": loss_sum / qcfg.buffer_size}
@@ -229,7 +230,7 @@ def _make_podq_round(cfg: ModelConfig, qcfg: QAFeLConfig, cq, sq, *,
         delta_bar = tree_scale(buf_tot, 1.0 / qcfg.buffer_size)
         x_new, m_new = server_apply(qcfg, x, momentum, delta_bar)
         q = sq.qdq(tree_sub(x_new, hidden), xkeys[-1])
-        hidden_new = jax.tree.map(lambda h, d: (h + d).astype(h.dtype), hidden, q)
+        hidden_new = hidden_apply(hidden, q)
         loss_mean = jax.lax.pmean(loss_pod, "pod") / kpp
         return x_new, hidden_new, m_new, t + 1, {"loss": loss_mean}
 

@@ -101,3 +101,38 @@ def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
         interpret=interpret,
     )(w, packed_stack, n3)
     return out[:rows]
+
+
+# ---------------------------------------------------------------------------
+# Fused aggregate -> server update (the first half of the one-dispatch flush)
+# ---------------------------------------------------------------------------
+
+
+def aggregate_update(x_flat, m_flat, stack, norms, weights, extra, *,
+                     bits, n: int, lr, beta, boundary=None,
+                     interpret: bool = True):
+    """Chain the buffer aggregation into the FedBuff server update without
+    leaving the device: Delta-bar = sum_k w_k dequant(msg_k) (+ pre-scaled
+    residual), m <- beta m + Delta-bar, x <- x + eta_g m.
+
+    Designed to be traced *inside* the single jitted ``server_flush_step``
+    (``repro.kernels.ops``). The server update itself is the shared
+    ``repro.core.qafel.server_apply_flat``; ``boundary`` (see
+    ``ops.hard_boundary``) pins the intermediate scalar products so XLA
+    cannot FMA-contract them and drift bit-wise from the eager reference.
+
+    Returns ``(m_new, x_new)``.
+    """
+    from repro.core.qafel import server_apply_flat  # lazy: kernels stay core-free
+
+    if stack is not None:
+        delta = buffer_aggregate(jnp.asarray(stack), jnp.asarray(norms),
+                                 weights, bits,
+                                 interpret=interpret).reshape(-1)[:n]
+        if extra is not None:
+            delta = extra + delta
+    else:
+        delta = extra
+    x_new, m_new = server_apply_flat(x_flat, m_flat, delta,
+                                     lr=lr, beta=beta, boundary=boundary)
+    return m_new, x_new

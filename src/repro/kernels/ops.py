@@ -134,3 +134,90 @@ def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
                                   jnp.asarray(norms), weights, bits,
                                   interpret=_interpret())
     return out2d.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Fused server flush: ONE jitted, buffer-donated dispatch for the whole
+# QAFeL server step (Algorithm 1 lines 11-16)
+# ---------------------------------------------------------------------------
+
+# Trace counter: incremented every time the fused step is (re)traced.
+# tests/test_server_flush.py asserts the flush compiles ONCE for a fixed
+# server configuration — i.e. the whole flush really is a single compiled
+# dispatch, not a chain re-traced per call.
+SERVER_FLUSH_TRACES = 0
+
+
+def hard_boundary(flag, vals):
+    """A reliable materialization boundary inside one jitted computation.
+
+    Routes ``vals`` (one array or a tuple) through a ``lax.cond`` whose
+    predicate is a runtime-True flag the caller passes in. Because the
+    predicate is a traced value, XLA cannot fold, remove, or fuse across
+    the conditional — the operands materialize at the branch boundary
+    exactly as an eager dispatch boundary would materialize them.
+
+    This is what keeps the fused ``server_flush_step`` bit-identical to the
+    eager multi-dispatch reference: ``jax.lax.optimization_barrier`` is NOT
+    sufficient — XLA:CPU duplicates cheap producers (broadcast-constant or
+    short dequantize tails) past the barrier into consumer fusions where a
+    multiply+add pair contracts into an FMA, changing bits vs the eager
+    path. A conditional is semantics-bearing and cannot be bypassed. The
+    False branch (never taken) returns zeros so no instruction is common to
+    both branches, which defeats XLA's conditional code motion.
+    """
+    single = not isinstance(vals, tuple)
+    operand = (vals,) if single else vals
+    out = jax.lax.cond(flag,
+                       lambda vs: vs,
+                       lambda vs: jax.tree.map(jnp.zeros_like, vs),
+                       operand)
+    return out[0] if single else out
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "sbits", "n", "lr", "beta"),
+                   donate_argnums=(0, 1, 2))
+def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
+                      weights, extra, key2d, flag, *,
+                      bits: int, sbits, n: int, lr: float, beta):
+    """The entire QAFeL buffer flush as ONE jitted, buffer-donated dispatch.
+
+    Chains, without leaving the device or materializing any pytree:
+
+      1. fused dequantize-accumulate of the K packed uploads (+ pre-scaled
+         residual ``extra`` from tiered/sparse/identity arrivals),
+      2. FedBuff server momentum + server update (``aggregate_update``),
+      3. broadcast diff ``x^{t+1} - x-hat^t`` and its quantize-pack through
+         the batched in-kernel-dither entry (``sbits``-bit qsgd) — or the
+         raw diff itself when ``sbits is None`` (identity server quantizer),
+      4. hidden-state apply of the *decoded broadcast bits* — the exact
+         increment every client replica applies.
+
+    ``x_flat`` / ``hidden_flat`` / ``momentum_flat`` are donated: the server
+    state is updated in place on device. ``stack`` may be None (no packed
+    qsgd uploads this window), ``beta`` None (no server momentum), ``key2d``
+    None (identity broadcast). ``flag`` is a runtime-True bool array backing
+    the ``hard_boundary`` materialization points that pin bit-exactness
+    with the eager multi-dispatch reference (and with the client replicas,
+    which decode the broadcast bits in their own dispatch).
+
+    Returns ``(x_new, hidden_new, momentum_new, (payload...))`` where the
+    payload is ``(packed, norms)`` for a qsgd broadcast or ``(diff,)`` for
+    identity.
+    """
+    global SERVER_FLUSH_TRACES
+    SERVER_FLUSH_TRACES += 1
+    boundary = functools.partial(hard_boundary, flag)
+    m_new, x_new = _agg.aggregate_update(
+        x_flat, momentum_flat, stack, norms, weights, extra,
+        bits=bits, n=n, lr=lr, beta=beta, boundary=boundary,
+        interpret=_interpret())
+    diff = boundary(x_new - hidden_flat)
+    if sbits is None:  # identity server quantizer: the diff IS the wire payload
+        h_new = hidden_flat + diff
+        return x_new, h_new, m_new, (diff,)
+    bp3, bn3 = qsgd_quantize_batch(diff[None], key2d, sbits)
+    bpacked, bnorms = boundary((bp3[0], bn3[0]))
+    q = boundary(qsgd_dequantize(bpacked, bnorms, sbits, n))
+    h_new = hidden_flat + q
+    return x_new, h_new, m_new, (bpacked, bnorms)

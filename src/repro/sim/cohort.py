@@ -159,7 +159,10 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
         batches = [self.client_batches_fn(next_client + i, batch_keys[i])
                    for i in range(b)]
         stacked = _stack_trees(*batches)
-        deltas = self._cohort_update(self.algo.state.hidden.value, stacked,
+        # hidden_tree: the lazily-materialized (per-server-step cached) tree
+        # view of the device-resident flat x-hat — the client-update boundary
+        # is the only place the cohort engine touches a pytree of the state
+        deltas = self._cohort_update(self.algo.state.hidden_tree, stacked,
                                      train_keys)
         msgs = self._encode_cohort(deltas, enc_keys, self.algo.state.t)
         durations = self.sampler.durations(b)

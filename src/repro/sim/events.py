@@ -17,7 +17,11 @@ Timing model, matching the paper / FedBuff's FLSim setup:
 
 The simulator maintains *independent per-client hidden-state replicas*
 (Algorithm 3) for a configurable subset of clients and asserts they stay
-bit-identical with the server's — the paper's central invariant.
+bit-identical with the server's — the paper's central invariant. Replicas
+are held in the server's flat f32 coordinate space: each broadcast is
+decoded ONCE to its flat vector and applied with one add per replica, and
+the bit-identity check is a single flat comparison against
+``state.hidden_flat`` (no per-leaf traversal).
 
 Data: each simulated client holds a non-IID shard (repro.data.federated).
 Evaluation runs on the full-precision server model x (never on x-hat).
@@ -33,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.protocol import decode_message
+from repro.core.protocol import decode_message_flat
 from repro.core.qafel import QAFeL, QAFeLConfig
 from repro.sim.scenarios import HALF_NORMAL_MEAN
 
@@ -79,8 +83,9 @@ class BaseAsyncSimulator:
         self.eval_fn = eval_fn
         self.rng = np.random.default_rng(sim_cfg.seed)
         self.key = jax.random.PRNGKey(sim_cfg.seed)
-        # replicas of the hidden state held by tracked "clients"
-        self.replicas = [jax.tree.map(lambda a: a.copy(), algo.state.hidden.value)
+        # flat replicas of the hidden state held by tracked "clients"
+        # (copies: the server's own buffers are donated to the fused flush)
+        self.replicas = [jnp.array(algo.state.hidden_flat)
                          for _ in range(sim_cfg.track_hidden_replicas)]
         self._last_eval_step = -1
 
@@ -89,23 +94,19 @@ class BaseAsyncSimulator:
         return sub
 
     def verify_replicas(self) -> bool:
-        for rep in self.replicas:
-            for a, b in zip(jax.tree.leaves(rep),
-                            jax.tree.leaves(self.algo.state.hidden.value)):
-                if not bool(jnp.array_equal(a, b)):
-                    return False
-        return True
+        h = self.algo.state.hidden_flat
+        return all(bool(jnp.array_equal(rep, h)) for rep in self.replicas)
 
     def _apply_broadcast(self, bmsg, now: float, uploads: int,
                          accuracy_trace: List[tuple]) -> bool:
-        """Decode the packed broadcast ONCE; every tracked replica applies
-        the identical decoded increment (Algorithm 3) — which is exactly
-        what keeps them bit-identical to the server. Evaluates on the
-        server-step cadence; returns True when the target accuracy is hit.
+        """Decode the packed broadcast ONCE — to its flat vector, no tree
+        view — and apply the identical decoded increment to every tracked
+        replica (Algorithm 3), which is exactly what keeps them bit-identical
+        to the server. Evaluates on the server-step cadence; returns True
+        when the target accuracy is hit.
         """
-        q = decode_message(self.algo.sq, bmsg)
-        self.replicas = [jax.tree.map(lambda a, d: a + d, rep, q)
-                         for rep in self.replicas]
+        q = decode_message_flat(self.algo.sq, bmsg)
+        self.replicas = [rep + q for rep in self.replicas]
         step = self.algo.state.t
         if step - self._last_eval_step >= self.cfg.eval_every_steps:
             acc = float(self.eval_fn(self.algo.state.x))
@@ -124,7 +125,9 @@ class BaseAsyncSimulator:
         final_acc = float(self.eval_fn(self.algo.state.x))
         if not accuracy_trace or accuracy_trace[-1][1] != uploads:
             accuracy_trace.append((now, uploads, self.algo.state.t, final_acc))
-        metrics = self.algo.metrics()
+        # drift=True: hidden_drift is one jitted reduction + sync, paid once
+        # per run here rather than inside the hot loop
+        metrics = self.algo.metrics(drift=True)
         metrics["replicas_in_sync"] = self.verify_replicas()
         metrics.update(extra_metrics)
         return SimResult(
