@@ -27,6 +27,27 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _interleaved_best(fn_a, fn_b, iters=7):
+    """Time two pipelines ALTERNATING per iteration and reduce by MIN,
+    returning (us_a, us_b). The one protocol for every ``--check``-gated
+    A/B row: on a small shared CPU back-to-back means drift by >2x with
+    machine load, and even interleaved medians swing ~30% under bursty
+    contention — min-of-N picks each pipeline's quietest iteration, which
+    is the stable estimator of the structural latency the ratio is meant
+    to compare."""
+    jax.block_until_ready(fn_a())  # compile both before timing
+    jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e6, min(tb) * 1e6
+
+
 def main(report):
     n = 1 << 20  # 1M-element message (~4 MB fp32)
     key = jax.random.PRNGKey(0)
@@ -58,6 +79,7 @@ def main(report):
     batch_encode_bench(report)
     wire_path_bench(report)
     server_flush_bench(report)
+    cohort_step_bench(report)
     sim_engine_bench(report)
 
 
@@ -150,8 +172,8 @@ def server_flush_bench(report):
             h_new = tree_add(h_t, q)
             return jax.tree.leaves(h_new)
 
-        us_fused = _time(fused_cycle, iters=5)
-        us_legacy = _time(legacy_cycle, iters=5)
+        # --check-gated rows: interleaved min-of-N so load drift cancels
+        us_fused, us_legacy = _interleaved_best(fused_cycle, legacy_cycle)
         host_ops = 9 + 10 * n_leaves  # eager device ops the legacy path issues
         report(f"server/flush_fused_{tag}", us_fused,
                f"dispatches=1;d={d};K={k};leaves={n_leaves}")
@@ -159,6 +181,78 @@ def server_flush_bench(report):
                f"dispatches~{host_ops};d={d};K={k};leaves={n_leaves}")
         report(f"server/flush_speedup_{tag}", 0.0,
                f"x{us_legacy / us_fused:.2f};dispatch_reduction=x{host_ops}")
+
+
+def cohort_step_bench(report):
+    """Fused one-dispatch cohort train+encode (``kernels.ops.
+    cohort_train_encode_step``) vs the split pipeline it replaced —
+    jit(vmap(client_update)) dispatch, eager per-leaf flatten, host-side
+    ``encode_batch`` dispatch — on the same cohorts.
+
+    The structural quantities that transfer off CPU: ONE host-issued device
+    dispatch per cohort tier-group vs 2 jit dispatches + O(n_leaves) eager
+    flatten ops, no stacked delta pytree and no hidden_tree view between
+    them. Rows at the engine's cohort sizes for concurrency 100/500
+    (B = min(conc // 2, 64)) on d=2048 (engine regime) and the paper's
+    18-leaf CNN; uploads/sec is B / wall per pipeline run. These rows feed
+    the ``--check`` regression gate, so the two pipelines are timed
+    INTERLEAVED and reduced by min-of-N (``_interleaved_best``) — on a
+    small shared CPU the back-to-back mean drifts by >2x with machine
+    load. CPU latency caveat (same as the flush rows):
+    the CNN's conv-grad compute dominates at cnn18, so its wall-clock
+    ratio sits near parity in interpret mode — dispatches per cohort is
+    the robust column."""
+    import functools
+
+    from repro.core.qafel import QAFeLConfig, client_update
+    from repro.core.quantizers import flatten_tree, make_quantizer
+
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=10, local_steps=2,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+    q = make_quantizer("qsgd4")
+    flag = jnp.asarray(True)
+
+    def loss_fn(params, batch, key):
+        del key
+        t = batch["target"]
+        return sum(jnp.sum((l - t) ** 2) for l in jax.tree.leaves(params))
+
+    for tag, params in (("d2048", {"w": jnp.zeros((2048,), jnp.float32)}),
+                        ("cnn18", init_cnn(jax.random.PRNGKey(0)))):
+        flat0, layout = flatten_tree(params)
+        hidden_tree = layout.unflatten(flat0)
+        n_leaves = len(jax.tree.leaves(params))
+        vmapped = jax.jit(jax.vmap(
+            functools.partial(client_update, loss_fn, qcfg),
+            in_axes=(None, 0, 0)))
+        for conc in (100, 500):
+            b = min(conc // 2, 64)  # the engine's cohort-size heuristic
+            batches = {"target": jax.random.normal(
+                jax.random.PRNGKey(3), (b, qcfg.local_steps, 1))}
+            keys = jax.random.split(jax.random.PRNGKey(4), 2 * b)
+            tk, ek = keys[:b], keys[b:]
+
+            def fused():
+                return ops.cohort_train_encode_step(
+                    loss_fn, qcfg, q.spec, layout, flat0, batches, tk, ek,
+                    flag, b=b)["packed"]
+
+            def split():
+                deltas = vmapped(hidden_tree, batches, tk)
+                return q.encode_batch(deltas, ek)[0]["packed"]
+
+            us_f, us_s = _interleaved_best(fused, split)
+            ups_f, ups_s = b / (us_f / 1e6), b / (us_s / 1e6)
+            report(f"sim/cohort_step_fused_{tag}_conc{conc}", us_f,
+                   f"dispatches=1;B={b};leaves={n_leaves};"
+                   f"uploads_per_s={ups_f:.1f}")
+            report(f"sim/cohort_step_split_{tag}_conc{conc}", us_s,
+                   f"dispatches~{2 + n_leaves};B={b};leaves={n_leaves};"
+                   f"uploads_per_s={ups_s:.1f}")
+            report(f"sim/cohort_step_speedup_{tag}_conc{conc}", 0.0,
+                   f"speedup=x{us_s / us_f:.2f};"
+                   f"dispatch_reduction=x{2 + n_leaves}")
 
 
 def sim_engine_bench(report):
@@ -175,9 +269,15 @@ def sim_engine_bench(report):
     path batches. Two model sizes: d=2048 (the quickstart regime — engine
     overhead dominates, full cohort effect) and d=98304 (the CNN
     benchmark's wire-size regime with zero tile padding — throughput is
-    encode-bound, so the ratio approaches the single-vs-batched kernel
-    ratio). CPU interpret-mode numbers; the structural quantity that
-    transfers is the uploads/sec ratio."""
+    encode-bound). NOTE since the fused client pipeline: the sequential
+    engine now runs the SAME one-dispatch train+encode step per client
+    (b=1), which removed most of its per-upload overhead — at the
+    encode-bound d=98304 scale the cohort ratio on a small CPU therefore
+    sits near/below parity (the cohort path additionally pays the
+    bit-exactness hard_boundary on its (B, d) delta stack), while the
+    d=2048 engine-overhead regime keeps the ~5-6x win. CPU interpret-mode
+    numbers; the structural quantity that transfers is the uploads/sec
+    ratio."""
     from repro.core import QAFeL, QAFeLConfig
     from repro.sim import AsyncFLSimulator, CohortAsyncFLSimulator, SimConfig
 

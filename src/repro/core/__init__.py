@@ -7,11 +7,14 @@
 * ``fedbuff``      — the full-precision baseline (identity-quantizer limit)
 * ``staleness``    — Assumption 3.4 monitoring + 1/sqrt(1+tau) weighting
 * ``protocol``     — wire messages and exact byte accounting
+* ``checkpoint``   — save/resume of the flat server state + buffer window
 """
 from repro.core.quantizers import (Quantizer, QuantizerSpec, TreeLayout,
                                    flatten_tree, make_quantizer)
 from repro.core.qafel import (QAFeL, QAFeLConfig, ServerState, client_update,
+                              client_update_flat, local_sgd_scan,
                               server_apply, server_apply_flat)
+from repro.core.checkpoint import load_checkpoint, save_checkpoint
 from repro.core.fedbuff import fedbuff_config, make_fedbuff
 from repro.core.hidden_state import HiddenState, hidden_apply, server_broadcast_delta
 from repro.core.buffer import FlushBatch, UpdateBuffer

@@ -1,0 +1,156 @@
+"""Checkpoint / resume for the async QAFeL protocol.
+
+Serializes everything the host-level server carries between uploads so a
+run can stop after ANY upload — including mid-fill-window — and continue
+**bit-identically** to an uninterrupted one (pinned in
+``tests/test_checkpoint.py``):
+
+* the flat ``ServerState`` — x / x-hat / momentum f32 vectors and the step
+  counter ``t`` (the ``TreeLayout`` itself is host-side structure derived
+  from the model; the checkpoint stores its *fingerprint* — per-leaf
+  shapes/dtypes/sizes — and ``load_checkpoint`` verifies it against the
+  live model's layout, so a checkpoint can never be restored into a
+  mismatched architecture),
+* the ``UpdateBuffer`` occupancy — the raw packed wire tensors (uint8 qsgd
+  codes + bucket norms, or sparse idx/vals pairs), per-upload staleness
+  weights, and the flat identity / tier-decode accumulators of the current
+  fill window,
+* the ``TrafficMeter`` and ``StalenessMonitor`` so byte accounting and
+  staleness summaries continue seamlessly.
+
+Format: one ``np.savez`` archive (no pickling — payloads are plain numeric
+arrays; scalars/lists travel as a JSON blob). The event-loop RNG streams
+belong to the *simulator*, not the protocol: a resumed ``QAFeL`` continues
+bit-identically when fed the same message sequence, which is the protocol-
+level contract this module owns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+CHECKPOINT_VERSION = 1
+
+
+def _normalize_path(path) -> str:
+    """``np.savez`` silently appends '.npz' to extension-less paths; apply
+    the same rule on both save and load so the two always agree."""
+    path = str(path)
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _layout_fingerprint(layout) -> dict:
+    return {"shapes": [list(s) for s in layout.shapes],
+            "dtypes": list(layout.dtypes),
+            "sizes": [int(s) for s in layout.sizes]}
+
+
+def save_checkpoint(path, algo) -> None:
+    """Write ``algo``'s full server-side state (see module docstring)."""
+    st, buf = algo.state, algo.buffer
+    meta = {
+        "version": CHECKPOINT_VERSION,
+        "t": int(st.t),
+        "layout": _layout_fingerprint(st.layout),
+        "quantizers": {"client": algo.cq.spec.label(),
+                       "server": algo.sq.spec.label()},
+        "buffer": {
+            "capacity": int(buf.capacity),
+            "count": int(buf.count),
+            "flushes": int(buf.flushes),
+            "weightsum": float(buf._weightsum),
+            "weights": [float(w) for w in buf._weights],
+            "bits": None if buf._bits is None else int(buf._bits),
+            "n": None if buf._n is None else int(buf._n),
+            "n_packed": len(buf._packed),
+            "has_layout": buf._layout is not None,
+            "has_acc": buf._acc is not None,
+            "has_flat_acc": buf._flat_acc is not None,
+        },
+        "meter": dataclasses.asdict(algo.meter),
+        "staleness": {"max_allowed": int(algo.staleness.max_allowed),
+                      "history": list(algo.staleness.history),
+                      "dropped": list(algo.staleness.dropped)},
+    }
+    arrays = {
+        "x_flat": np.asarray(st.x_flat),
+        "hidden_flat": np.asarray(st.hidden_flat),
+        "momentum_flat": np.asarray(st.momentum_flat),
+    }
+    if buf._packed:
+        # every entry of a fill window shares one wire shape (the buffer
+        # validates layout/bits on add), so the window stacks losslessly
+        arrays["buf_packed_a"] = np.stack(
+            [np.asarray(a) for a, _ in buf._packed])
+        arrays["buf_packed_b"] = np.stack(
+            [np.asarray(b) for _, b in buf._packed])
+    if buf._acc is not None:
+        arrays["buf_acc"] = np.asarray(buf._acc)
+    if buf._flat_acc is not None:
+        arrays["buf_flat_acc"] = np.asarray(buf._flat_acc)
+    np.savez(_normalize_path(path), __meta__=np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8), **arrays)
+
+
+def load_checkpoint(path, algo):
+    """Restore a ``save_checkpoint`` archive into ``algo`` (in place).
+
+    ``algo`` must be built from the same model/config: the checkpoint's
+    layout fingerprint, buffer capacity and quantizer specs are verified
+    before any state is touched, so a failed load leaves ``algo`` intact.
+    Returns ``algo``.
+    """
+    from repro.core.qafel import ServerState  # lazy: avoid import cycle
+
+    with np.load(_normalize_path(path)) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode("utf-8"))
+        arrays = {k: data[k] for k in data.files if k != "__meta__"}
+
+    if meta["version"] != CHECKPOINT_VERSION:
+        raise ValueError(f"unsupported checkpoint version {meta['version']}")
+    layout = algo.state.layout
+    if meta["layout"] != _layout_fingerprint(layout):
+        raise ValueError(
+            "checkpoint layout does not match the model: the archive was "
+            "saved for a different parameter structure")
+    want_q = {"client": algo.cq.spec.label(), "server": algo.sq.spec.label()}
+    if meta["quantizers"] != want_q:
+        raise ValueError(f"checkpoint quantizers {meta['quantizers']} != "
+                         f"algo quantizers {want_q}")
+    bmeta = meta["buffer"]
+    if bmeta["capacity"] != algo.buffer.capacity:
+        raise ValueError(f"checkpoint buffer capacity {bmeta['capacity']} != "
+                         f"algo capacity {algo.buffer.capacity}")
+
+    algo.state = ServerState(
+        x_flat=jnp.asarray(arrays["x_flat"]),
+        hidden_flat=jnp.asarray(arrays["hidden_flat"]),
+        momentum_flat=jnp.asarray(arrays["momentum_flat"]),
+        layout=layout, t=meta["t"])
+
+    buf = algo.buffer
+    buf._acc = (jnp.asarray(arrays["buf_acc"])
+                if bmeta["has_acc"] else None)
+    buf._flat_acc = (jnp.asarray(arrays["buf_flat_acc"])
+                     if bmeta["has_flat_acc"] else None)
+    # packed payloads stay host-numpy, exactly as cohort-encoded uploads
+    # arrive (the flush stacks them host-side either way)
+    buf._packed = [(arrays["buf_packed_a"][i], arrays["buf_packed_b"][i])
+                   for i in range(bmeta["n_packed"])]
+    buf._weights = list(bmeta["weights"])
+    buf._weightsum = bmeta["weightsum"]
+    buf._bits = bmeta["bits"]
+    buf._n = bmeta["n"]
+    buf._layout = layout if bmeta["has_layout"] else None
+    buf.count = bmeta["count"]
+    buf.flushes = bmeta["flushes"]
+
+    for field, value in meta["meter"].items():
+        setattr(algo.meter, field, value)
+    algo.staleness.max_allowed = meta["staleness"]["max_allowed"]
+    algo.staleness.history = list(meta["staleness"]["history"])
+    algo.staleness.dropped = list(meta["staleness"]["dropped"])
+    return algo

@@ -18,9 +18,13 @@ count and ``broadcast_MB`` accounts bytes actually sent on the downlink.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
-from repro.core.quantizers import Quantizer
+import numpy as np
+
+from repro.core.quantizers import (Quantizer, TreeLayout,
+                                   packed_identity_payload,
+                                   packed_qsgd_payload)
 
 CLIENT_UPDATE = "client_update"
 HIDDEN_BROADCAST = "hidden_broadcast"
@@ -63,6 +67,58 @@ def frame_packed_message(kind: str, quantizer: Quantizer, enc: dict,
     return Message(kind=kind, payload=enc,
                    wire_bytes=quantizer.wire_bytes_packed(enc["layout"]),
                    meta=dict(meta))
+
+
+def payloads_from_fused(quantizer: Quantizer, out: dict, layout: TreeLayout,
+                        enc_keys=None, *, count: Optional[int] = None,
+                        to_numpy: bool = False) -> List[dict]:
+    """Slice per-member wire payload dicts out of one fused cohort
+    train+encode output (``kernels.ops.cohort_train_encode_step``).
+
+    ``count`` limits slicing to the first N rows — tier groups are
+    mask-padded to the full cohort size, and the padding rows past the
+    group's real members must not be encoded (for sparse kinds each row is
+    a real argsort/choice dispatch). ``to_numpy=True`` converts the batch
+    to host numpy ONCE so the per-member payloads are views (no
+    per-message device ops) — the cohort engine's mode; the sequential b=1
+    caller keeps device arrays. Sparse quantizers (data-dependent wire
+    shapes) encode each member's flat row eagerly through the existing
+    ``encode_flat`` with its per-member key.
+    """
+    n = layout.total_size
+    kind = quantizer.spec.kind
+    if kind == "qsgd":
+        packed, norms = out["packed"], out["norms"]
+        if to_numpy:
+            packed, norms = np.asarray(packed), np.asarray(norms)
+        count = packed.shape[0] if count is None else count
+        return [packed_qsgd_payload(packed[i], norms[i], quantizer.spec.bits,
+                                    n, layout)
+                for i in range(count)]
+    flat = out["flat"]
+    count = flat.shape[0] if count is None else count
+    if kind == "identity":
+        if to_numpy:
+            flat = np.asarray(flat)
+        return [packed_identity_payload(flat[i], n, layout)
+                for i in range(count)]
+    return [quantizer.encode_flat(flat[i], layout, enc_keys[i])
+            for i in range(count)]
+
+
+def frame_cohort_messages(kind: str, quantizer: Quantizer, out: dict,
+                          layout: TreeLayout, enc_keys=None, *,
+                          version: int = 0, count: Optional[int] = None,
+                          to_numpy: bool = False) -> List[Message]:
+    """Frame one fused cohort output as wire Messages (shared wire size,
+    shared model ``version``) — the only step between the single fused
+    dispatch and ``QAFeL.receive``. ``count`` limits framing to a mask-
+    padded tier group's real members."""
+    wire = quantizer.wire_bytes_packed(layout)
+    return [Message(kind=kind, payload=enc, wire_bytes=wire,
+                    meta={"version": version})
+            for enc in payloads_from_fused(quantizer, out, layout, enc_keys,
+                                           count=count, to_numpy=to_numpy)]
 
 
 def decode_message(quantizer: Quantizer, msg: Message):

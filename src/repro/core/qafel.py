@@ -43,8 +43,9 @@ from repro.common.tree import tree_sub
 from repro.core.buffer import FlushBatch, UpdateBuffer
 from repro.core.hidden_state import HiddenState
 from repro.core.protocol import (CLIENT_UPDATE, HIDDEN_BROADCAST, Message,
-                                 TrafficMeter, decode_message, encode_message,
-                                 encode_message_flat, frame_packed_message)
+                                 TrafficMeter, decode_message,
+                                 encode_message_flat, frame_cohort_messages,
+                                 frame_packed_message)
 from repro.core.quantizers import (Quantizer, TreeLayout, flatten_tree,
                                    make_quantizer, packed_identity_payload,
                                    packed_qsgd_payload)
@@ -79,6 +80,32 @@ class QAFeLConfig:
 # ---------------------------------------------------------------------------
 
 
+def local_sgd_scan(loss_fn: Callable, lr: float, y0, batches, keys, *,
+                   with_loss: bool = False):
+    """The ONE local-SGD loop (Algorithm 2 lines 2-4): a ``lax.scan`` of P
+    plain SGD steps from ``y0``, one ``(batch, key)`` slice per step.
+
+    Shared by every client-side surface — ``client_update`` (host simulator,
+    fused cohort step) and the distributed round's in-graph client bodies
+    (``repro.distributed.steps``) — so all engines run the identical
+    compiled step math. ``with_loss=True`` additionally stacks the per-step
+    losses (``value_and_grad``; the distributed round reports them),
+    ``with_loss=False`` keeps the pure-gradient path bit-for-bit as before.
+
+    Returns ``(y_final, losses-or-None)``.
+    """
+    def sgd_step(y, inp):
+        batch, k = inp
+        if with_loss:
+            l, g = jax.value_and_grad(loss_fn)(y, batch, k)
+        else:
+            l, g = None, jax.grad(loss_fn)(y, batch, k)
+        y = jax.tree.map(lambda yi, gi: (yi - lr * gi).astype(yi.dtype), y, g)
+        return y, l
+
+    return jax.lax.scan(sgd_step, y0, (batches, keys))
+
+
 def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key):
     """Algorithm 2: y_0 <- x-hat; P local SGD steps; delta = y_P - y_0.
 
@@ -92,15 +119,58 @@ def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key):
     Q_c(y_0 - y_p). We follow the text (delta = y_P - y_0, i.e. a descent
     direction) — see DESIGN.md for the discrepancy note.
     """
-    def sgd_step(y, inp):
-        batch, k = inp
-        g = jax.grad(loss_fn)(y, batch, k)
-        y = jax.tree.map(lambda yi, gi: (yi - qcfg.client_lr * gi).astype(yi.dtype), y, g)
-        return y, None
-
     keys = jax.random.split(key, qcfg.local_steps)
-    y_final, _ = jax.lax.scan(sgd_step, x_hat, (batches, keys))
+    y_final, _ = local_sgd_scan(loss_fn, qcfg.client_lr, x_hat,
+                                batches, keys)
     return tree_sub(y_final, x_hat)
+
+
+def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
+                       hidden_flat, batches, k_train, k_enc, flag, *, b: int):
+    """Flat-in / packed-out client pipeline: the traceable body of the fused
+    cohort train+encode dispatch (``kernels.ops.cohort_train_encode_step``).
+
+    Takes the server's device-resident flat x-hat, unflattens it to the
+    model pytree *inside* the computation, runs the (vmapped, for b > 1)
+    local-SGD scan, flattens the delta stack to ``(b, d)``, and runs the
+    batched quantize-pack in the same graph — no stacked delta pytree, no
+    ``hidden_tree`` materialization, and no separate encode dispatch ever
+    exist on the client path.
+
+    Bit-exactness contract (same as the fused server flush): the flat
+    delta stack — the pre-fusion ``client_update`` jit's output boundary,
+    whose consumer is the encode's mul/add-heavy norm math — is pinned with
+    ``kernels.ops.hard_boundary`` so XLA cannot FMA-contract the local-SGD
+    subtraction into the bucket-norm reduction. The in-jit unflatten needs
+    NO boundary: slices are exact data movement, so the scan body sees
+    bit-identical operands whether x-hat leaves arrive as materialized jit
+    arguments (the old path) or as in-graph views of ``hidden_flat``.
+    Encode dither: b == 1 uses the single-message threefry path, b > 1 the
+    batched counter-hash path, matching the host-side wire entries message
+    for message.
+
+    Returns ``{"packed", "norms"}`` for a qsgd ``spec``, else ``{"flat"}``
+    (identity's flat payload IS its wire format — the FedBuff fast path;
+    top_k/rand_k have data-dependent wire shapes and are sliced/encoded by
+    the host from the same flat output).
+    """
+    from repro.core.quantizers import (flatten_stacked_leaves,
+                                       qsgd_encode_flat2d)
+    from repro.kernels import ops as kops  # local import: kernels are optional
+
+    boundary = functools.partial(kops.hard_boundary, flag)
+    x_hat = layout.unflatten(hidden_flat)
+    if b == 1:
+        deltas = client_update(loss_fn, qcfg, x_hat, batches, k_train)
+    else:
+        deltas = jax.vmap(functools.partial(client_update, loss_fn, qcfg),
+                          in_axes=(None, 0, 0))(x_hat, batches, k_train)
+    flat2d = boundary(flatten_stacked_leaves(jax.tree.leaves(deltas), b))
+    if spec.kind == "qsgd":
+        packed, norms = qsgd_encode_flat2d(flat2d, k_enc, spec.bits,
+                                           threefry=(b == 1))
+        return {"packed": packed, "norms": norms}
+    return {"flat": flat2d}
 
 
 def server_apply_flat(x, momentum, delta, *, lr, beta, boundary=None):
@@ -237,20 +307,44 @@ class QAFeL:
         self.buffer = UpdateBuffer(capacity=qcfg.buffer_size, quantizer=self.cq)
         self.meter = TrafficMeter()
         self.staleness = StalenessMonitor(max_allowed=qcfg.max_staleness)
-        self._client_update = _jitted_client_update(loss_fn, qcfg)
 
     # -- client side ------------------------------------------------------
     def run_client(self, batches, key) -> Tuple[Message, int]:
         """Algorithm 2 on the CURRENT hidden state; returns (message, version).
 
+        One fused train+encode dispatch (``kernels.ops.
+        cohort_train_encode_step`` at b=1): the flat x-hat goes in, the
+        packed wire payload comes out — no ``hidden_tree`` view and no
+        separate encode dispatch, bit-identical to the pre-fusion
+        two-dispatch path. The cohort engine takes the same entry with
+        b = cohort_size, so both engines share one client pipeline.
+
         In the async simulator the caller records the version now and
         delivers the message later (after the sampled training duration).
         """
+        from repro.kernels import ops as kops  # local import: kernels optional
+
         k_train, k_enc = jax.random.split(key)
-        delta = self._client_update(self.state.hidden_tree, batches, k_train)
-        msg = encode_message(CLIENT_UPDATE, self.cq, delta, k_enc,
-                             version=self.state.t)
-        return msg, self.state.t
+        st = self.state
+        out = kops.cohort_train_encode_step(
+            self.loss_fn, self.qcfg, self.cq.spec, st.layout, st.hidden_flat,
+            batches, k_train, k_enc, self._flag, b=1)
+        msg = frame_cohort_messages(CLIENT_UPDATE, self.cq, out, st.layout,
+                                    enc_keys=[k_enc], version=st.t)[0]
+        return msg, st.t
+
+    # -- checkpoint / resume ----------------------------------------------
+    def save_checkpoint(self, path) -> None:
+        """Serialize the flat ``ServerState`` + buffer occupancy + meters so
+        a run can resume bit-identically (``repro.core.checkpoint``)."""
+        from repro.core.checkpoint import save_checkpoint
+        save_checkpoint(path, self)
+
+    def load_checkpoint(self, path) -> "QAFeL":
+        """Restore state saved by ``save_checkpoint`` into this instance
+        (layout identity is verified against this model). Returns self."""
+        from repro.core.checkpoint import load_checkpoint
+        return load_checkpoint(path, self)
 
     # -- server side ------------------------------------------------------
     def receive(self, msg: Message, key, n_receivers: int = 1) -> Optional[Message]:

@@ -193,6 +193,62 @@ def packed_identity_payload(flat, n: int, layout: TreeLayout) -> dict:
             "n": n, "layout": layout}
 
 
+def flatten_stacked_leaves(leaves, b: int) -> jnp.ndarray:
+    """Flatten B-stacked pytree leaves into one ``(b, d)`` f32 stack (the
+    wire coordinate order). The ONE implementation of the delta-stack
+    flatten, shared by the host-side ``encode_batch`` and the in-jit fused
+    cohort step so the two can never diverge. Traceable."""
+    if len(leaves) == 1:
+        return leaves[0].reshape(b, -1).astype(jnp.float32)
+    return jnp.concatenate(
+        [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def qsgd_encode_flat2d(flat2d: jnp.ndarray, keys, bits: int, *,
+                       threefry: bool = False):
+    """Traceable batched quantize-pack over an already-flat ``(B, n)`` stack.
+
+    The in-jit callee behind the fused cohort train+encode step
+    (``kernels.ops.cohort_train_encode_step``): runs the Pallas kernels'
+    shared block math directly in the caller's trace, so training and
+    encoding live in ONE computation with no dispatch boundary between them.
+
+    Dither selection mirrors the host-side wire entries exactly:
+
+    * ``threefry=True`` (requires B == 1; ``keys`` is one PRNG key)
+      reproduces the single-message path — ``kernels.ops.qsgd_quantize``'s
+      host-threefry uniforms — bit for bit, which is what keeps the
+      sequential engine's wire bits unchanged by the fusion.
+    * ``threefry=False`` (``keys`` is a (B, ...) per-message key stack)
+      uses the batched entry's in-kernel counter-hash dither, bit-identical
+      to ``kernels.ops.qsgd_quantize_batch``.
+
+    Returns ``(packed uint8 (B, rows, 128*bits//8), norms f32 (B, rows))``
+    in wire layout.
+    """
+    from repro.kernels import qsgd as _kq  # local import: kernels are optional
+
+    b, n = flat2d.shape
+    rows = -(-n // _kq.LANES)
+    pad = rows * _kq.LANES - n
+    if pad:
+        flat2d = jnp.concatenate(
+            [flat2d, jnp.zeros((b, pad), flat2d.dtype)], axis=1)
+    if threefry:
+        if b != 1:
+            raise ValueError("threefry dither is the single-message path; "
+                             f"got B={b}")
+        x2d = flat2d.reshape(rows, _kq.LANES)
+        u2d = jax.random.uniform(keys, (rows, _kq.LANES), dtype=jnp.float32)
+        packed, norm = _kq._quantize_pack_block(x2d, u2d, bits)
+        return packed[None], norm.reshape(1, rows)
+    x3d = flat2d.reshape(b, rows, _kq.LANES)
+    seeds = jnp.asarray(keys).reshape(b, -1)[:, :2].astype(jnp.uint32)
+    packed, norm = _kq._quantize_pack_batch_block(
+        x3d, seeds[:, 0], seeds[:, 1], 0, bits)
+    return packed, norm.reshape(b, rows)
+
+
 # ---------------------------------------------------------------------------
 # qsgd math (pure jnp; the Pallas kernel in repro/kernels mirrors this)
 # ---------------------------------------------------------------------------
@@ -388,11 +444,7 @@ class Quantizer:
             return [self.encode(jax.tree.map(lambda l: l[0], stacked_tree),
                                 jnp.asarray(keys)[0])]
         layout = TreeLayout.of(jax.tree.map(lambda l: l[0], stacked_tree))
-        if len(leaves) == 1:
-            flat2d = leaves[0].reshape(b, -1).astype(jnp.float32)
-        else:
-            flat2d = jnp.concatenate(
-                [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+        flat2d = flatten_stacked_leaves(leaves, b)
         n = int(flat2d.shape[1])
         keys = jnp.asarray(keys)
         # per-message payloads are handed back as numpy: the host-level wire

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.common.compat import shard_map
 from repro.common.tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
 from repro.core.hidden_state import hidden_apply
-from repro.core.qafel import QAFeLConfig, server_apply
+from repro.core.qafel import QAFeLConfig, local_sgd_scan, server_apply
 from repro.core.quantizers import make_quantizer
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -91,16 +91,12 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
             buf, loss_sum = carry
             batches_kp, w_k, key_k = inp
 
-            def sgd_step(y, inp2):
-                b_p, k_p = inp2
-                l, g = jax.value_and_grad(loss)(y, b_p, k_p)
-                y = jax.tree.map(
-                    lambda yi, gi: (yi - qcfg.client_lr * gi).astype(yi.dtype), y, g)
-                return y, l
-
+            # the shared local-SGD loop (repro.core.qafel.local_sgd_scan):
+            # the same compiled step math every host-level engine runs
             pkeys = jax.random.split(key_k, qcfg.local_steps + 1)
-            y_final, losses = jax.lax.scan(
-                sgd_step, state.hidden, (batches_kp, pkeys[:-1]))
+            y_final, losses = local_sgd_scan(
+                loss, qcfg.client_lr, state.hidden, batches_kp, pkeys[:-1],
+                with_loss=True)
             delta = tree_sub(y_final, state.hidden)
             delta_q = cq.qdq(delta, pkeys[-1])  # Q_c on the upload
             buf = tree_axpy(w_k, delta_q, buf)
@@ -201,16 +197,10 @@ def _make_podq_round(cfg: ModelConfig, qcfg: QAFeLConfig, cq, sq, *,
             buf, loss_sum = carry
             batches_kp, w_k, key_k = inp
 
-            def sgd_step(y, inp2):
-                b_p, k_p = inp2
-                l, g = jax.value_and_grad(loss)(y, b_p, k_p)
-                y = jax.tree.map(
-                    lambda yi, gi: (yi - qcfg.client_lr * gi).astype(yi.dtype), y, g)
-                return y, l
-
             pkeys = jax.random.split(key_k, qcfg.local_steps + 1)
-            y_final, losses = jax.lax.scan(sgd_step, hidden,
-                                           (batches_kp, pkeys[:-1]))
+            y_final, losses = local_sgd_scan(
+                loss, qcfg.client_lr, hidden, batches_kp, pkeys[:-1],
+                with_loss=True)
             delta = tree_sub(y_final, hidden)
             delta_q = cq.qdq(delta, pkeys[-1])  # per-client Q_c (Algorithm 2)
             buf = tree_axpy(w_k, delta_q, buf)

@@ -175,6 +175,58 @@ def hard_boundary(flag, vals):
     return out[0] if single else out
 
 
+# ---------------------------------------------------------------------------
+# Fused cohort train+encode: ONE jitted dispatch for the whole client-side
+# pipeline (Algorithm 2 + upload quantize-pack) of a cohort tier-group
+# ---------------------------------------------------------------------------
+
+# Trace counter for the fused client step, mirroring SERVER_FLUSH_TRACES:
+# tests drive multi-cohort runs and assert the step compiles ONCE per
+# (quantizer spec, cohort size) — i.e. the whole client path really is a
+# single compiled dispatch per cohort, with tier groups mask-padded to a
+# static shape so membership churn never retraces.
+COHORT_STEP_TRACES = 0
+
+
+@functools.lru_cache(maxsize=64)
+def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int):
+    """jit of the flat-in/packed-out client pipeline, cached by
+    (loss_fn, qcfg, quantizer spec, layout, cohort size) so engine
+    instances, benchmark sweeps and scenario tiers share compilations.
+    Bounded: loss_fn closures can capture datasets."""
+    from repro.core.qafel import client_update_flat  # lazy: kernels stay core-free
+
+    def step(hidden_flat, batches, k_train, k_enc, flag):
+        global COHORT_STEP_TRACES
+        COHORT_STEP_TRACES += 1
+        return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
+                                  batches, k_train, k_enc, flag, b=b)
+
+    return jax.jit(step)
+
+
+def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
+                             batches, k_train, k_enc, flag, *, b: int):
+    """The entire client pipeline of one cohort tier-group as ONE jitted
+    dispatch: unflatten the device-resident flat x-hat *inside* the jit, run
+    the (vmapped) local-SGD scan, flatten the delta stack to (b, d), and
+    quantize-pack it in the same computation.
+
+    ``batches`` / ``k_train`` / ``k_enc`` are stacked on a leading b axis
+    for b > 1 and unstacked for b == 1 (the sequential engine's shape —
+    ``QAFeL.run_client`` calls this with b=1, so both engines share one
+    compiled client path). ``flag`` is the runtime-True predicate behind the
+    ``hard_boundary`` materialization points that pin bit-exactness with the
+    pre-fusion multi-dispatch reference.
+
+    Returns ``{"packed": (b, rows, 128*bits//8), "norms": (b, rows)}`` for
+    qsgd, ``{"flat": (b, d)}`` otherwise (identity's flat rows ARE the wire
+    payload; sparse kinds are encoded by the host from the flat rows).
+    """
+    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b)(
+        hidden_flat, batches, k_train, k_enc, flag)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "sbits", "n", "lr", "beta"),
                    donate_argnums=(0, 1, 2))
 def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,

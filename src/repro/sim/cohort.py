@@ -3,16 +3,18 @@
 The sequential ``AsyncFLSimulator`` trains exactly one client per Python
 iteration, so host wall-clock grows linearly with concurrency and the
 paper's concurrency 100/500/1000 sweeps are out of reach. This engine
-admits arrivals in **cohorts** of ``cohort_size``:
+admits arrivals in **cohorts** of ``cohort_size`` and runs each cohort
+tier-group's ENTIRE client pipeline — unflatten the server's flat x-hat,
+vmapped local SGD, delta flatten, batched quantize-pack — as ONE jitted
+dispatch (``kernels.ops.cohort_train_encode_step``):
 
-* one ``jax.vmap``-ed, jitted ``client_update`` call trains the whole
-  cohort (per-client batches and PRNG keys stacked on a leading axis),
-* one batched quantize-pack kernel dispatch (``Quantizer.encode_batch`` →
-  ``kernels.ops.qsgd_quantize_batch``) turns all resulting deltas into
-  packed wire messages at once,
+* no stacked delta pytree and no per-step ``hidden_tree`` view ever
+  materialize: the flat x-hat goes in, packed wire codes + bucket norms
+  come out,
 * the packed messages feed ``QAFeL.receive`` / ``UpdateBuffer`` verbatim,
   so the server stays decode-free between flushes exactly as in the
-  sequential path.
+  sequential path (which shares the same fused entry at b=1 through
+  ``QAFeL.run_client``).
 
 **Cohort admission model** (see DESIGN.md): whenever the arrival process
 reaches the next pending completion, the next ``cohort_size`` arrivals are
@@ -25,13 +27,17 @@ streams in the sequential order and reproduces the sequential trajectory
 bit for bit (pinned by tests/test_cohort_engine.py).
 
 Timing, dropouts, stragglers and per-client quantizer tiers come from a
-``ScenarioConfig`` (``repro.sim.scenarios``); tiered clients that upload
+``ScenarioConfig`` (``repro.sim.scenarios``). Tier groups are **mask-padded
+to the full static cohort shape** — a cohort whose members split 29/3
+across two tiers issues two full-size dispatches and slices the real rows
+out host-side — so every group hits the same lru-cached jit per
+``(quantizer spec, cohort_size)`` and tier membership churn never retraces
+(``kernels.ops.COHORT_STEP_TRACES`` pins it). Tiered clients that upload
 through a non-default quantizer are decoded eagerly on receipt (the
 default-tier majority stays packed).
 """
 from __future__ import annotations
 
-import functools
 import heapq
 import math
 from typing import Any, Callable, Dict, List, Union
@@ -40,20 +46,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.protocol import CLIENT_UPDATE, Message
-from repro.core.qafel import QAFeL, QAFeLConfig, client_update
+from repro.core.protocol import CLIENT_UPDATE, Message, frame_cohort_messages
+from repro.core.qafel import QAFeL
 from repro.core.quantizers import make_quantizer
 from repro.sim.events import BaseAsyncSimulator, SimConfig, SimResult
 from repro.sim.scenarios import ScenarioConfig, ScenarioSampler, get_scenario
-
-
-@functools.lru_cache(maxsize=32)
-def _batched_client_update(loss_fn: Callable, qcfg: QAFeLConfig):
-    """jit(vmap(client_update)) cached by (loss_fn, qcfg) so repeated engine
-    instances (benchmark sweeps) compile the cohort step once. Bounded:
-    loss_fn closures can capture datasets (see qafel._jitted_client_update)."""
-    return jax.jit(jax.vmap(functools.partial(client_update, loss_fn, qcfg),
-                            in_axes=(None, 0, 0)))
 
 
 @jax.jit
@@ -79,7 +76,6 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
                                        self.rng)
         self.tier_quantizers = [make_quantizer(name)
                                 for _, name in self.scenario.tiers]
-        self._cohort_update = _batched_client_update(algo.loss_fn, algo.qcfg)
         self.dropped = 0
         self._receive_keys: List[Any] = []
 
@@ -99,32 +95,52 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
         return self._receive_keys.pop()
 
     # -- cohort admission -------------------------------------------------
-    def _encode_cohort(self, deltas, enc_keys, version: int) -> List[Message]:
-        """Batched encode of a cohort's stacked deltas, grouped by tier.
+    def _train_encode_cohort(self, batches: List[Any], train_keys, enc_keys,
+                             tiers: np.ndarray) -> List[Message]:
+        """Train + encode one admitted cohort, one fused dispatch per
+        tier-group.
 
-        ``enc_keys`` is a (B, 2) key array. The default tier (the vast
-        majority unless the scenario says otherwise) is one ``encode_batch``
-        call — one kernel dispatch for the whole group; each non-default
-        tier gets its own batched call through its narrower quantizer.
+        Groups are mask-padded to the full cohort size (padding slots repeat
+        the group's first member; their rows are computed and discarded) so
+        every group reuses the lru-cached jit for its ``(spec, B)`` — no
+        retrace as tier membership varies cohort to cohort. Payload slicing
+        is host-numpy views via ``protocol.frame_cohort_messages``
+        (``count=`` keeps padding rows off the wire). Note: at b > 1 every
+        tier group encodes with the batched counter-hash dither regardless
+        of how few real members it has — the pre-fusion per-tier
+        ``encode_batch`` happened to delegate SINGLETON groups to the
+        threefry path, so seeded tiered trajectories differ from it there
+        (same wire format, unbiasedness and error bound; the pinned
+        contracts — cohort_size=1 identity replay and within-version
+        determinism — are unaffected).
         """
-        b = int(enc_keys.shape[0])
-        tiers = self.sampler.tier_indices(b)
+        from repro.kernels import ops as kops  # local import: kernels optional
+
+        b = len(batches)
+        st = self.algo.state
+        version = st.t
         msgs: List[Any] = [None] * b
         for tier in sorted(set(tiers.tolist())):
             q = self.algo.cq if tier < 0 else self.tier_quantizers[tier]
             members = np.nonzero(tiers == tier)[0]
-            if members.size == b:
-                sub, keys = deltas, enc_keys
+            if b == 1:
+                grp_batches, gt, ge = batches[0], train_keys[0], enc_keys[0]
             else:
-                midx = jnp.asarray(members)
-                sub = jax.tree.map(lambda l: l[midx], deltas)
-                keys = enc_keys[midx]
-            encs = q.encode_batch(sub, keys)
-            wire = q.wire_bytes_packed(encs[0]["layout"])
-            for i, enc in zip(members.tolist(), encs):
-                msgs[i] = Message(kind=CLIENT_UPDATE, payload=enc,
-                                  wire_bytes=wire,
-                                  meta={"version": version})
+                pad_idx = np.concatenate(
+                    [members, np.repeat(members[:1], b - members.size)])
+                midx = jnp.asarray(pad_idx)
+                grp_batches = _stack_trees(*[batches[i] for i in pad_idx])
+                gt, ge = train_keys[midx], enc_keys[midx]
+            out = kops.cohort_train_encode_step(
+                self.algo.loss_fn, self.algo.qcfg, q.spec, st.layout,
+                st.hidden_flat, grp_batches, gt, ge, self.algo._flag, b=b)
+            ekeys = np.asarray(ge).reshape(b, -1) if b > 1 else [ge]
+            mlist = frame_cohort_messages(CLIENT_UPDATE, q, out, st.layout,
+                                          enc_keys=ekeys, version=version,
+                                          count=members.size,
+                                          to_numpy=(b > 1))
+            for j, i in enumerate(members.tolist()):
+                msgs[i] = mlist[j]
         return msgs
 
     def _admit_cohort(self, next_arrival: float, next_client: int):
@@ -133,21 +149,21 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
         Returns (messages, arrival_times, durations, drop_mask,
         new_next_arrival). RNG streams are consumed in the sequential
         engine's order (per client: batches key, client key; then the numpy
-        duration draws), so cohort_size=1 replays it exactly.
+        tier/duration/dropout draws), so cohort_size=1 replays it exactly.
         """
         b = self.cohort_size
         inter = self.sampler.interarrivals(b)
         arrivals = next_arrival + np.concatenate(
             [[0.0], np.cumsum(inter[:-1])])
         new_next_arrival = float(arrivals[-1] + inter[-1])
+        tiers = self.sampler.tier_indices(b)
 
         if b == 1:
             # sequential key order (batches key, then client key) so the
             # identity-scenario replay is bit-exact
             batch_keys = [self._next_key()]
             k_train, k_enc = jax.random.split(self._next_key())
-            train_keys = k_train[None]
-            enc_keys = k_enc[None]
+            train_keys, enc_keys = [k_train], [k_enc]
         else:
             # one split covers the whole cohort: 2B+1 subkeys in two device
             # ops instead of 2B sequential splits
@@ -158,13 +174,7 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
             train_keys, enc_keys = te[:, 0], te[:, 1]
         batches = [self.client_batches_fn(next_client + i, batch_keys[i])
                    for i in range(b)]
-        stacked = _stack_trees(*batches)
-        # hidden_tree: the lazily-materialized (per-server-step cached) tree
-        # view of the device-resident flat x-hat — the client-update boundary
-        # is the only place the cohort engine touches a pytree of the state
-        deltas = self._cohort_update(self.algo.state.hidden_tree, stacked,
-                                     train_keys)
-        msgs = self._encode_cohort(deltas, enc_keys, self.algo.state.t)
+        msgs = self._train_encode_cohort(batches, train_keys, enc_keys, tiers)
         durations = self.sampler.durations(b)
         drops = self.sampler.dropouts(b)
         return msgs, arrivals, durations, drops, new_next_arrival

@@ -144,7 +144,13 @@ class BaseAsyncSimulator:
 class AsyncFLSimulator(BaseAsyncSimulator):
     """Drives a QAFeL (or FedBuff) instance through an async event timeline,
     one client per iteration (the reference implementation; the vectorized
-    cohort engine lives in repro.sim.cohort)."""
+    cohort engine lives in repro.sim.cohort).
+
+    The client pipeline itself is shared with the cohort engine:
+    ``algo.run_client`` is one fused train+encode dispatch
+    (``kernels.ops.cohort_train_encode_step`` at b=1), so this engine and
+    the cohort engine differ only in admission batching, never in the
+    compiled client math."""
 
     def run(self) -> SimResult:
         cfg, algo = self.cfg, self.algo

@@ -1,0 +1,151 @@
+"""Checkpoint/resume of the async protocol: flat ServerState + buffer
+occupancy round-trip, bit-identical continuation, and mismatch guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QAFeL, QAFeLConfig, load_checkpoint, save_checkpoint
+
+
+def quad_loss(params, batch, key):
+    del key
+    return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+
+PARAMS0 = {"w": jnp.zeros((300,), jnp.float32),
+           "b": jnp.ones((7,), jnp.float32)}
+
+
+def make_algo(cq="qsgd4", sq="qsgd4", params0=PARAMS0, **kw):
+    qcfg = QAFeLConfig(client_lr=0.1, server_lr=1.2, server_momentum=0.3,
+                       buffer_size=3, local_steps=2, client_quantizer=cq,
+                       server_quantizer=sq, **kw)
+    return QAFeL(qcfg, quad_loss, params0)
+
+
+def drive(algo, n_uploads, seed=0, d=300):
+    key = jax.random.PRNGKey(seed)
+    for _ in range(n_uploads):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        batches = {"target": jnp.broadcast_to(
+            jax.random.normal(k1, (d,)) + 3.0, (2, d))}
+        msg, _ = algo.run_client(batches, k2)
+        algo.receive(msg, k3)
+    return algo
+
+
+def drive_pair(a, b, n_uploads, seed=9, d=300):
+    """Feed two algos the identical upload sequence (same keys/batches)."""
+    key = jax.random.PRNGKey(seed)
+    for _ in range(n_uploads):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        batches = {"target": jnp.broadcast_to(
+            jax.random.normal(k1, (d,)) + 3.0, (2, d))}
+        ma, _ = a.run_client(batches, k2)
+        mb, _ = b.run_client(batches, k2)
+        ra = a.receive(ma, k3)
+        rb = b.receive(mb, k3)
+        assert (ra is None) == (rb is None)
+
+
+def assert_same_state(a, b):
+    np.testing.assert_array_equal(np.asarray(a.state.x_flat),
+                                  np.asarray(b.state.x_flat))
+    np.testing.assert_array_equal(np.asarray(a.state.hidden_flat),
+                                  np.asarray(b.state.hidden_flat))
+    np.testing.assert_array_equal(np.asarray(a.state.momentum_flat),
+                                  np.asarray(b.state.momentum_flat))
+    assert a.state.t == b.state.t
+    assert a.meter.summary() == b.meter.summary()
+    assert a.metrics(drift=True) == b.metrics(drift=True)
+
+
+@pytest.mark.parametrize("cq,uploads_before", [
+    ("qsgd4", 7),      # mid-window: 7 % K=3 -> occupancy 1 (packed stack)
+    ("identity", 8),   # mid-window identity: flat accumulator occupancy
+    ("qsgd4", 6),      # window boundary: empty buffer
+])
+def test_resume_continues_bit_identically(tmp_path, cq, uploads_before):
+    """A checkpointed-and-resumed server, fed the same remaining uploads,
+    finishes bit-identical to the uninterrupted one — state, buffered
+    window, meters and staleness summaries included."""
+    path = str(tmp_path / "ckpt.npz")
+    algo = drive(make_algo(cq=cq), uploads_before, seed=4)
+    expect_count = uploads_before % algo.qcfg.buffer_size
+    assert algo.buffer.count == expect_count
+    save_checkpoint(path, algo)
+
+    resumed = make_algo(cq=cq)
+    load_checkpoint(path, resumed)
+    assert resumed.buffer.count == expect_count
+    assert_same_state(algo, resumed)
+
+    # continue BOTH with the identical upload sequence across several more
+    # flush boundaries; every subsequent message and flush must match
+    drive_pair(algo, resumed, 8)
+    assert algo.state.t == algo.meter.broadcasts >= 4
+    assert_same_state(algo, resumed)
+
+
+def test_qafel_methods_roundtrip(tmp_path):
+    """The QAFeL-level save_checkpoint/load_checkpoint wiring."""
+    path = str(tmp_path / "ckpt.npz")
+    algo = drive(make_algo(), 4, seed=1)
+    algo.save_checkpoint(path)
+    resumed = make_algo().load_checkpoint(path)
+    assert_same_state(algo, resumed)
+    assert resumed.buffer.count == algo.buffer.count == 1
+    # the restored packed window flushes exactly like the original's
+    drive_pair(algo, resumed, 2)
+    assert_same_state(algo, resumed)
+
+
+def test_extensionless_path_roundtrips(tmp_path):
+    """np.savez silently appends '.npz'; save and load must agree on the
+    final filename so an extension-less path round-trips."""
+    path = str(tmp_path / "ckpt")  # no extension
+    algo = drive(make_algo(), 4, seed=3)
+    save_checkpoint(path, algo)
+    resumed = load_checkpoint(path, make_algo())
+    assert_same_state(algo, resumed)
+
+
+def test_checkpoint_with_max_staleness_history(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    algo = drive(make_algo(max_staleness=5), 7, seed=2)
+    save_checkpoint(path, algo)
+    resumed = load_checkpoint(path, make_algo(max_staleness=5))
+    assert resumed.staleness.max_allowed == 5
+    assert resumed.staleness.history == algo.staleness.history
+    assert resumed.metrics() == algo.metrics()
+
+
+def test_load_rejects_mismatches(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    algo = drive(make_algo(), 4)
+    save_checkpoint(path, algo)
+
+    wrong_layout = make_algo(params0={"w": jnp.zeros((301,), jnp.float32),
+                                      "b": jnp.ones((7,), jnp.float32)})
+    with pytest.raises(ValueError, match="layout"):
+        load_checkpoint(path, wrong_layout)
+
+    wrong_q = make_algo(cq="qsgd8")
+    with pytest.raises(ValueError, match="quantizers"):
+        load_checkpoint(path, wrong_q)
+
+    wrong_cap = QAFeL(dataclasses.replace(algo.qcfg, buffer_size=5),
+                      quad_loss, PARAMS0)
+    with pytest.raises(ValueError, match="capacity"):
+        load_checkpoint(path, wrong_cap)
+
+    # a failed load leaves the target untouched
+    fresh = make_algo(cq="qsgd8")
+    try:
+        load_checkpoint(path, fresh)
+    except ValueError:
+        pass
+    assert fresh.state.t == 0 and fresh.buffer.count == 0

@@ -1,0 +1,325 @@
+"""Fused cohort train+encode dispatch (flat-first client pipeline).
+
+The contract mirrors the fused server flush (PR 3): bit-exactness against
+the pre-fusion multi-dispatch reference, a single compiled dispatch per
+cohort tier-group (trace counter + no other kernel entries on the client
+path), tier groups mask-padded onto one (spec, B) jit cache entry, and the
+FedBuff identity fast path keeping the paper's byte accounting and seeded
+trajectories unchanged.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QAFeL, QAFeLConfig, make_fedbuff, make_quantizer
+from repro.core.qafel import _jitted_client_update, client_update
+from repro.core.quantizers import flatten_tree
+from repro.kernels import ops as kops
+from repro.kernels import qsgd as _kq
+from repro.sim import (AsyncFLSimulator, CohortAsyncFLSimulator,
+                       ScenarioConfig, SimConfig)
+
+
+def quad_loss(params, batch, key):
+    del key
+    return sum(jnp.sum((l - batch["target"][..., :1]) ** 2)
+               for l in jax.tree.leaves(params))
+
+
+PARAMS0 = {"w": jnp.zeros((300,), jnp.float32),
+           "b": jnp.ones((7,), jnp.float32)}
+
+
+def make_qcfg(cq="qsgd4", **kw):
+    return QAFeLConfig(client_lr=0.1, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=3, local_steps=2, client_quantizer=cq,
+                       server_quantizer="qsgd4", **kw)
+
+
+def stacked_batches(b, p=2, d=300, seed=0):
+    t = jax.random.normal(jax.random.PRNGKey(seed), (b, p, d)) + 3.0
+    return {"target": t}
+
+
+def cohort_keys(b, seed=1):
+    subs = jax.random.split(jax.random.PRNGKey(seed), 2 * b)
+    return subs[:b], subs[b:]
+
+
+def split_reference(loss_fn, qcfg, q, params0, batches, train_keys, enc_keys):
+    """The pre-fusion cohort pipeline: jit(vmap(client_update)) dispatch,
+    eager flatten, host-side ``encode_batch`` dispatch."""
+    flat0, layout = flatten_tree(params0)
+    hidden_tree = layout.unflatten(flat0)
+    deltas = jax.jit(jax.vmap(functools.partial(client_update, loss_fn, qcfg),
+                              in_axes=(None, 0, 0)))(hidden_tree, batches,
+                                                     train_keys)
+    return q.encode_batch(deltas, enc_keys), layout, deltas
+
+
+# ---------------------------------------------------------------------------
+# In-jit encode parity: fused step == host-side encode_batch, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cq", ["qsgd2", "qsgd4", "qsgd8"])
+def test_fused_step_packed_bits_match_host_encode_batch(cq):
+    """The fused dispatch's packed codes and bucket norms are bit-identical
+    to the host-side split pipeline's (vmap train -> encode_batch), message
+    for message."""
+    qcfg = make_qcfg(cq=cq)
+    q = make_quantizer(cq)
+    b = 5
+    batches = stacked_batches(b)
+    train_keys, enc_keys = cohort_keys(b)
+    encs, layout, _ = split_reference(quad_loss, qcfg, q, PARAMS0, batches,
+                                      train_keys, enc_keys)
+    flat0, _ = flatten_tree(PARAMS0)
+    out = kops.cohort_train_encode_step(
+        quad_loss, qcfg, q.spec, layout, flat0, batches, train_keys,
+        enc_keys, jnp.asarray(True), b=b)
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(out["packed"][i]),
+                                      np.asarray(encs[i]["packed"]), str(i))
+        np.testing.assert_array_equal(np.asarray(out["norms"][i]),
+                                      np.asarray(encs[i]["norms"]), str(i))
+
+
+def test_fused_step_matches_force_pallas_kernel_route():
+    """force_pallas pin: the fused step's in-jit block math equals the
+    interpreted Pallas kernel run on the same deltas — the fusion never
+    drifts from the kernel the TPU path dispatches."""
+    qcfg = make_qcfg()
+    q = make_quantizer("qsgd4")
+    b, bits = 4, 4
+    batches = stacked_batches(b, seed=7)
+    train_keys, enc_keys = cohort_keys(b, seed=8)
+    _, layout, deltas = split_reference(quad_loss, qcfg, q, PARAMS0, batches,
+                                        train_keys, enc_keys)
+    flat0, _ = flatten_tree(PARAMS0)
+    out = kops.cohort_train_encode_step(
+        quad_loss, qcfg, q.spec, layout, flat0, batches, train_keys,
+        enc_keys, jnp.asarray(True), b=b)
+    # the same (B, rows, 128) stack, through the interpreted Pallas kernel
+    leaves = jax.tree.leaves(deltas)
+    flat2d = jnp.concatenate(
+        [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+    n = flat2d.shape[1]
+    rows = -(-n // _kq.LANES)
+    flat2d = jnp.pad(flat2d, ((0, 0), (0, rows * _kq.LANES - n)))
+    seeds = jnp.asarray(enc_keys).reshape(b, -1)[:, :2].astype(jnp.uint32)
+    pk, nm = _kq.qsgd_quantize_pack_batch(
+        flat2d.reshape(b, rows, _kq.LANES), seeds, bits,
+        interpret=True, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(out["packed"]), np.asarray(pk))
+    np.testing.assert_array_equal(np.asarray(out["norms"]),
+                                  np.asarray(nm).reshape(b, rows))
+
+
+def test_fused_step_b1_matches_sequential_two_dispatch_path():
+    """b=1 reproduces the pre-fusion sequential wire path — separate
+    client-update jit + eager flatten + threefry quantize dispatch — bit
+    for bit (the cohort_size=1 replay anchor)."""
+    qcfg = make_qcfg()
+    q = make_quantizer("qsgd4")
+    flat0, layout = flatten_tree(PARAMS0)
+    batches = {"target": jnp.asarray(stacked_batches(1)["target"][0])}
+    k_train, k_enc = jax.random.split(jax.random.PRNGKey(3))
+    delta = _jitted_client_update(quad_loss, qcfg)(
+        layout.unflatten(flat0), batches, k_train)
+    flat_ref, _ = flatten_tree(delta)
+    packed_ref, norms_ref = kops.qsgd_quantize(flat_ref, k_enc, 4)
+    out = kops.cohort_train_encode_step(
+        quad_loss, qcfg, q.spec, layout, flat0, batches, k_train, k_enc,
+        jnp.asarray(True), b=1)
+    np.testing.assert_array_equal(np.asarray(out["packed"][0]),
+                                  np.asarray(packed_ref))
+    np.testing.assert_array_equal(np.asarray(out["norms"][0]),
+                                  np.asarray(norms_ref))
+
+
+@pytest.mark.parametrize("cq", ["identity", "top_k0.2", "rand_k0.2"])
+def test_fused_step_flat_output_matches_deltas(cq):
+    """Non-qsgd kinds: the fused step's flat rows equal the split pipeline's
+    flattened delta stack bit for bit (identity's rows ARE the wire
+    payload; sparse kinds encode from them)."""
+    qcfg = make_qcfg(cq=cq)
+    q = make_quantizer(cq)
+    b = 3
+    batches = stacked_batches(b, seed=5)
+    train_keys, enc_keys = cohort_keys(b, seed=6)
+    _, layout, deltas = split_reference(quad_loss, qcfg, q, PARAMS0, batches,
+                                        train_keys, enc_keys)
+    flat0, _ = flatten_tree(PARAMS0)
+    out = kops.cohort_train_encode_step(
+        quad_loss, qcfg, q.spec, layout, flat0, batches, train_keys,
+        enc_keys, jnp.asarray(True), b=b)
+    want = jnp.concatenate(
+        [l.reshape(b, -1).astype(jnp.float32)
+         for l in jax.tree.leaves(deltas)], axis=1)
+    np.testing.assert_array_equal(np.asarray(out["flat"]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Single compiled dispatch per cohort (trace counter + kernel-entry sweep)
+# ---------------------------------------------------------------------------
+
+
+def build_sim(loss_fn, engine="cohort", cohort_size=4, scenario="identity",
+              cq="qsgd4", max_uploads=16, seed=0, d=256, algo_cls=QAFeL):
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=4, local_steps=1, client_quantizer=cq,
+                       server_quantizer=cq)
+    algo = algo_cls(qcfg, loss_fn, {"w": jnp.zeros((d,), jnp.float32)})
+
+    def client_batches(cid, key):
+        return {"target": jax.random.normal(key, (1, d)) + 1.0}
+
+    def eval_fn(params):
+        return float(-jnp.mean((params["w"] - 1.0) ** 2))
+
+    scfg = SimConfig(concurrency=6, max_uploads=max_uploads,
+                     eval_every_steps=2, seed=seed, track_hidden_replicas=1)
+    if engine == "sequential":
+        return AsyncFLSimulator(algo, scfg, client_batches, eval_fn)
+    return CohortAsyncFLSimulator(algo, scfg, client_batches, eval_fn,
+                                  scenario=scenario, cohort_size=cohort_size)
+
+
+def test_cohort_client_path_is_one_compiled_dispatch(monkeypatch):
+    """Across a multi-cohort run: exactly ONE (re)trace of the fused step
+    and ZERO python-level calls into any other kernel entry point on the
+    client path — the whole cohort pipeline is one compiled executable."""
+    def loss_fn(params, batch, key):  # fresh fn => fresh jit-cache entry
+        del key
+        return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+    traces_start = kops.COHORT_STEP_TRACES
+    build_sim(loss_fn, max_uploads=8).run()  # warm: compile step + flush
+    # the whole multi-cohort warm run compiled the client step exactly ONCE
+    assert kops.COHORT_STEP_TRACES == traces_start + 1
+    traces_before = kops.COHORT_STEP_TRACES
+    calls = {"other_kernel": 0, "step": 0}
+
+    real_step = kops.cohort_train_encode_step
+
+    def counting_step(*a, **kw):
+        calls["step"] += 1
+        return real_step(*a, **kw)
+
+    # any other kernel entry used while admitting (training + encoding) a
+    # cohort would be an extra client-path dispatch; the per-flush broadcast
+    # decode (Algorithm 3's replica apply, outside admission) stays allowed
+    in_admit = {"on": False}
+    monkeypatch.setattr(kops, "cohort_train_encode_step", counting_step)
+    for name in ("qsgd_quantize", "qsgd_quantize_batch", "qsgd_dequantize",
+                 "buffer_aggregate"):
+        def make(real):
+            def wrapper(*a, **kw):
+                if in_admit["on"]:
+                    calls["other_kernel"] += 1
+                return real(*a, **kw)
+            return wrapper
+        monkeypatch.setattr(kops, name, make(getattr(kops, name)))
+
+    sim = build_sim(loss_fn, max_uploads=16, seed=1)
+    real_admit = sim._admit_cohort
+
+    def tracked_admit(*a, **kw):
+        in_admit["on"] = True
+        try:
+            return real_admit(*a, **kw)
+        finally:
+            in_admit["on"] = False
+
+    sim._admit_cohort = tracked_admit
+    res = sim.run()
+    assert res.uploads == 16
+    assert calls["step"] >= 4  # several cohorts actually ran
+    assert calls["other_kernel"] == 0  # nothing else on the client path
+    assert kops.COHORT_STEP_TRACES == traces_before  # zero re-traces
+
+
+def test_tier_groups_share_jit_cache_across_membership_churn():
+    """Sweeping tier membership and remainders across cohorts: the mask-
+    padded groups all land on the lru-cached jit for their (spec, B), so a
+    multi-cohort tiered run traces exactly once per distinct quantizer
+    spec."""
+    def loss_fn(params, batch, key):  # fresh fn => fresh jit-cache entries
+        del key
+        return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+    scenario = ScenarioConfig(tiers=((0.45, "qsgd2"),))
+    traces_before = kops.COHORT_STEP_TRACES
+    sim = build_sim(loss_fn, cohort_size=5, scenario=scenario,
+                    max_uploads=30, seed=2)
+    res = sim.run()
+    assert res.uploads == 30
+    # the tier draw at p=0.45 over ~6+ cohorts of 5 sweeps group sizes
+    # 0..5; the only traces are one per spec (default qsgd4 + tier qsgd2)
+    assert kops.COHORT_STEP_TRACES - traces_before == 2
+    # a second engine instance re-uses both cache entries outright
+    build_sim(loss_fn, cohort_size=5, scenario=scenario,
+              max_uploads=10, seed=3).run()
+    assert kops.COHORT_STEP_TRACES - traces_before == 2
+
+
+# ---------------------------------------------------------------------------
+# FedBuff identity fast path (satellite): byte accounting + trajectory
+# ---------------------------------------------------------------------------
+
+
+def fedbuff_sim(engine, cohort_size=1, max_uploads=12, d=29282):
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=3, local_steps=1)
+    algo = make_fedbuff(qcfg, fedbuff_loss, {"w": jnp.zeros((d,), jnp.float32)})
+
+    def client_batches(cid, key):
+        return {"target": jax.random.normal(key, (1, d)) + 1.0}
+
+    def eval_fn(params):
+        return float(-jnp.mean((params["w"] - 1.0) ** 2))
+
+    scfg = SimConfig(concurrency=4, max_uploads=max_uploads,
+                     eval_every_steps=2, seed=11, track_hidden_replicas=1)
+    if engine == "sequential":
+        return AsyncFLSimulator(algo, scfg, client_batches, eval_fn)
+    return CohortAsyncFLSimulator(algo, scfg, client_batches, eval_fn,
+                                  scenario="identity",
+                                  cohort_size=cohort_size)
+
+
+def fedbuff_loss(params, batch, key):
+    del key
+    return jnp.mean((params["w"] - batch["target"]) ** 2)
+
+
+def test_fedbuff_identity_fast_path_keeps_celeba_accounting():
+    """FedBuff (identity quantizers) routed through the fused step's
+    identity fast path still reports the paper's 117.128 kB/upload at the
+    CelebA CNN dimension (d = 29282, 32 bits/coordinate)."""
+    res = fedbuff_sim("cohort", cohort_size=4).run()
+    assert res.metrics["kB_per_upload"] == pytest.approx(117.128)
+    assert res.metrics["replicas_in_sync"]
+
+
+def test_fedbuff_seeded_trajectory_unchanged_across_engines():
+    """The identity fast path changes no bits: cohort_size=1 replays the
+    sequential FedBuff trajectory exactly, and larger cohorts keep the
+    protocol counts and the x == x-hat FedBuff invariant."""
+    rs = fedbuff_sim("sequential", d=512).run()
+    r1 = fedbuff_sim("cohort", cohort_size=1, d=512).run()
+    assert r1.accuracy_trace == rs.accuracy_trace
+    assert r1.final_accuracy == rs.final_accuracy
+    m1 = dict(r1.metrics)
+    assert m1.pop("dropped_uploads") == 0
+    assert m1 == rs.metrics
+
+    rb = fedbuff_sim("cohort", cohort_size=4, d=512).run()
+    assert rb.uploads == rs.uploads
+    assert rb.server_steps == rs.server_steps
+    assert rb.metrics["upload_MB"] == rs.metrics["upload_MB"]
+    assert rb.metrics["replicas_in_sync"]
