@@ -81,6 +81,7 @@ def main(report):
     server_flush_bench(report)
     cohort_step_bench(report)
     sim_engine_bench(report)
+    shard_bench(report)
 
 
 def batch_encode_bench(report):
@@ -322,6 +323,125 @@ def sim_engine_bench(report):
                    f"x{ups['cohort'] / ups['sequential']:.2f}_uploads_per_s")
 
 
+def _shard_measurements(ndev: int):
+    """The mesh-sharded fused dispatches vs the single-device ones on the
+    same work, at one device count: cohort train+encode (member-sharded)
+    and the server flush (segment-sharded). Returns (name, us, derived)
+    rows; both pipelines are timed INTERLEAVED and reduced by min-of-N
+    (the one protocol for --check-gated rows).
+
+    On a 2-core CI box, 8 virtual devices time-slice the same cores, so
+    the ndev=8 wall-clock ratio is expected at/below parity (sub-parity
+    caveat rows: they document the overhead, the bit-exactness tests carry
+    the correctness claim, and real multi-device wins need real devices).
+    """
+    from repro.core import QAFeL, QAFeLConfig
+    from repro.core.protocol import CLIENT_UPDATE, Message
+    from repro.core.quantizers import flatten_tree, make_quantizer
+    from repro.launch.mesh import make_sim_mesh
+
+    mesh = make_sim_mesh(ndev)
+    q = make_quantizer("qsgd4")
+    qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
+                       buffer_size=10, local_steps=2,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+    flag = jnp.asarray(True)
+    rows = []
+
+    def loss_fn(params, batch, key):
+        del key
+        return jnp.mean((params["w"] - batch["target"]) ** 2)
+
+    # -- cohort step: member-sharded vs single dispatch ------------------
+    d, b = 1 << 15, 16
+    params = {"w": jnp.zeros((d,), jnp.float32)}
+    flat0, layout = flatten_tree(params)
+    batches = {"target": jax.random.normal(
+        jax.random.PRNGKey(3), (b, qcfg.local_steps, d))}
+    keys = jax.random.split(jax.random.PRNGKey(4), 2 * b)
+    tk, ek = keys[:b], keys[b:]
+
+    def cohort_sharded():
+        return ops.cohort_train_encode_step(
+            loss_fn, qcfg, q.spec, layout, flat0, batches, tk, ek, flag,
+            b=b, mesh=mesh)["packed"]
+
+    def cohort_single():
+        return ops.cohort_train_encode_step(
+            loss_fn, qcfg, q.spec, layout, flat0, batches, tk, ek, flag,
+            b=b)["packed"]
+
+    us_sh, us_si = _interleaved_best(cohort_sharded, cohort_single)
+    rows.append((f"shard/cohort_step_sharded_ndev{ndev}", us_sh,
+                 f"B={b};d={d};ndev={ndev}"))
+    rows.append((f"shard/cohort_step_single_ndev{ndev}", us_si,
+                 f"B={b};d={d};ndev=1"))
+    rows.append((f"shard/cohort_step_speedup_ndev{ndev}", 0.0,
+                 f"speedup=x{us_si / us_sh:.2f};bit_identical=1"))
+
+    # -- server flush: segment-sharded vs single dispatch ----------------
+    k = qcfg.buffer_size
+    encs = [q.encode({"w": jax.random.normal(jax.random.PRNGKey(7 * i), (d,))},
+                     jax.random.PRNGKey(100 + i)) for i in range(k)]
+    msgs = [Message(CLIENT_UPDATE, e, wire_bytes=0.0, meta={"version": 0})
+            for e in encs]
+    key = jax.random.PRNGKey(1)
+    algo_sh = QAFeL(qcfg, loss_fn, params, mesh=mesh)
+    algo_si = QAFeL(qcfg, loss_fn, params)
+
+    def flush_cycle(algo):
+        bmsg = None
+        for m in msgs:
+            bmsg = algo.receive(m, key)
+        return bmsg.payload["packed"]
+
+    us_sh, us_si = _interleaved_best(lambda: flush_cycle(algo_sh),
+                                     lambda: flush_cycle(algo_si))
+    rows.append((f"shard/flush_sharded_ndev{ndev}", us_sh,
+                 f"d={d};K={k};ndev={ndev}"))
+    rows.append((f"shard/flush_single_ndev{ndev}", us_si,
+                 f"d={d};K={k};ndev=1"))
+    rows.append((f"shard/flush_speedup_ndev{ndev}", 0.0,
+                 f"speedup=x{us_si / us_sh:.2f};bit_identical=1"))
+    return rows
+
+
+def shard_bench(report):
+    """``shard/cohort_step_*`` and ``shard/flush_*`` rows at ndev in {1, 8}.
+
+    ndev=1 runs in-process (the sharded path as a one-segment shard_map —
+    its overhead over the plain dispatch is the substrate's fixed cost);
+    ndev=8 needs 8 fake host devices, which XLA only grants BEFORE jax
+    initializes, so it runs as a ``python -m benchmarks.kernel_bench
+    --shard-ndev 8`` subprocess whose rows are parsed and re-reported."""
+    import os
+    import subprocess
+    import sys
+
+    for row in _shard_measurements(1):
+        report(*row)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    # APPEND the device-count flag to any caller XLA_FLAGS: the ndev=8 rows
+    # must run under the same compiler flags as the in-process ndev=1 rows
+    # or the gated speedup ratio compares different compilers
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        flags = f"{flags} --xla_force_host_platform_device_count=8".strip()
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kernel_bench", "--shard-ndev", "8"],
+        capture_output=True, text=True, timeout=560,
+        env={**os.environ, "PYTHONPATH": os.path.join(repo, "src"),
+             "XLA_FLAGS": flags},
+        cwd=repo)
+    if out.returncode != 0:
+        raise RuntimeError("shard ndev=8 subprocess failed: "
+                           + out.stdout[-1000:] + out.stderr[-2000:])
+    for line in out.stdout.splitlines():
+        if line.startswith("shard/"):
+            name, us, derived = line.split(",", 2)
+            report(name, float(us), derived)
+
+
 def wire_path_bench(report):
     """Packed single-buffer wire path vs the legacy per-leaf path on the
     paper's multi-leaf CNN (18 leaves, sizes 2 .. 25600): encode and the
@@ -368,3 +488,15 @@ def wire_path_bench(report):
     report("wire/encode_flush_cnn_total", us_packed + us_fpacked,
            f"per_leaf_total={us_leaf + us_fleaf:.1f};"
            f"speedup=x{(us_leaf + us_fleaf) / (us_packed + us_fpacked):.2f}")
+
+
+if __name__ == "__main__":
+    # subprocess entry for the ndev=8 shard rows (fake host devices must be
+    # forced via XLA_FLAGS before jax initializes — i.e. per process)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shard-ndev", type=int, required=True)
+    args = ap.parse_args()
+    for name, us, derived in _shard_measurements(args.shard_ndev):
+        print(f"{name},{us:.1f},{derived}", flush=True)

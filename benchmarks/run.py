@@ -15,7 +15,7 @@ counts, compression ratios.
 ``--check PATH`` is the perf regression gate: the committed baseline JSON
 is loaded BEFORE the suites run (so ``--json`` may overwrite the same
 path), and every fused-path speedup row present in both runs —
-``server/flush_*`` and ``sim/cohort_step_*`` — must stay within
+``server/flush_*``, ``sim/cohort_step_*`` and ``shard/*`` — must stay within
 ``--check-tolerance`` (default 20%; doubled for sub-parity baseline rows,
 which document a caveat rather than claim a win) of its baseline speedup,
 else the process exits non-zero. Gated baseline rows missing from the run
@@ -67,8 +67,10 @@ def _parse_derived(derived: str):
 
 SUITES = ["kernel", "roofline", "table1", "fig3", "table2"]
 
-# rows the --check gate covers: the fused-path speedup families
-_GATED_PREFIXES = ("server/flush_", "sim/cohort_step_")
+# rows the --check gate covers: the fused-path speedup families plus the
+# sharded-substrate overhead rows (shard/*_speedup_ndevN — sub-parity on a
+# 2-core CI box, gated so the sharding overhead can't silently balloon)
+_GATED_PREFIXES = ("server/flush_", "sim/cohort_step_", "shard/")
 
 
 def _speedup_value(row) -> float | None:

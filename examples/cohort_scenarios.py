@@ -10,22 +10,20 @@ process, dropouts, stragglers, per-client quantizer bit-width tiers.
     PYTHONPATH=src python examples/cohort_scenarios.py \
         --scenario lognormal_dropout --concurrency 8 --cohort-size 4 \
         --uploads 120 --min-acc 0.6
+    PYTHONPATH=src python examples/cohort_scenarios.py --devices 8 ...
 
 ``--min-acc`` makes the run assert convergence (used by the CI smoke job).
+``--devices N`` runs the sharded flat substrate on an N-device ("data",)
+mesh — cohort members and server flat-state segments shard over it, with
+bit-identical results to ``--devices 1``. On CPU, N fake host devices are
+forced via XLA_FLAGS (which is why argument parsing here happens BEFORE
+jax is imported).
 """
 import argparse
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import QAFeL, QAFeLConfig
-from repro.data import FederatedPartition, SyntheticCelebA
-from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
-from repro.sim import SCENARIOS, CohortAsyncFLSimulator, SimConfig
+import os
 
 
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="identity",
                     help="name from repro.sim.scenarios.SCENARIOS")
@@ -38,12 +36,39 @@ def main():
     ap.add_argument("--samples", type=int, default=1200)
     ap.add_argument("--min-acc", type=float, default=None,
                     help="assert final accuracy >= this (CI smoke)")
-    args = ap.parse_args()
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the flat substrate over an N-device mesh "
+                         "(fakes N host devices on CPU)")
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.devices > 1:
+        # must land before the first jax import in this process; APPEND so a
+        # user's pre-existing XLA_FLAGS are kept (setdefault would silently
+        # drop the device-count flag and --devices would fail)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import QAFeL, QAFeLConfig
+    from repro.data import FederatedPartition, SyntheticCelebA
+    from repro.launch.mesh import make_sim_mesh
+    from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+    from repro.sim import SCENARIOS, CohortAsyncFLSimulator, SimConfig
 
     if args.list:
         for name, cfg in SCENARIOS.items():
             print(f"{name:20s} {cfg}")
         return
+    mesh = make_sim_mesh(args.devices) if args.devices > 1 else None
 
     ds = SyntheticCelebA(n_samples=args.samples)
     part = FederatedPartition(labels=ds.labels, n_clients=args.samples // 10)
@@ -65,7 +90,7 @@ def main():
     qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
                        buffer_size=args.buffer, local_steps=2,
                        client_quantizer="qsgd4", server_quantizer="qsgd4")
-    algo = QAFeL(qcfg, loss_fn, params0)
+    algo = QAFeL(qcfg, loss_fn, params0, mesh=mesh)
     sim = CohortAsyncFLSimulator(
         algo,
         SimConfig(concurrency=args.concurrency, max_uploads=args.uploads,
@@ -75,7 +100,7 @@ def main():
     res = sim.run()
     m = res.metrics
     print(f"scenario={args.scenario}  cohort_size={args.cohort_size}  "
-          f"concurrency={args.concurrency}")
+          f"concurrency={args.concurrency}  devices={args.devices}")
     print(f"  uploads: {res.uploads}  dropped: {m['dropped_uploads']}  "
           f"server steps: {res.server_steps}  tau_max: {m['tau_max']}")
     print(f"  kB/upload: {m['kB_per_upload']:.2f}  upload MB: "

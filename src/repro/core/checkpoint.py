@@ -49,12 +49,28 @@ def _layout_fingerprint(layout) -> dict:
 
 
 def save_checkpoint(path, algo) -> None:
-    """Write ``algo``'s full server-side state (see module docstring)."""
+    """Write ``algo``'s full server-side state (see module docstring).
+
+    State vectors are stored in CANONICAL (unpadded, device-count-agnostic)
+    form: a sharded server's segment-aligned padding is sliced off, so the
+    archive is interchangeable between single-device and any-mesh runs —
+    the ``sharding`` meta records where it came from (device count + axis +
+    padded length) purely as provenance, and ``load_checkpoint`` re-pads /
+    re-places for whatever mesh the target ``algo`` holds.
+    """
     st, buf = algo.state, algo.buffer
+    ndev = 1
+    if st.mesh is not None:
+        from repro.sharding.rules import mesh_data_extent
+        ndev = mesh_data_extent(st.mesh)
     meta = {
         "version": CHECKPOINT_VERSION,
         "t": int(st.t),
         "layout": _layout_fingerprint(st.layout),
+        "sharding": {"devices": ndev,
+                     "axis": None if st.mesh is None else "data",
+                     "n": int(st.layout.total_size),
+                     "n_padded": int(st.x_flat.shape[0])},
         "quantizers": {"client": algo.cq.spec.label(),
                        "server": algo.sq.spec.label()},
         "buffer": {
@@ -75,10 +91,11 @@ def save_checkpoint(path, algo) -> None:
                       "history": list(algo.staleness.history),
                       "dropped": list(algo.staleness.dropped)},
     }
+    n = int(st.layout.total_size)  # canonical: padding never hits the disk
     arrays = {
-        "x_flat": np.asarray(st.x_flat),
-        "hidden_flat": np.asarray(st.hidden_flat),
-        "momentum_flat": np.asarray(st.momentum_flat),
+        "x_flat": np.asarray(st.x_flat)[:n],
+        "hidden_flat": np.asarray(st.hidden_flat)[:n],
+        "momentum_flat": np.asarray(st.momentum_flat)[:n],
     }
     if buf._packed:
         # every entry of a fill window shares one wire shape (the buffer
@@ -116,6 +133,15 @@ def load_checkpoint(path, algo):
         raise ValueError(
             "checkpoint layout does not match the model: the archive was "
             "saved for a different parameter structure")
+    # sharding meta (absent on pre-mesh archives) is provenance, not a
+    # constraint: canonical arrays reshard-load onto ANY device count. The
+    # one hard invariant is the coordinate space itself.
+    smeta = meta.get("sharding")
+    if smeta is not None and smeta["n"] != layout.total_size:
+        raise ValueError(
+            f"checkpoint flat layout n={smeta['n']} does not match the "
+            f"model's coordinate count {layout.total_size}: the archive was "
+            "saved for a different flat-substrate layout")
     want_q = {"client": algo.cq.spec.label(), "server": algo.sq.spec.label()}
     if meta["quantizers"] != want_q:
         raise ValueError(f"checkpoint quantizers {meta['quantizers']} != "
@@ -125,11 +151,24 @@ def load_checkpoint(path, algo):
         raise ValueError(f"checkpoint buffer capacity {bmeta['capacity']} != "
                          f"algo capacity {algo.buffer.capacity}")
 
-    algo.state = ServerState(
-        x_flat=jnp.asarray(arrays["x_flat"]),
-        hidden_flat=jnp.asarray(arrays["hidden_flat"]),
-        momentum_flat=jnp.asarray(arrays["momentum_flat"]),
-        layout=layout, t=meta["t"])
+    mesh = getattr(algo, "mesh", None)
+    if mesh is not None:
+        # reshard-load: pad the canonical vectors to THIS mesh's segment
+        # alignment and place them as NamedSharding segment vectors —
+        # single-device archives load into sharded runs and vice versa
+        from repro.core.qafel import place_flat_on_mesh
+        n = layout.total_size
+        algo.state = ServerState(
+            x_flat=place_flat_on_mesh(arrays["x_flat"], mesh, n),
+            hidden_flat=place_flat_on_mesh(arrays["hidden_flat"], mesh, n),
+            momentum_flat=place_flat_on_mesh(arrays["momentum_flat"], mesh, n),
+            layout=layout, t=meta["t"], mesh=mesh)
+    else:
+        algo.state = ServerState(
+            x_flat=jnp.asarray(arrays["x_flat"]),
+            hidden_flat=jnp.asarray(arrays["hidden_flat"]),
+            momentum_flat=jnp.asarray(arrays["momentum_flat"]),
+            layout=layout, t=meta["t"])
 
     buf = algo.buffer
     buf._acc = (jnp.asarray(arrays["buf_acc"])

@@ -38,6 +38,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.tree import tree_sub
 from repro.core.buffer import FlushBatch, UpdateBuffer
@@ -106,13 +107,17 @@ def local_sgd_scan(loss_fn: Callable, lr: float, y0, batches, keys, *,
     return jax.lax.scan(sgd_step, y0, (batches, keys))
 
 
-def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key):
+def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key,
+                  *, with_loss: bool = False):
     """Algorithm 2: y_0 <- x-hat; P local SGD steps; delta = y_P - y_0.
 
     batches: a pytree whose leaves have leading dim P (one slice per local
     step). Returns the *unquantized* delta (quantization is applied by the
-    caller — in-graph fake-quant for the distributed step, wire encoding for
-    the simulator).
+    caller — in-graph wire encode for the fused cohort step and the
+    distributed round, host wire encoding for the simulator).
+    ``with_loss=True`` additionally returns the (P,) per-step losses
+    (``(delta, losses)``) — the distributed round's metric; the default
+    keeps the pure-gradient path bit-for-bit as before.
 
     Sign convention: the paper's Section 2 text sends Q_c(y_{P-1} - y_0) and
     the server ascends x + eta_g * Delta-bar; Algorithm 2 line 5 writes
@@ -120,13 +125,15 @@ def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key):
     direction) — see DESIGN.md for the discrepancy note.
     """
     keys = jax.random.split(key, qcfg.local_steps)
-    y_final, _ = local_sgd_scan(loss_fn, qcfg.client_lr, x_hat,
-                                batches, keys)
-    return tree_sub(y_final, x_hat)
+    y_final, losses = local_sgd_scan(loss_fn, qcfg.client_lr, x_hat,
+                                     batches, keys, with_loss=with_loss)
+    delta = tree_sub(y_final, x_hat)
+    return (delta, losses) if with_loss else delta
 
 
 def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
-                       hidden_flat, batches, k_train, k_enc, flag, *, b: int):
+                       hidden_flat, batches, k_train, k_enc, flag, *, b: int,
+                       with_loss: bool = False, batched: Optional[bool] = None):
     """Flat-in / packed-out client pipeline: the traceable body of the fused
     cohort train+encode dispatch (``kernels.ops.cohort_train_encode_step``).
 
@@ -152,25 +159,38 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
     Returns ``{"packed", "norms"}`` for a qsgd ``spec``, else ``{"flat"}``
     (identity's flat payload IS its wire format — the FedBuff fast path;
     top_k/rand_k have data-dependent wire shapes and are sliced/encoded by
-    the host from the same flat output).
+    the host from the same flat output). ``with_loss=True`` returns
+    ``(out, losses)`` — the distributed round's metric thread. ``batched``
+    overrides the b==1 dispatch/dither convention (see inline note): the
+    sharded cohort step's per-device slice may hold one member and must
+    still emit the batched counter-hash wire bits.
     """
     from repro.core.quantizers import (flatten_stacked_leaves,
                                        qsgd_encode_flat2d)
     from repro.kernels import ops as kops  # local import: kernels are optional
 
+    # ``batched`` decouples the dispatch shape from the dither/stacking
+    # convention: a sharded tier-group's per-device slice can hold ONE
+    # member and must still run the batched convention (stacked inputs,
+    # counter-hash dither) so the wire bits match the single-device
+    # whole-cohort dispatch member for member. Default: b > 1.
+    batched = (b > 1) if batched is None else batched
     boundary = functools.partial(kops.hard_boundary, flag)
     x_hat = layout.unflatten(hidden_flat)
-    if b == 1:
-        deltas = client_update(loss_fn, qcfg, x_hat, batches, k_train)
+    fn = functools.partial(client_update, loss_fn, qcfg, with_loss=with_loss)
+    if not batched:
+        res = fn(x_hat, batches, k_train)
     else:
-        deltas = jax.vmap(functools.partial(client_update, loss_fn, qcfg),
-                          in_axes=(None, 0, 0))(x_hat, batches, k_train)
+        res = jax.vmap(fn, in_axes=(None, 0, 0))(x_hat, batches, k_train)
+    deltas, losses = res if with_loss else (res, None)
     flat2d = boundary(flatten_stacked_leaves(jax.tree.leaves(deltas), b))
     if spec.kind == "qsgd":
         packed, norms = qsgd_encode_flat2d(flat2d, k_enc, spec.bits,
-                                           threefry=(b == 1))
-        return {"packed": packed, "norms": norms}
-    return {"flat": flat2d}
+                                           threefry=not batched)
+        out = {"packed": packed, "norms": norms}
+    else:
+        out = {"flat": flat2d}
+    return (out, losses) if with_loss else out
 
 
 def server_apply_flat(x, momentum, delta, *, lr, beta, boundary=None):
@@ -238,6 +258,25 @@ def _hidden_drift_ratio(x_flat, hidden_flat):
 # ---------------------------------------------------------------------------
 
 
+def place_flat_on_mesh(flat, mesh, n: int) -> jnp.ndarray:
+    """Canonicalize a flat f32 vector (any padding) to the mesh's
+    segment-aligned padded length and place it with the flat-vector
+    NamedSharding. Always returns a fresh buffer (the flush donates these,
+    so no two state vectors may alias)."""
+    from repro.sharding.rules import (flat_padded_len, flat_vector_sharding,
+                                      mesh_data_extent)
+
+    n_pad = flat_padded_len(n, mesh_data_extent(mesh))
+    flat = jnp.asarray(flat, jnp.float32).reshape(-1)[:n]
+    if n_pad > n:
+        flat = jnp.concatenate([flat, jnp.zeros((n_pad - n,), flat.dtype)])
+    else:
+        # already aligned: force a copy — a full-range slice is a no-op
+        # view, and two donated state vectors must never share a buffer
+        flat = jnp.array(flat, copy=True)
+    return jax.device_put(flat, flat_vector_sharding(mesh))
+
+
 @dataclasses.dataclass
 class ServerState:
     """Device-resident server state.
@@ -247,6 +286,15 @@ class ServerState:
     ``TreeLayout``. The flush updates them in place (buffer donation); tree
     views are materialized lazily and cached per server step — they exist
     only at the eval / client-update boundaries, never on the flush path.
+
+    With a ("data",) ``mesh`` the vectors are ``jax.NamedSharding``-placed:
+    each device owns one contiguous, 128-bucket-row-aligned segment
+    (``sharding.rules.flat_vector_spec``), the vectors are zero-padded to
+    ``sharding.rules.flat_padded_len`` so segments align to wire bucket
+    rows, and the flush runs as the sharded single dispatch
+    (``kernels.ops.server_flush_step_sharded``) — bit-identical to the
+    single-device path. ``layout.total_size`` stays the TRUE coordinate
+    count; tree views and wire payloads never see the padding.
     """
 
     x_flat: jnp.ndarray
@@ -254,15 +302,30 @@ class ServerState:
     momentum_flat: jnp.ndarray
     layout: TreeLayout
     t: int = 0  # server step counter (model version)
+    mesh: Any = dataclasses.field(default=None, repr=False, compare=False)
     _x_tree: Any = dataclasses.field(default=None, repr=False, compare=False)
     _hidden_tree: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     @staticmethod
-    def init(params0) -> "ServerState":
+    def init(params0, mesh=None) -> "ServerState":
         flat, layout = flatten_tree(params0)
+        if mesh is not None:
+            flat = place_flat_on_mesh(flat, mesh, layout.total_size)
+            return ServerState(
+                x_flat=flat,
+                hidden_flat=place_flat_on_mesh(flat, mesh, layout.total_size),
+                momentum_flat=place_flat_on_mesh(jnp.zeros_like(flat), mesh,
+                                                 layout.total_size),
+                layout=layout, t=0, mesh=mesh)
         return ServerState(x_flat=flat, hidden_flat=jnp.array(flat),
                            momentum_flat=jnp.zeros_like(flat),
                            layout=layout, t=0)
+
+    @property
+    def n(self) -> int:
+        """TRUE coordinate count (the wire dimension d); ``x_flat`` may be
+        longer when segment-aligned-padded for a mesh."""
+        return self.layout.total_size
 
     @property
     def x(self):
@@ -290,14 +353,23 @@ class ServerState:
 
 
 class QAFeL:
-    """Server + client logic of Algorithms 1-3, driven by an event loop."""
+    """Server + client logic of Algorithms 1-3, driven by an event loop.
 
-    def __init__(self, qcfg: QAFeLConfig, loss_fn: Callable, params0):
+    ``mesh`` (a ("data",) mesh from ``launch.mesh.make_sim_mesh``) turns on
+    the sharded flat substrate: the server state lives as NamedSharding-
+    placed segment vectors, the flush runs the sharded single dispatch,
+    and the cohort train+encode step shards cohort members — all
+    bit-identical to the single-device path at the same seed.
+    """
+
+    def __init__(self, qcfg: QAFeLConfig, loss_fn: Callable, params0,
+                 mesh=None):
         self.qcfg = qcfg
         self.loss_fn = loss_fn
         self.cq = qcfg.cq()
         self.sq = qcfg.sq()
-        self.state = ServerState.init(params0)
+        self.mesh = mesh
+        self.state = ServerState.init(params0, mesh=mesh)
         # the runtime-True predicate behind the fused flush's hard
         # materialization boundaries (see kernels.ops.hard_boundary)
         self._flag = jnp.asarray(True)
@@ -328,7 +400,7 @@ class QAFeL:
         st = self.state
         out = kops.cohort_train_encode_step(
             self.loss_fn, self.qcfg, self.cq.spec, st.layout, st.hidden_flat,
-            batches, k_train, k_enc, self._flag, b=1)
+            batches, k_train, k_enc, self._flag, b=1, mesh=self.mesh)
         msg = frame_cohort_messages(CLIENT_UPDATE, self.cq, out, st.layout,
                                     enc_keys=[k_enc], version=st.t)[0]
         return msg, st.t
@@ -417,12 +489,46 @@ class QAFeL:
             sbits = self.sq.spec.bits if kind == "qsgd" else None
             key2d = jnp.asarray(key).reshape(1, -1) if kind == "qsgd" else None
             beta = self.qcfg.server_momentum if self.qcfg.server_momentum else None
-            x_new, h_new, m_new, payload = kops.server_flush_step(
-                st.x_flat, st.hidden_flat, st.momentum_flat,
-                batch.stack, batch.norms, batch.weights, batch.extra,
-                key2d, self._flag,
-                bits=batch.bits if batch.bits is not None else 0,
-                sbits=sbits, n=batch.n, lr=self.qcfg.server_lr, beta=beta)
+            bits = batch.bits if batch.bits is not None else 0
+            if self.mesh is not None:
+                # sharded substrate: pad the window's raw ingredients to the
+                # state's segment-aligned layout (zero rows/elements are
+                # numerically inert) and run the sharded single dispatch;
+                # the payload is sliced back to the true wire rows, so the
+                # broadcast bytes are identical to the single-device path.
+                rows = kops.rows_for(batch.n)
+                rows_pad = int(st.x_flat.shape[0]) // kops.BUCKET
+                stack, norms, extra = batch.stack, batch.norms, batch.extra
+                if stack is not None and rows_pad > rows:
+                    xp = np if isinstance(stack, np.ndarray) else jnp
+                    k_, _, lanes = stack.shape
+                    stack = xp.concatenate(
+                        [stack, xp.zeros((k_, rows_pad - rows, lanes),
+                                         stack.dtype)], axis=1)
+                    norms = xp.concatenate(
+                        [norms, xp.zeros((k_, rows_pad - rows), norms.dtype)],
+                        axis=1)
+                if extra is not None and rows_pad * kops.BUCKET > batch.n:
+                    extra = jnp.concatenate(
+                        [jnp.asarray(extra, jnp.float32),
+                         jnp.zeros((rows_pad * kops.BUCKET - batch.n,),
+                                   jnp.float32)])
+                x_new, h_new, m_new, payload = kops.server_flush_step_sharded(
+                    st.x_flat, st.hidden_flat, st.momentum_flat,
+                    stack, norms, batch.weights, extra, key2d, self._flag,
+                    bits=bits, sbits=sbits, lr=self.qcfg.server_lr,
+                    beta=beta, mesh=self.mesh)
+                if kind == "qsgd":
+                    payload = (payload[0][:rows], payload[1][:rows])
+                else:
+                    payload = (payload[0][:batch.n],)
+            else:
+                x_new, h_new, m_new, payload = kops.server_flush_step(
+                    st.x_flat, st.hidden_flat, st.momentum_flat,
+                    batch.stack, batch.norms, batch.weights, batch.extra,
+                    key2d, self._flag,
+                    bits=bits, sbits=sbits, n=batch.n,
+                    lr=self.qcfg.server_lr, beta=beta)
             if kind == "qsgd":
                 enc = packed_qsgd_payload(payload[0], payload[1], sbits,
                                           batch.n, st.layout)
@@ -432,20 +538,29 @@ class QAFeL:
         else:
             # top_k / rand_k server quantizers have data-dependent wire
             # shapes (argsort / gather): a short flat-vector chain instead
-            # of the single fused dispatch — still no pytree anywhere.
+            # of the single fused dispatch — still no pytree anywhere. Under
+            # a mesh the chain runs on the true-n slices and the results are
+            # re-placed as segment vectors.
             delta = batch.reduce()
             beta = self.qcfg.server_momentum if self.qcfg.server_momentum else None
+            x_cur, h_cur, m_cur = st.x_flat, st.hidden_flat, st.momentum_flat
+            if self.mesh is not None:
+                x_cur, h_cur, m_cur = (x_cur[:batch.n], h_cur[:batch.n],
+                                       m_cur[:batch.n])
             x_new, m_new = server_apply_flat(
-                st.x_flat, st.momentum_flat, delta,
-                lr=self.qcfg.server_lr, beta=beta)
-            diff = x_new - st.hidden_flat
+                x_cur, m_cur, delta, lr=self.qcfg.server_lr, beta=beta)
+            diff = x_new - h_cur
             bmsg = encode_message_flat(HIDDEN_BROADCAST, self.sq, diff,
                                        st.layout, key, fast=True, t=st.t)
-            h_new = st.hidden_flat + self.sq.decode_flat(bmsg.payload)
+            h_new = h_cur + self.sq.decode_flat(bmsg.payload)
+            if self.mesh is not None:
+                x_new = place_flat_on_mesh(x_new, self.mesh, batch.n)
+                h_new = place_flat_on_mesh(h_new, self.mesh, batch.n)
+                m_new = place_flat_on_mesh(m_new, self.mesh, batch.n)
         self.meter.record(bmsg, n_receivers=n_receivers)
         self.state = ServerState(x_flat=x_new, hidden_flat=h_new,
                                  momentum_flat=m_new, layout=st.layout,
-                                 t=st.t + 1)
+                                 t=st.t + 1, mesh=st.mesh)
         return bmsg
 
     # -- invariant checks / metrics ----------------------------------------
@@ -454,10 +569,18 @@ class QAFeL:
 
         One jitted flat reduction; the float() conversion is the only device
         sync, and it happens only when this is explicitly called (metrics()
-        skips it by default in hot loops).
+        skips it by default in hot loops). Under a mesh the vectors are
+        sliced to the TRUE n and gathered first: a cross-segment psum (or a
+        reduction over the padded length) has a different f32 reduction
+        order than the single-device sum and drifts in the last ulp, and
+        this metric is compared across runs — it must be sharding-invariant.
         """
-        return float(_hidden_drift_ratio(self.state.x_flat,
-                                         self.state.hidden_flat))
+        x, h = self.state.x_flat, self.state.hidden_flat
+        if self.mesh is not None:
+            n = self.state.n
+            x = jnp.asarray(np.asarray(x)[:n])
+            h = jnp.asarray(np.asarray(h)[:n])
+        return float(_hidden_drift_ratio(x, h))
 
     def metrics(self, drift: bool = False) -> Dict[str, Any]:
         out = dict(self.meter.summary())

@@ -249,6 +249,53 @@ def qsgd_encode_flat2d(flat2d: jnp.ndarray, keys, bits: int, *,
     return packed, norm.reshape(b, rows)
 
 
+def qsgd_pack_lastdim(x: jnp.ndarray, key, bits: int, bucket: int = 128):
+    """Bucketed qsgd quantize + bit-pack along the LAST dim only.
+
+    The shape-preserving variant of the wire math for tensors whose other
+    dims may be sharded (no reshape ever crosses a non-last axis): buckets,
+    norms and packing all live inside the last dim. This is the shared
+    callee of the distributed pod-quantized exchange
+    (``repro.distributed.steps``), which all_gathers the (packed, norms)
+    pair across the pod axis instead of raw f32. Requires
+    ``x.shape[-1] % (bucket * (8 // bits)) == 0``. Returns
+    ``(packed uint8 (..., n * bits // 8), norms f32 (..., n // bucket))``.
+    """
+    s = (1 << (bits - 1)) - 1
+    per_byte = 8 // bits
+    xf = x.astype(jnp.float32)
+    n = x.shape[-1]
+    xb = xf.reshape(x.shape[:-1] + (n // bucket, bucket))
+    norms = jnp.sqrt(jnp.sum(xb * xb, axis=-1, keepdims=True))
+    inv = jnp.where(norms > 0.0, s / jnp.maximum(norms, 1e-30), 0.0)
+    level = jnp.abs(xb) * inv
+    low = jnp.floor(level)
+    u = jax.random.uniform(key, xb.shape, dtype=jnp.float32)
+    xi = jnp.minimum(low + (u < (level - low)), float(s)).astype(jnp.uint32)
+    code = ((xb < 0.0).astype(jnp.uint32) << (bits - 1)) | xi
+    grouped = code.reshape(x.shape[:-1] + (n // per_byte, per_byte))
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits)
+    packed = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    return packed, norms[..., 0]
+
+
+def qsgd_unpack_lastdim(packed: jnp.ndarray, norms: jnp.ndarray, bits: int,
+                        bucket: int = 128) -> jnp.ndarray:
+    """Inverse of ``qsgd_pack_lastdim``: codes (..., n*bits//8) + norms
+    (..., n//bucket) -> f32 (..., n). Leading dims (e.g. a gathered pod
+    axis) pass through untouched."""
+    s = (1 << (bits - 1)) - 1
+    per_byte = 8 // bits
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits)
+    codes = ((packed[..., None].astype(jnp.uint32) >> shifts)
+             & jnp.uint32((1 << bits) - 1))
+    codes = codes.reshape(norms.shape + (bucket,))
+    mag = (codes & jnp.uint32(s)).astype(jnp.float32)
+    sign = 1.0 - 2.0 * ((codes >> (bits - 1)) & 1).astype(jnp.float32)
+    vals = sign * mag * (norms[..., None] / float(s))
+    return vals.reshape(packed.shape[:-1] + (packed.shape[-1] * per_byte,))
+
+
 # ---------------------------------------------------------------------------
 # qsgd math (pure jnp; the Pallas kernel in repro/kernels mirrors this)
 # ---------------------------------------------------------------------------
@@ -324,6 +371,26 @@ class Quantizer:
             return tree
         keys = split_key_tree(key, tree)
         return jax.tree.map(self.qdq_leaf, tree, keys)
+
+    def qdq_flat(self, flat: jnp.ndarray, key) -> jnp.ndarray:
+        """Quantize-dequantize one already-flat vector (traceable).
+
+        The flat-substrate in-graph entry used by the distributed round for
+        the sparse kinds (top_k / rand_k), whose reconstruction equals their
+        wire decode exactly (the kept values travel in full precision), and
+        available for qsgd/identity for completeness. For qsgd this honours
+        ``spec.bucket_size`` like ``qdq`` — the wire path's 128-lane row
+        math lives in ``qsgd_encode_flat2d``.
+        """
+        spec = self.spec
+        if spec.kind == "identity":
+            return flat
+        if spec.kind == "qsgd":
+            return _qsgd_qdq_flat(flat, key, spec.levels, spec.bucket_size)
+        k = max(1, math.ceil(spec.fraction * flat.size))
+        if spec.kind == "top_k":
+            return _top_k_qdq_flat(flat, k)
+        return _rand_k_qdq_flat(flat, key, k, spec.scaled)
 
     # ---- wire format ----------------------------------------------------
     def encode_leaf(self, x: jnp.ndarray, key) -> dict:

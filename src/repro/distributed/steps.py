@@ -9,11 +9,22 @@ compute of one buffer flush (Algorithm 1 lines 5-16) on the production mesh.
   *asynchrony* (staleness, arrival order) is host-level control flow across
   rounds (repro.sim); per-client staleness weights enter the round as an
   input vector.
-* Client deltas pass through the client quantizer Q_c in-graph
-  (quantize-dequantize; the wire format is byte-accounted analytically and
-  exercised for real in the host simulator and kernels).
-* The server update + hidden-state update close the round; both the
-  full-precision model x and the shared x-hat live sharded on the mesh.
+* The round runs on the SHARED flat substrate — the same entries the host
+  simulators and the cohort engine compile: each in-graph client is one
+  ``repro.core.qafel.client_update_flat`` call (flat x-hat in, REAL packed
+  wire codes out), the accumulated delta is the dequantized wire bits, the
+  server update is ``server_apply_flat`` on flat vectors, and the broadcast
+  is ``qsgd_encode_flat2d`` + decode of its own bits — there is no private
+  tree-based quantize/aggregate math here anymore.
+* The full-precision model x and the shared x-hat enter/leave as trees (the
+  launcher's sharded state contract); flatten/unflatten happens in-graph at
+  the round boundary. Known tradeoff of the unification: the in-graph
+  flatten concatenates leaves into one (d,) vector, so under a
+  model-parallel GSPMD mesh the round's flat segment is not leaf-sharded
+  the way the old tree scan was — fine for the host/reduced scales this
+  round executes at (the pod-quantized variant below stays leafwise and
+  sharding-preserving); a segment-sharded application of the flat entries
+  (the server_flush_step_sharded layout) is the path to recover it.
 
 The batch layout is (K, P, local_batch, ...): global_batch = K * P * local.
 """
@@ -29,8 +40,11 @@ import jax.numpy as jnp
 from repro.common.compat import shard_map
 from repro.common.tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
 from repro.core.hidden_state import hidden_apply
-from repro.core.qafel import QAFeLConfig, local_sgd_scan, server_apply
-from repro.core.quantizers import make_quantizer
+from repro.core.qafel import (QAFeLConfig, client_update_flat, local_sgd_scan,
+                              server_apply, server_apply_flat)
+from repro.core.quantizers import (flatten_tree, make_quantizer,
+                                   qsgd_encode_flat2d, qsgd_pack_lastdim,
+                                   qsgd_unpack_lastdim)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -83,37 +97,73 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
                          window_override=window_override)
         return l
 
+    def decode_client_flat(out: dict, k_enc, d: int):
+        """The flat delta the server accumulates: the client's own decoded
+        wire bits (real packed codes for qsgd, raw rows for identity, exact
+        sparse reconstruction for top_k/rand_k)."""
+        from repro.kernels import ops as kops  # lazy: kernels stay optional
+
+        if cq.spec.kind == "qsgd":
+            return kops.qsgd_dequantize(out["packed"][0], out["norms"][0],
+                                        cq.spec.bits, d)
+        if cq.spec.kind == "identity":
+            return out["flat"][0]
+        return cq.qdq_flat(out["flat"][0], k_enc)
+
     def round_fn(state: RoundState, batch, weights, key):
         """batch leaves: (K, P, b, ...); weights: (K,) staleness weights."""
+        from repro.kernels import ops as kops  # lazy: kernels stay optional
+
         k_clients, k_server = jax.random.split(key)
+        hidden_flat, layout = flatten_tree(state.hidden)
+        x_flat, _ = flatten_tree(state.x)
+        m_flat, _ = flatten_tree(state.momentum)
+        d = layout.total_size
+        # hard_boundary's predicate must be a TRACED runtime value (a
+        # constant lets XLA fold the cond and fuse across the boundary);
+        # derive an always-True flag from a round input, like the host
+        # path's self._flag jit argument
+        flag = state.t >= jnp.int32(0)
 
         def client_body(carry, inp):
             buf, loss_sum = carry
             batches_kp, w_k, key_k = inp
 
-            # the shared local-SGD loop (repro.core.qafel.local_sgd_scan):
-            # the same compiled step math every host-level engine runs
-            pkeys = jax.random.split(key_k, qcfg.local_steps + 1)
-            y_final, losses = local_sgd_scan(
-                loss, qcfg.client_lr, state.hidden, batches_kp, pkeys[:-1],
-                with_loss=True)
-            delta = tree_sub(y_final, state.hidden)
-            delta_q = cq.qdq(delta, pkeys[-1])  # Q_c on the upload
-            buf = tree_axpy(w_k, delta_q, buf)
+            # the SAME fused client pipeline the host engines compile
+            # (client_update_flat = shared local_sgd_scan + in-graph flatten
+            # + wire encode), at b=1 with the threefry wire dither
+            k_train, k_enc = jax.random.split(key_k)
+            out, losses = client_update_flat(
+                loss, qcfg, cq.spec, layout, hidden_flat, batches_kp,
+                k_train, k_enc, flag, b=1, with_loss=True)
+            buf = buf + w_k * decode_client_flat(out, k_enc, d)
             return (buf, loss_sum + losses.mean()), None
 
         ckeys = jax.random.split(k_clients, qcfg.buffer_size)
         (buf, loss_sum), _ = jax.lax.scan(
-            client_body, (tree_zeros_like(state.x), jnp.zeros((), jnp.float32)),
+            client_body,
+            (jnp.zeros((d,), jnp.float32), jnp.zeros((), jnp.float32)),
             (batch, weights, ckeys))
 
-        delta_bar = tree_scale(buf, 1.0 / qcfg.buffer_size)
-        x_new, m_new = server_apply(qcfg, state.x, state.momentum, delta_bar)
-        # Hidden-state update: q = Q_s(x^{t+1} - x-hat), applied on both sides
-        # via the same hidden_apply the host path uses.
-        q = sq.qdq(tree_sub(x_new, state.hidden), k_server)
-        hidden_new = hidden_apply(state.hidden, q)
-        new_state = RoundState(x=x_new, hidden=hidden_new, momentum=m_new,
+        delta_bar = buf * (1.0 / qcfg.buffer_size)
+        beta = qcfg.server_momentum if qcfg.server_momentum else None
+        x_new, m_new = server_apply_flat(x_flat, m_flat, delta_bar,
+                                         lr=qcfg.server_lr, beta=beta)
+        # Hidden-state update: q = Q_s(x^{t+1} - x-hat) through the shared
+        # flat wire encode; both sides apply the decoded bits.
+        diff = x_new - hidden_flat
+        if sq.spec.kind == "qsgd":
+            bp, bn = qsgd_encode_flat2d(diff[None], k_server, sq.spec.bits,
+                                        threefry=True)
+            q = kops.qsgd_dequantize(bp[0], bn[0], sq.spec.bits, d)
+        elif sq.spec.kind == "identity":
+            q = diff
+        else:
+            q = sq.qdq_flat(diff, k_server)
+        hidden_new = hidden_flat + q
+        new_state = RoundState(x=layout.unflatten(x_new),
+                               hidden=layout.unflatten(hidden_new),
+                               momentum=layout.unflatten(m_new),
                                t=state.t + 1)
         metrics = {"loss": loss_sum / qcfg.buffer_size}
         return new_state, metrics
@@ -154,35 +204,20 @@ def _make_podq_round(cfg: ModelConfig, qcfg: QAFeLConfig, cq, sq, *,
         within the (possibly TP-sharded) last dim, so no reshape ever crosses
         a sharded axis and the auto ("data"/"model") layout is untouched —
         only the all_gather crosses pods, carrying uint8 codes + fp32 bucket
-        norms (~bits/8 + 32/BUCKET bytes per param vs 2-4 raw). Tiny 1D
-        leaves go raw (savings negligible, padding awkward)."""
+        norms (~bits/8 + 32/BUCKET bytes per param vs 2-4 raw). The pack /
+        unpack math is the shared last-dim wire math in
+        ``repro.core.quantizers`` (``qsgd_pack_lastdim``/``_unpack_``), not
+        private to this module. Tiny 1D leaves go raw (savings negligible,
+        padding awkward)."""
         if leaf.ndim < 2 or leaf.shape[-1] % (BUCKET * per_byte):
             g = jax.lax.all_gather(leaf.astype(jnp.float32), "pod")
             return jnp.sum(g, axis=0).astype(leaf.dtype)
-        s = (1 << (bits - 1)) - 1
-        xf = leaf.astype(jnp.float32)
-        n = leaf.shape[-1]
-        xb = xf.reshape(leaf.shape[:-1] + (n // BUCKET, BUCKET))
-        norms = jnp.sqrt(jnp.sum(xb * xb, axis=-1, keepdims=True))
-        inv = jnp.where(norms > 0.0, s / jnp.maximum(norms, 1e-30), 0.0)
-        level = jnp.abs(xb) * inv
-        low = jnp.floor(level)
-        u = jax.random.uniform(key, xb.shape, dtype=jnp.float32)
-        xi = jnp.minimum(low + (u < (level - low)), float(s)).astype(jnp.uint32)
-        code = ((xb < 0.0).astype(jnp.uint32) << (bits - 1)) | xi
-        grouped = code.reshape(leaf.shape[:-1] + (n // per_byte, per_byte))
-        shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits)
-        packed = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+        packed, norms = qsgd_pack_lastdim(leaf, key, bits, bucket=BUCKET)
 
         pk = jax.lax.all_gather(packed, "pod")  # uint8 across the pod link
-        nm = jax.lax.all_gather(norms[..., 0], "pod")
+        nm = jax.lax.all_gather(norms, "pod")
 
-        codes = ((pk[..., None].astype(jnp.uint32) >> shifts)
-                 & jnp.uint32((1 << bits) - 1))
-        codes = codes.reshape((n_pods,) + leaf.shape[:-1] + (n // BUCKET, BUCKET))
-        mag = (codes & jnp.uint32(s)).astype(jnp.float32)
-        sign = 1.0 - 2.0 * ((codes >> (bits - 1)) & 1).astype(jnp.float32)
-        vals = sign * mag * (nm[..., None] / float(s))
+        vals = qsgd_unpack_lastdim(pk, nm, bits, bucket=BUCKET)
         tot = jnp.sum(vals, axis=0).reshape(leaf.shape)
         return tot.astype(leaf.dtype)
 

@@ -189,24 +189,87 @@ COHORT_STEP_TRACES = 0
 
 
 @functools.lru_cache(maxsize=64)
-def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int):
+def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None):
     """jit of the flat-in/packed-out client pipeline, cached by
-    (loss_fn, qcfg, quantizer spec, layout, cohort size) so engine
+    (loss_fn, qcfg, quantizer spec, layout, cohort size, mesh) so engine
     instances, benchmark sweeps and scenario tiers share compilations.
-    Bounded: loss_fn closures can capture datasets."""
+    Bounded: loss_fn closures can capture datasets.
+
+    With a ("data",) ``mesh`` and b > 1 the cohort member dim is sharded
+    via shard_map: each device trains its member slice of the tier-group
+    from the REPLICATED flat x-hat and emits its slice of packed codes +
+    bucket norms; the global (b, rows, ...) outputs come back in the same
+    wire layout, bit-identical to the single-device path (per-member math
+    is independent, and the batched counter-hash dither depends only on
+    each member's seed and element index, never on batch position). b is
+    index-padded up to a device multiple inside the jit (padding repeats
+    member 0; its rows are sliced off before returning), covering cohorts
+    that don't divide the device count. A 1-device mesh still runs the
+    one-segment shard_map — the same convention as the sharded flush, and
+    the fixed cost the ``shard/*_ndev1`` bench rows measure. b == 1 always
+    takes the unsharded path: a single message cannot shard over members,
+    and its threefry dither is the sequential engine's pinned wire
+    contract.
+    """
     from repro.core.qafel import client_update_flat  # lazy: kernels stay core-free
+
+    if mesh is None or b == 1:
+        def step(hidden_flat, batches, k_train, k_enc, flag):
+            global COHORT_STEP_TRACES
+            COHORT_STEP_TRACES += 1
+            return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
+                                      batches, k_train, k_enc, flag, b=b)
+
+        return jax.jit(step)
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.common.compat import shard_map as _shard_map
+    from repro.sharding.rules import mesh_data_extent
+
+    ndev = mesh_data_extent(mesh)
+    b_pad = -(-b // ndev) * ndev
+    b_loc = b_pad // ndev
+
+    def member_slice(hidden_flat, batches, k_train, k_enc, flag):
+        # batched=True even at b_loc == 1: every member's wire bits must be
+        # the batched counter-hash convention of the whole-cohort dispatch
+        return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
+                                  batches, k_train, k_enc, flag, b=b_loc,
+                                  batched=True)
+
+    if spec.kind == "qsgd":
+        out_specs = {"norms": P("data", None), "packed": P("data", None, None)}
+    else:
+        out_specs = {"flat": P("data", None)}
+
+    def lead_spec(leaf):
+        return P(*(["data"] + [None] * (leaf.ndim - 1)))
 
     def step(hidden_flat, batches, k_train, k_enc, flag):
         global COHORT_STEP_TRACES
         COHORT_STEP_TRACES += 1
-        return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
-                                  batches, k_train, k_enc, flag, b=b)
+        k_train, k_enc = jnp.asarray(k_train), jnp.asarray(k_enc)
+        if b_pad != b:
+            idx = jnp.concatenate(
+                [jnp.arange(b), jnp.zeros((b_pad - b,), jnp.int32)])
+            batches = jax.tree.map(lambda l: jnp.take(l, idx, axis=0), batches)
+            k_train = jnp.take(k_train, idx, axis=0)
+            k_enc = jnp.take(k_enc, idx, axis=0)
+        sm = _shard_map(
+            member_slice, mesh=mesh,
+            in_specs=(P(), jax.tree.map(lead_spec, batches),
+                      lead_spec(k_train), lead_spec(k_enc), P()),
+            out_specs=out_specs, check_vma=False)
+        out = sm(hidden_flat, batches, k_train, k_enc, flag)
+        return {k: v[:b] for k, v in out.items()}
 
     return jax.jit(step)
 
 
 def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
-                             batches, k_train, k_enc, flag, *, b: int):
+                             batches, k_train, k_enc, flag, *, b: int,
+                             mesh=None):
     """The entire client pipeline of one cohort tier-group as ONE jitted
     dispatch: unflatten the device-resident flat x-hat *inside* the jit, run
     the (vmapped) local-SGD scan, flatten the delta stack to (b, d), and
@@ -217,13 +280,15 @@ def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
     ``QAFeL.run_client`` calls this with b=1, so both engines share one
     compiled client path). ``flag`` is the runtime-True predicate behind the
     ``hard_boundary`` materialization points that pin bit-exactness with the
-    pre-fusion multi-dispatch reference.
+    pre-fusion multi-dispatch reference. ``mesh`` (a ("data",) sim mesh)
+    shards the member dim b via shard_map — same wire layout, bit-identical
+    outputs; see ``_cohort_step_fn``.
 
     Returns ``{"packed": (b, rows, 128*bits//8), "norms": (b, rows)}`` for
     qsgd, ``{"flat": (b, d)}`` otherwise (identity's flat rows ARE the wire
     payload; sparse kinds are encoded by the host from the flat rows).
     """
-    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b)(
+    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh)(
         hidden_flat, batches, k_train, k_enc, flag)
 
 
@@ -273,3 +338,81 @@ def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
     q = boundary(qsgd_dequantize(bpacked, bnorms, sbits, n))
     h_new = hidden_flat + q
     return x_new, h_new, m_new, (bpacked, bnorms)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "sbits", "lr", "beta", "mesh"),
+                   donate_argnums=(0, 1, 2))
+def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
+                              weights, extra, key2d, flag, *,
+                              bits: int, sbits, lr: float, beta, mesh):
+    """``server_flush_step`` on a flat state sharded over a ("data",) mesh.
+
+    Same chain, one shard_map: every device owns one CONTIGUOUS segment of
+    the flat vectors (``sharding.rules.flat_vector_spec``) and the matching
+    row segment of the K-upload code/norm stacks. All state arrays are
+    segment-aligned-padded to ``sharding.rules.flat_padded_len`` (bucket
+    rows padded to a device multiple, zero tails — the caller pads the
+    stack/norms/extra the same way), so:
+
+    * the fused dequantize-accumulate, momentum and server update are
+      segment-local elementwise math — bit-identical per element to the
+      single-device dispatch;
+    * the broadcast encode's bucket-norm math only ever sees whole
+      128-element rows (segments are row-aligned — the BUCKET alignment
+      rule), and its counter-hash dither is keyed by the GLOBAL element
+      index via a per-segment row offset (``axis_index * local_rows``), so
+      the emitted codes are the single-device wire bits exactly;
+    * the zero tails stay zero through every step (zero codes -> zero
+      delta -> zero diff -> zero broadcast rows), and the caller slices
+      the payload back to the true ``rows_for(n)`` wire rows — zero
+      wire-format change.
+
+    Donation keeps the sharded state update in place per device. ``stack``
+    may be None (no packed qsgd uploads this window), ``beta`` None (no
+    momentum), ``key2d`` None (identity broadcast). Returns the same
+    ``(x_new, hidden_new, momentum_new, (payload...))`` contract with
+    padded-length payload arrays.
+    """
+    global SERVER_FLUSH_TRACES
+    SERVER_FLUSH_TRACES += 1
+    from jax.sharding import PartitionSpec as P
+
+    from repro.common.compat import shard_map as _shard_map
+    from repro.sharding.rules import (flat_norms_spec, flat_stack_spec,
+                                      flat_vector_spec)
+
+    def seg_body(x_l, h_l, m_l, stack_l, norms_l, w, extra_l, key2d_l, flag_l):
+        boundary = functools.partial(hard_boundary, flag_l)
+        n_l = x_l.shape[0]
+        m_new, x_new = _agg.aggregate_update(
+            x_l, m_l, stack_l, norms_l, w, extra_l,
+            bits=bits, n=n_l, lr=lr, beta=beta, boundary=boundary,
+            interpret=_interpret())
+        diff = boundary(x_new - h_l)
+        if sbits is None:  # identity server quantizer
+            return x_new, h_l + diff, m_new, (diff,)
+        rows_l = n_l // BUCKET
+        seeds = jnp.asarray(key2d_l).reshape(1, -1)[:, :2].astype(jnp.uint32)
+        row_off = (jax.lax.axis_index("data") * rows_l).astype(jnp.uint32)
+        bp, bn = _qsgd._quantize_pack_batch_block(
+            diff.reshape(1, rows_l, BUCKET), seeds[:, 0], seeds[:, 1],
+            row_off, sbits)
+        bpacked, bnorms = boundary((bp[0], bn.reshape(rows_l)))
+        q = boundary(_qsgd._unpack_dequantize_block(
+            bpacked, bnorms.reshape(rows_l, 1), sbits).reshape(-1))
+        return x_new, h_l + q, m_new, (bpacked, bnorms)
+
+    vec, rep = flat_vector_spec(), P()
+    payload_specs = (vec,) if sbits is None else (P("data", None), vec)
+    sm = _shard_map(
+        seg_body, mesh=mesh,
+        in_specs=(vec, vec, vec,
+                  None if stack is None else flat_stack_spec(),
+                  None if norms is None else flat_norms_spec(),
+                  None if weights is None else rep,
+                  None if extra is None else vec,
+                  None if key2d is None else rep, rep),
+        out_specs=(vec, vec, vec, payload_specs), check_vma=False)
+    return sm(x_flat, hidden_flat, momentum_flat, stack, norms, weights,
+              extra, key2d, flag)

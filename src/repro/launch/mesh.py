@@ -24,3 +24,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """A 1x1 mesh on whatever single device is present (CPU smoke tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_sim_mesh(n_dev: int | None = None):
+    """A 1-D ("data",) mesh for the sharded flat substrate.
+
+    This is the mesh the host-level protocol (``QAFeL(..., mesh=)``, the
+    cohort engine, the fused flush) shards over: cohort members and flat
+    state segments both live on "data". ``n_dev=None`` uses every local
+    device — 8 under the CI job's
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` trick, 1 on a
+    plain CPU (where the sharded path still runs, as a one-segment
+    shard_map, and stays bit-identical to the unsharded one).
+    """
+    if n_dev is None:
+        n_dev = jax.device_count()
+    if n_dev > jax.device_count():
+        raise ValueError(
+            f"make_sim_mesh({n_dev}) but only {jax.device_count()} device(s) "
+            "are visible; set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={n_dev} before importing jax to fake them on CPU")
+    return jax.make_mesh((n_dev,), ("data",))

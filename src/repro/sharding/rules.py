@@ -227,3 +227,56 @@ def cache_pspecs(rules: ShardingRules, cfg: ModelConfig, cache_tree) -> Any:
 def to_shardings(rules: ShardingRules, pspec_tree) -> Any:
     return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), pspec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector segment specs (the sharded flat substrate)
+# ---------------------------------------------------------------------------
+#
+# The server's device-resident state is flat f32 vectors in one TreeLayout
+# coordinate space (repro.core.qafel.ServerState); under a ("data",) sim
+# mesh each device owns one CONTIGUOUS segment of the vector. Segments are
+# aligned to the packed wire format's 128-element bucket rows (one fp32
+# norm per row), so the per-row bucket-norm math of quantize/dequantize is
+# segment-local and the sharded flush stays bit-identical to the
+# single-device one: no bucket ever straddles two devices. The same specs
+# shard the buffered upload stack — (K, rows, bytes) codes and (K, rows)
+# norms — over the rows dim, which is the same segment boundary.
+
+FLAT_AXIS = "data"  # the axis flat segments (and cohort members) shard over
+
+
+def mesh_data_extent(mesh) -> int:
+    """Extent of the "data" axis of a mesh (1 for None / no such axis)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(FLAT_AXIS, 1))
+
+
+def flat_padded_len(n: int, ndev: int, bucket: int = 128) -> int:
+    """Segment-aligned padded length for an n-element flat vector sharded
+    over ndev devices: rows of ``bucket`` elements, rows padded to an ndev
+    multiple, so every device segment is a whole number of bucket rows."""
+    rows = -(-n // bucket)
+    rows_pad = -(-rows // ndev) * ndev
+    return rows_pad * bucket
+
+
+def flat_vector_spec() -> P:
+    """Spec of a flat state/residual vector: one contiguous segment/device."""
+    return P(FLAT_AXIS)
+
+
+def flat_stack_spec() -> P:
+    """Spec of the (K, rows, 128*bits//8) buffered code stack: every device
+    dequant-accumulates its own row segment of all K uploads."""
+    return P(None, FLAT_AXIS, None)
+
+
+def flat_norms_spec() -> P:
+    """Spec of the (K, rows) bucket-norm stack (rows dim = segments)."""
+    return P(None, FLAT_AXIS)
+
+
+def flat_vector_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, flat_vector_spec())

@@ -133,7 +133,8 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
                 gt, ge = train_keys[midx], enc_keys[midx]
             out = kops.cohort_train_encode_step(
                 self.algo.loss_fn, self.algo.qcfg, q.spec, st.layout,
-                st.hidden_flat, grp_batches, gt, ge, self.algo._flag, b=b)
+                st.hidden_flat, grp_batches, gt, ge, self.algo._flag, b=b,
+                mesh=self.algo.mesh)
             ekeys = np.asarray(ge).reshape(b, -1) if b > 1 else [ge]
             mlist = frame_cohort_messages(CLIENT_UPDATE, q, out, st.layout,
                                           enc_keys=ekeys, version=version,

@@ -56,6 +56,15 @@ class SimConfig:
         return self.concurrency / HALF_NORMAL_MEAN
 
 
+def _hidden_wire(state):
+    """The hidden state in TRUE wire coordinates: a sharded server pads its
+    flat vectors to segment alignment, but what clients hold/receive is the
+    unpadded [:n] view. Tolerates layout-less states (test doubles)."""
+    h = state.hidden_flat
+    layout = getattr(state, "layout", None)
+    return h[:layout.total_size] if layout is not None else h
+
+
 @dataclasses.dataclass
 class SimResult:
     reached_target: bool
@@ -84,8 +93,9 @@ class BaseAsyncSimulator:
         self.rng = np.random.default_rng(sim_cfg.seed)
         self.key = jax.random.PRNGKey(sim_cfg.seed)
         # flat replicas of the hidden state held by tracked "clients"
-        # (copies: the server's own buffers are donated to the fused flush)
-        self.replicas = [jnp.array(algo.state.hidden_flat)
+        # (copies: the server's own buffers are donated to the fused flush).
+        # Replicas live in the TRUE wire coordinate space (_hidden_wire).
+        self.replicas = [jnp.array(_hidden_wire(algo.state))
                          for _ in range(sim_cfg.track_hidden_replicas)]
         self._last_eval_step = -1
 
@@ -94,7 +104,7 @@ class BaseAsyncSimulator:
         return sub
 
     def verify_replicas(self) -> bool:
-        h = self.algo.state.hidden_flat
+        h = _hidden_wire(self.algo.state)
         return all(bool(jnp.array_equal(rep, h)) for rep in self.replicas)
 
     def _apply_broadcast(self, bmsg, now: float, uploads: int,
@@ -112,7 +122,11 @@ class BaseAsyncSimulator:
             acc = float(self.eval_fn(self.algo.state.x))
             accuracy_trace.append((now, uploads, step, acc))
             self._last_eval_step = step
-            if self.cfg.target_accuracy and acc >= self.cfg.target_accuracy:
+            # `is not None`, NOT truthiness: target_accuracy=0.0 is a real
+            # target (e.g. "stop at break-even" on signed scores) that a
+            # truthy check would silently never fire for
+            if (self.cfg.target_accuracy is not None
+                    and acc >= self.cfg.target_accuracy):
                 return True
         return False
 

@@ -123,6 +123,58 @@ def test_checkpoint_with_max_staleness_history(tmp_path):
     assert resumed.metrics() == algo.metrics()
 
 
+def test_mesh_checkpoint_interop(tmp_path):
+    """Mesh <-> single-device interop: archives are canonical (unpadded), so
+    a single-device checkpoint reshard-loads into a mesh run and a mesh
+    checkpoint loads into a single-device run, both continuing
+    bit-identically; the sharding meta records provenance."""
+    import json
+
+    from repro.launch.mesh import make_sim_mesh
+
+    mesh = make_sim_mesh()
+    path = str(tmp_path / "ckpt.npz")
+    algo = drive(make_algo(), 7, seed=4)
+    save_checkpoint(path, algo)
+
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode("utf-8"))
+        assert meta["sharding"]["devices"] == 1
+        assert meta["sharding"]["n"] == algo.state.layout.total_size
+        assert data["x_flat"].shape[0] == algo.state.layout.total_size
+
+    # single-device archive -> mesh run: padded + NamedSharding-placed
+    sharded = QAFeL(algo.qcfg, quad_loss, PARAMS0, mesh=mesh)
+    load_checkpoint(path, sharded)
+    n = algo.state.layout.total_size
+    np.testing.assert_array_equal(np.asarray(algo.state.x_flat),
+                                  np.asarray(sharded.state.x_flat)[:n])
+    drive_pair(algo, sharded, 8)
+    np.testing.assert_array_equal(np.asarray(algo.state.hidden_flat),
+                                  np.asarray(sharded.state.hidden_flat)[:n])
+
+    # mesh archive -> single-device run (canonical arrays, no padding)
+    path2 = str(tmp_path / "ckpt2.npz")
+    save_checkpoint(path2, sharded)
+    with np.load(path2) as data:
+        assert data["x_flat"].shape[0] == n  # padding never hits the disk
+    resumed = load_checkpoint(path2, make_algo())
+    assert_same_state(algo, resumed)
+
+
+def test_mesh_checkpoint_rejects_mismatched_layout(tmp_path):
+    """The reshard-load still hard-fails on a different flat layout."""
+    from repro.launch.mesh import make_sim_mesh
+
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, drive(make_algo(), 4))
+    wrong = make_algo(params0={"w": jnp.zeros((301,), jnp.float32),
+                               "b": jnp.ones((7,), jnp.float32)})
+    wrong.mesh = make_sim_mesh()
+    with pytest.raises(ValueError, match="layout"):
+        load_checkpoint(path, wrong)
+
+
 def test_load_rejects_mismatches(tmp_path):
     path = str(tmp_path / "ckpt.npz")
     algo = drive(make_algo(), 4)
