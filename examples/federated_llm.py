@@ -20,6 +20,13 @@ from repro.data.synthetic import synthetic_batch_for_config
 from repro.distributed.steps import init_round_state, make_qafel_round
 
 
+@jax.jit
+def model_drift(x, hidden):
+    """|x - x_hat|_1 over the whole tree, reduced on device to one scalar."""
+    return sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum()
+               for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(hidden)))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
@@ -48,11 +55,10 @@ def main():
             (qcfg.buffer_size, qcfg.local_steps, local) + v.shape[1:])
             for k, v in raw.items()}
         state, metrics = round_fn(state, batch, weights, jax.random.PRNGKey(step))
-        drift = sum(float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum())
-                    for a, b in zip(jax.tree.leaves(state.x),
-                                    jax.tree.leaves(state.hidden)))
-        print(f"round {step}: loss={float(metrics['loss']):.4f} "
-              f"|x - x_hat|_1={drift:.2f}")
+        # one host sync per round: loss and the device-reduced drift together
+        loss, drift = jax.device_get(
+            (metrics["loss"], model_drift(state.x, state.hidden)))
+        print(f"round {step}: loss={loss:.4f} |x - x_hat|_1={drift:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""flcheck: static + compiled-contract analysis for the flat substrate.
+
+Two passes over the repo, one CLI (``python -m repro.analysis_static.flcheck``):
+
+* an AST lint pass (``lint``/``rules``) encoding the bug classes PRs 3-5
+  fixed by hand — truthy guards on Optional numeric fields, use-after-donate,
+  view aliasing into sharding placement/donation, host syncs in jitted
+  bodies and sim hot loops, unhashable/fresh static args to lru-cached jits;
+* a compiled-contract pass (``contracts``) that lowers the fused entries
+  (``server_flush_step``, ``cohort_train_encode_step``, sharded variants)
+  and asserts, from the compiled HLO and a runtime ``trace_guard``, the
+  invariants ``kernels.ops.CONTRACTS`` declares: donation aliasing actually
+  established, one kernel entry per dispatch, ``hard_boundary`` conditionals
+  present.
+
+Both passes emit the same ``findings.Finding`` records; CI fails on any.
+"""
+from repro.analysis_static.findings import Finding
+from repro.analysis_static.trace_guard import TraceGuardError, trace_guard
+
+__all__ = ["Finding", "TraceGuardError", "trace_guard"]

@@ -1,0 +1,205 @@
+"""Repo-wide fact collection: the lint pass's phase 1.
+
+The interesting rules are cross-file: a ``donate_argnums`` declaration lives
+in ``kernels/ops.py`` while the hazardous read lives in ``core/qafel.py``;
+an ``Optional[float]`` dataclass field is declared once and truthiness-
+tested anywhere. So before any rule runs, every scanned file contributes to
+one ``RepoFacts`` index:
+
+* ``optional_numeric_fields`` — attribute names whose declaration makes 0 a
+  legal value but ``None`` the sentinel: dataclass/class fields annotated
+  ``Optional[int|float]`` (or the ``| None`` union form), and argparse
+  options with ``type=int|float`` that default to ``None``;
+* ``donating`` — functions wrapped in a donating ``jax.jit`` (decorator or
+  assignment form), with their positional params and donated positions;
+* ``lru_cached`` — ``functools.lru_cache``-decorated functions (the jit
+  factories), whose call-site args must be hashable AND stable.
+
+Matching is by bare name: attribute call sites (``kops.server_flush_step``)
+resolve on the last segment. That is deliberately coarse — the repo has one
+namespace of fused entries — and errs toward flagging.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_NUMERIC = {"int", "float"}
+_OPT_STR_RE = re.compile(
+    r"^\s*(?:Optional\[\s*(int|float)\s*\]|(int|float)\s*\|\s*None|"
+    r"None\s*\|\s*(int|float))\s*$")
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c"; anything non-trivial -> None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def is_optional_numeric_annotation(ann: Optional[ast.AST]) -> bool:
+    """Optional[int|float], int|None / None|int, and their string forms."""
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return bool(_OPT_STR_RE.match(ann.value))
+    if isinstance(ann, ast.Subscript) and last_segment(ann.value) == "Optional":
+        inner = ann.slice
+        return isinstance(inner, ast.Name) and inner.id in _NUMERIC
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        sides = (ann.left, ann.right)
+        has_none = any(isinstance(s, ast.Constant) and s.value is None
+                       for s in sides)
+        has_num = any(isinstance(s, ast.Name) and s.id in _NUMERIC
+                      for s in sides)
+        return has_none and has_num
+    return False
+
+
+@dataclasses.dataclass
+class DonatingFn:
+    name: str
+    params: Tuple[str, ...]  # positional params, in order
+    donated: Tuple[int, ...]  # donated positional indices
+    path: str
+    line: int
+
+    def donated_params(self) -> Set[str]:
+        return {self.params[i] for i in self.donated if i < len(self.params)}
+
+
+@dataclasses.dataclass
+class RepoFacts:
+    optional_numeric_fields: Set[str] = dataclasses.field(default_factory=set)
+    donating: Dict[str, DonatingFn] = dataclasses.field(default_factory=dict)
+    lru_cached: Set[str] = dataclasses.field(default_factory=set)
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            if isinstance(kw.value, ast.Tuple):
+                vals = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)]
+                return tuple(v for v in vals if isinstance(v, int))
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, int):
+                return (kw.value.value,)
+    return None
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    return last_segment(node) == "jit"
+
+
+def _donating_decorator(dec: ast.AST) -> Optional[Tuple[int, ...]]:
+    """``@functools.partial(jax.jit, ..., donate_argnums=...)`` or
+    ``@jax.jit(...donate_argnums=...)``."""
+    if not isinstance(dec, ast.Call):
+        return None
+    if last_segment(dec.func) == "partial" and dec.args and _is_jit_ref(
+            dec.args[0]):
+        return _donate_positions(dec)
+    if _is_jit_ref(dec.func):
+        return _donate_positions(dec)
+    return None
+
+
+def _positional_params(fn: ast.FunctionDef) -> Tuple[str, ...]:
+    args = fn.args
+    return tuple(a.arg for a in (*args.posonlyargs, *args.args))
+
+
+class _FactsVisitor(ast.NodeVisitor):
+    def __init__(self, facts: RepoFacts, path: str):
+        self.facts = facts
+        self.path = path
+
+    # -- Optional numeric fields (class bodies) ---------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        for stmt in node.body:
+            if (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and is_optional_numeric_annotation(stmt.annotation)):
+                self.facts.optional_numeric_fields.add(stmt.target.id)
+        self.generic_visit(node)
+
+    # -- argparse Optional numeric options --------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        if last_segment(node.func) == "add_argument":
+            self._argparse_option(node)
+        self.generic_visit(node)
+
+    def _argparse_option(self, node: ast.Call) -> None:
+        kws = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+        type_kw = kws.get("type")
+        if not (isinstance(type_kw, ast.Name) and type_kw.id in _NUMERIC):
+            return
+        default = kws.get("default")
+        defaults_none = (default is None
+                         or (isinstance(default, ast.Constant)
+                             and default.value is None))
+        if not defaults_none:
+            return
+        dest = kws.get("dest")
+        if isinstance(dest, ast.Constant) and isinstance(dest.value, str):
+            self.facts.optional_numeric_fields.add(dest.value)
+            return
+        for arg in node.args:
+            if (isinstance(arg, ast.Constant) and isinstance(arg.value, str)
+                    and arg.value.startswith("--")):
+                self.facts.optional_numeric_fields.add(
+                    arg.value.lstrip("-").replace("-", "_"))
+                return
+
+    # -- donating jits and lru-cached factories ----------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        for dec in node.decorator_list:
+            donated = _donating_decorator(dec)
+            if donated is not None:
+                self.facts.donating[node.name] = DonatingFn(
+                    node.name, _positional_params(node), donated,
+                    self.path, node.lineno)
+            if (last_segment(dec) == "lru_cache"
+                    or (isinstance(dec, ast.Call)
+                        and last_segment(dec.func) == "lru_cache")):
+                self.facts.lru_cached.add(node.name)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        """``g = jax.jit(f, donate_argnums=(0,))``: the assignment form."""
+        v = node.value
+        if (isinstance(v, ast.Call) and _is_jit_ref(v.func)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            donated = _donate_positions(v)
+            if donated is not None:
+                name = node.targets[0].id
+                self.facts.donating[name] = DonatingFn(
+                    name, (), donated, self.path, node.lineno)
+        self.generic_visit(node)
+
+
+def collect_facts(trees: Dict[str, ast.Module]) -> RepoFacts:
+    """Phase 1 over every parsed file: path -> ast.Module."""
+    facts = RepoFacts()
+    for path, tree in trees.items():
+        _FactsVisitor(facts, path).visit(tree)
+    return facts

@@ -1,0 +1,84 @@
+"""Finding records, ``# flcheck: ignore[...]`` suppressions, and reporters.
+
+A ``Finding`` is one rule violation at one source location (the compiled-
+contract pass uses pseudo-paths like ``hlo://server_flush_step?ndev=8``).
+Suppression is per-line and per-rule: a trailing ``# flcheck: ignore[rule]``
+on the flagged line — or a standalone comment line directly above it —
+silences that rule there, and the suppression is counted so a clean run
+still reports how much was waived.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Sequence
+
+_IGNORE_RE = re.compile(r"#\s*flcheck:\s*ignore(?:\[([\w\-, ]*)\])?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def suppressions_for(source: str) -> Dict[int, Optional[frozenset]]:
+    """Map line number (1-based) -> suppressed rule set.
+
+    ``None`` as the value means "all rules" (a bare ``# flcheck: ignore``).
+    A standalone ignore comment suppresses the first following line too, so
+    long flagged expressions can carry the justification above them.
+    """
+    out: Dict[int, Optional[frozenset]] = {}
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = _IGNORE_RE.search(text)
+        if not m:
+            continue
+        rules = m.group(1)
+        ruleset = (None if rules is None or not rules.strip() else
+                   frozenset(r.strip() for r in rules.split(",") if r.strip()))
+        out[i] = ruleset
+        if text.lstrip().startswith("#"):  # standalone comment: covers next line
+            out[i + 1] = ruleset
+    return out
+
+
+def is_suppressed(finding: Finding,
+                  suppressions: Dict[int, Optional[frozenset]]) -> bool:
+    ruleset = suppressions.get(finding.line, frozenset())
+    if ruleset is None:  # bare ignore: every rule
+        return True
+    return finding.rule in (ruleset or ())
+
+
+def render_text(findings: Sequence[Finding], *, checked_files: int,
+                suppressed: int) -> str:
+    lines = [f"{f.location()}: [{f.rule}] {f.message}" for f in findings]
+    lines.append(f"flcheck: {len(findings)} finding(s), {suppressed} "
+                 f"suppressed, {checked_files} file(s) checked")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding], *, checked_files: int,
+                suppressed: int) -> str:
+    return json.dumps({
+        "findings": [f.as_dict() for f in findings],
+        "checked_files": checked_files,
+        "suppressed": suppressed,
+    }, indent=2)
+
+
+def parse_json(text: str) -> List[Finding]:
+    doc = json.loads(text)
+    return [Finding(**f) for f in doc["findings"]]

@@ -1,0 +1,70 @@
+"""flcheck CLI: the repo's invariant gate.
+
+    PYTHONPATH=src python -m repro.analysis_static.flcheck                # both passes
+    PYTHONPATH=src python -m repro.analysis_static.flcheck --pass ast    # lint only
+    PYTHONPATH=src python -m repro.analysis_static.flcheck --pass compiled --ndev 1,8
+    PYTHONPATH=src python -m repro.analysis_static.flcheck --format json
+
+Exit status 1 iff any finding survives suppression — CI fails on the first
+broken contract. The AST pass needs no jax; the compiled pass imports it
+lazily (and re-execs in a subprocess with forced virtual devices when
+``--ndev`` exceeds the local device count).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis_static.findings import Finding, render_json, render_text
+from repro.analysis_static.lint import DEFAULT_PATHS, run_lint
+from repro.analysis_static.rules import RULES
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="flcheck",
+        description="AST + compiled-HLO invariant analyzer for the QAFeL "
+                    "substrate")
+    ap.add_argument("--pass", dest="which", default="all",
+                    choices=("ast", "compiled", "all"))
+    ap.add_argument("--format", default="text", choices=("text", "json"))
+    ap.add_argument("--rules", default=None,
+                    help="comma list of lint rules (default: all: %s)"
+                         % ",".join(sorted(RULES)))
+    ap.add_argument("--ndev", default="1",
+                    help="comma list of device counts for the compiled pass")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs for the AST pass (default: %s)"
+                         % " ".join(DEFAULT_PATHS))
+    ns = ap.parse_args(argv)
+
+    findings: List[Finding] = []
+    checked_files = 0
+    suppressed = 0
+
+    if ns.which in ("ast", "all"):
+        rule_names = ([r.strip() for r in ns.rules.split(",") if r.strip()]
+                      if ns.rules else None)
+        res = run_lint(ns.paths or DEFAULT_PATHS, rule_names)
+        findings.extend(res.findings)
+        checked_files = res.checked_files
+        suppressed = res.suppressed
+
+    if ns.which in ("compiled", "all"):
+        from repro.analysis_static.contracts import run_compiled
+        ndevs = tuple(int(n) for n in ns.ndev.split(",") if n.strip())
+        cres = run_compiled(ndevs)
+        findings.extend(cres.findings)
+        if ns.format == "text":
+            print(f"compiled pass: {cres.checks} contract check(s) over "
+                  f"ndev={list(ndevs)}", file=sys.stderr)
+
+    render = render_json if ns.format == "json" else render_text
+    print(render(findings, checked_files=checked_files,
+                 suppressed=suppressed))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""The AST lint pass driver: discover -> parse -> facts -> rules -> report.
+
+Two phases over the scanned paths (default: ``src/``, ``benchmarks/``,
+``examples/``): phase 1 parses every file once and builds the cross-file
+``RepoFacts`` index (Optional numeric fields, donating jits, lru-cached
+factories); phase 2 runs every registered rule per file against that index
+and filters findings through the per-line suppressions.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis_static.facts import RepoFacts, collect_facts
+from repro.analysis_static.findings import (Finding, is_suppressed,
+                                            suppressions_for)
+from repro.analysis_static.rules import iter_rules
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    checked_files: int
+    suppressed: int
+
+
+def discover(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in ("__pycache__", ".git"))
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return out
+
+
+def parse_files(files: Sequence[str]) -> Dict[str, Tuple[ast.Module, str]]:
+    parsed: Dict[str, Tuple[ast.Module, str]] = {}
+    for path in files:
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            parsed[path] = (ast.parse(source, filename=path), source)
+        except SyntaxError as exc:  # a broken file IS a finding
+            parsed[path] = (ast.Module(body=[], type_ignores=[]), source)
+            parsed[path][0]._flcheck_syntax_error = exc  # type: ignore
+    return parsed
+
+
+def run_lint(paths: Sequence[str] = DEFAULT_PATHS,
+             rule_names: Optional[Sequence[str]] = None,
+             extra_facts_paths: Sequence[str] = ()) -> LintResult:
+    """Lint ``paths``. ``extra_facts_paths`` contribute to phase 1 (so a
+    fixture file can be linted against the real tree's donation facts)
+    without being scanned for findings themselves."""
+    files = discover(paths)
+    parsed = parse_files(files)
+    fact_trees = {p: t for p, (t, _) in parsed.items()}
+    for p, (t, _) in parse_files(discover(extra_facts_paths)).items():
+        fact_trees.setdefault(p, t)
+    facts: RepoFacts = collect_facts(fact_trees)
+
+    rules = iter_rules(rule_names)
+    findings: List[Finding] = []
+    suppressed = 0
+    for path in files:
+        tree, source = parsed[path]
+        err = getattr(tree, "_flcheck_syntax_error", None)
+        if err is not None:
+            findings.append(Finding("syntax-error", path, err.lineno or 0,
+                                    err.offset or 0, str(err.msg)))
+            continue
+        marks = suppressions_for(source)
+        for rule in rules:
+            for f in rule.check(path, tree, source, facts):
+                if is_suppressed(f, marks):
+                    suppressed += 1
+                else:
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return LintResult(findings, checked_files=len(files),
+                      suppressed=suppressed)

@@ -1,0 +1,675 @@
+"""The AST lint rules: one per bug class PRs 3-5 hit by hand.
+
+Every rule is registered in ``RULES`` and checked per file against the
+shared ``RepoFacts`` index (phase 1, ``facts.collect_facts``). Rules err
+toward flagging and are silenced in place with ``# flcheck: ignore[rule]``
+— a suppression IS documentation that a host sync or truthy test is
+intentional.
+
+| rule                  | bug class                                        |
+|-----------------------|--------------------------------------------------|
+| truthy-optional-guard | ``if cfg.target_accuracy:`` treats 0 as unset    |
+| use-after-donate      | reading a buffer already donated to a fused jit  |
+| view-donation-alias   | slice view fed to device_put / a donated arg     |
+| host-sync-in-jit      | float()/np.asarray()/.item() inside a jit body   |
+| host-sync-in-loop     | per-iteration device->host sync in a hot loop    |
+| unhashable-static-arg | unhashable/fresh args to an lru-cached jit cache |
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis_static.facts import (RepoFacts, dotted_name,
+                                         is_optional_numeric_annotation,
+                                         last_segment)
+from repro.analysis_static.findings import Finding
+
+RULES: Dict[str, "Rule"] = {}
+
+# reads of donated buffers that touch metadata only, never the bytes
+_METADATA_ATTRS = {"shape", "dtype", "ndim", "size", "nbytes", "sharding",
+                   "is_deleted", "device", "devices", "committed", "layout"}
+_SYNC_BUILTINS = {"float", "int", "bool"}
+_NP_SYNC_FUNCS = {"asarray", "array"}
+_SYNC_METHODS = {"item", "tolist"}
+_VIEW_PROPAGATING = {"asarray", "reshape", "ravel", "astype", "view"}
+
+
+class Rule:
+    name = ""
+    help = ""
+
+    def check(self, path: str, tree: ast.Module, source: str,
+              facts: RepoFacts) -> List[Finding]:
+        raise NotImplementedError
+
+
+def register(cls):
+    RULES[cls.name] = cls()
+    return cls
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _all_params(fn) -> Tuple[str, ...]:
+    a = fn.args
+    return tuple(p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs))
+
+
+def _contains_device_call(expr: ast.AST) -> bool:
+    """Any ``jnp.*`` / ``jax.*`` call inside ``expr``."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d and d.split(".", 1)[0] in ("jnp", "jax"):
+                return True
+    return False
+
+
+def _references_any(expr: ast.AST, names: Set[str]) -> bool:
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(expr))
+
+
+def _is_metadata_expr(expr: ast.AST) -> bool:
+    """``x.size`` / ``x.shape[0]`` / ``x.ndim``: host-side metadata reads,
+    never a device sync, even when ``x`` itself is a device value."""
+    if isinstance(expr, ast.Subscript):
+        expr = expr.value
+    return isinstance(expr, ast.Attribute) and expr.attr in _METADATA_ATTRS
+
+
+# ---------------------------------------------------------------------------
+# truthy-optional-guard
+# ---------------------------------------------------------------------------
+
+
+@register
+class TruthyOptionalGuard(Rule):
+    """``if self.target_accuracy:`` on an Optional numeric field — the
+    ``target_accuracy=0.0`` early-stop bug (PR 5): 0 is a legal value, None
+    is the sentinel, and truthiness conflates them. Matches attribute reads
+    of any Optional[int|float] dataclass/argparse field in the repo, and
+    bare names of Optional numeric parameters inside their own function."""
+
+    name = "truthy-optional-guard"
+    help = "truthiness test on an Optional numeric field; use `is not None`"
+
+    def check(self, path, tree, source, facts):
+        findings: List[Finding] = []
+        self._scan(tree, frozenset(), path, facts, findings, seen=set())
+        return findings
+
+    def _scan(self, node, opt_params, path, facts, findings, seen):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            opt_params = frozenset(
+                p.arg for p in (*node.args.posonlyargs, *node.args.args,
+                                *node.args.kwonlyargs)
+                if is_optional_numeric_annotation(p.annotation))
+        for test in self._truthy_roots(node):
+            for expr in self._expand(test):
+                if id(expr) not in seen:  # BoolOp tests expand twice
+                    seen.add(id(expr))
+                    self._flag(expr, opt_params, path, facts, findings)
+        for child in ast.iter_child_nodes(node):
+            self._scan(child, opt_params, path, facts, findings, seen)
+
+    @staticmethod
+    def _truthy_roots(node):
+        if isinstance(node, (ast.If, ast.While)):
+            yield node.test
+        elif isinstance(node, ast.IfExp):
+            yield node.test
+        elif isinstance(node, ast.Assert):
+            yield node.test
+        elif isinstance(node, ast.comprehension):
+            yield from node.ifs
+        elif isinstance(node, ast.BoolOp):
+            yield from node.values
+        elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+            yield node.operand
+
+    @classmethod
+    def _expand(cls, expr):
+        """A truthiness context distributes over and/or/not."""
+        if isinstance(expr, ast.BoolOp):
+            for v in expr.values:
+                yield from cls._expand(v)
+        elif isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.Not):
+            yield from cls._expand(expr.operand)
+        else:
+            yield expr
+
+    def _flag(self, expr, opt_params, path, facts, findings):
+        if (isinstance(expr, ast.Attribute)
+                and expr.attr in facts.optional_numeric_fields):
+            findings.append(Finding(
+                self.name, path, expr.lineno, expr.col_offset,
+                f"truthiness test on Optional numeric field '{expr.attr}' "
+                f"treats 0 as unset; use `is not None`"))
+        elif isinstance(expr, ast.Name) and expr.id in opt_params:
+            findings.append(Finding(
+                self.name, path, expr.lineno, expr.col_offset,
+                f"truthiness test on Optional numeric parameter '{expr.id}' "
+                f"treats 0 as unset; use `is not None`"))
+
+
+# ---------------------------------------------------------------------------
+# use-after-donate
+# ---------------------------------------------------------------------------
+
+
+@register
+class UseAfterDonate(Rule):
+    """Reading a variable after passing it at a ``donate_argnums`` position:
+    the buffer is invalidated by the dispatch, so any later read of its
+    BYTES is a runtime error (or worse, a stale-aliased value on backends
+    that defer invalidation). Metadata reads (``.shape``, ``.is_deleted``)
+    stay legal and are exempt. Statement-ordered, branch-merged (a donate on
+    either side of an ``if`` poisons the join); rebinding the name (or its
+    root object) clears it."""
+
+    name = "use-after-donate"
+    help = "argument was donated to a jitted entry earlier in this function"
+
+    def check(self, path, tree, source, facts):
+        findings: List[Finding] = []
+        for fn in _functions(tree):
+            self._block(fn.body, {}, path, facts, findings)
+        return findings
+
+    # donated: dict dotted-path -> (callee, lineno)
+    def _block(self, stmts, donated, path, facts, findings):
+        for stmt in stmts:
+            self._stmt(stmt, donated, path, facts, findings)
+        return donated
+
+    def _stmt(self, stmt, donated, path, facts, findings):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested defs are checked as their own scope
+        if isinstance(stmt, ast.If):
+            self._expr(stmt.test, donated, path, facts, findings)
+            a = self._block(list(stmt.body), dict(donated), path, facts,
+                            findings)
+            b = self._block(list(stmt.orelse), dict(donated), path, facts,
+                            findings)
+            donated.clear()
+            donated.update({**a, **b})
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._expr(stmt.iter, donated, path, facts, findings)
+            self._clear(stmt.target, donated)
+            body = self._block(list(stmt.body) + list(stmt.orelse),
+                               dict(donated), path, facts, findings)
+            donated.update(body)
+            return
+        if isinstance(stmt, ast.While):
+            self._expr(stmt.test, donated, path, facts, findings)
+            body = self._block(list(stmt.body) + list(stmt.orelse),
+                               dict(donated), path, facts, findings)
+            donated.update(body)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr, donated, path, facts, findings)
+                if item.optional_vars is not None:
+                    self._clear(item.optional_vars, donated)
+            self._block(stmt.body, donated, path, facts, findings)
+            return
+        if isinstance(stmt, ast.Try):
+            for part in (stmt.body, *[h.body for h in stmt.handlers],
+                         stmt.orelse, stmt.finalbody):
+                merged = self._block(list(part), dict(donated), path, facts,
+                                     findings)
+                donated.update(merged)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._expr(stmt.value, donated, path, facts, findings)
+            for t in stmt.targets:
+                self._clear(t, donated)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._expr(stmt.value, donated, path, facts, findings)
+            self._expr(stmt.target, donated, path, facts, findings)
+            self._clear(stmt.target, donated)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._expr(stmt.value, donated, path, facts, findings)
+            self._clear(stmt.target, donated)
+            return
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self._clear(t, donated)
+            return
+        # Expr / Return / Raise / Assert / anything else: check + record
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._expr(child, donated, path, facts, findings)
+
+    def _expr(self, expr, donated, path, facts, findings):
+        """Flag loads of already-donated paths, THEN record new donations
+        (the donating call's own argument read is not a use-after)."""
+        self._check_loads(expr, None, donated, path, findings)
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._record_donation(node, donated, facts)
+
+    def _check_loads(self, node, parent, donated, path, findings):
+        if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(node, "ctx", None), ast.Load):
+            d = dotted_name(node)
+            if d in donated:
+                if not (isinstance(parent, ast.Attribute)
+                        and parent.attr in _METADATA_ATTRS):
+                    callee, line = donated[d]
+                    findings.append(Finding(
+                        self.name, path, node.lineno, node.col_offset,
+                        f"'{d}' was donated to {callee}() at line {line} "
+                        f"and read here; its buffer is invalidated"))
+                return  # don't descend: sub-names of a match are the match
+        for child in ast.iter_child_nodes(node):
+            self._check_loads(child, node, donated, path, findings)
+
+    def _record_donation(self, call: ast.Call, donated, facts):
+        seg = last_segment(call.func)
+        fn = facts.donating.get(seg or "")
+        if fn is None:
+            return
+        donated_params = {fn.params[i] for i in fn.donated
+                          if i < len(fn.params)}
+        for pos in fn.donated:
+            if pos < len(call.args):
+                d = dotted_name(call.args[pos])
+                if d:
+                    donated[d] = (seg, call.lineno)
+        for kw in call.keywords:
+            if kw.arg in donated_params:
+                d = dotted_name(kw.value)
+                if d:
+                    donated[d] = (seg, call.lineno)
+
+    def _clear(self, target, donated):
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._clear(e, donated)
+            return
+        if isinstance(target, ast.Starred):
+            self._clear(target.value, donated)
+            return
+        d = dotted_name(target)
+        if not d:
+            return
+        root = d.split(".", 1)[0]
+        for key in list(donated):
+            if key == d or key.startswith(d + ".") or key == root \
+                    or key.startswith(root + "."):
+                del donated[key]
+
+
+# ---------------------------------------------------------------------------
+# view-donation-alias
+# ---------------------------------------------------------------------------
+
+
+@register
+class ViewDonationAlias(Rule):
+    """A jnp slice can be a NO-OP VIEW of its base (a full-range slice
+    aliases the same buffer — the ``place_flat_on_mesh`` gotcha from PR 5).
+    Feeding such a value to ``jax.device_put`` (sharding placement) or a
+    ``donate_argnums`` position makes two live arrays share one buffer,
+    and donation dies or corrupts. ``asarray``/``reshape``/``ravel``/
+    ``astype`` propagate viewness; any computing op (concatenate,
+    arithmetic, ``jnp.array(..., copy=True)``) produces a fresh buffer and
+    clears it. Branch-merged: tainted on ANY path into the sink is
+    flagged."""
+
+    name = "view-donation-alias"
+    help = "possible no-op-view slice fed to device_put / a donated arg"
+
+    def check(self, path, tree, source, facts):
+        findings: List[Finding] = []
+        for fn in _functions(tree):
+            self._block(fn.body, set(), path, facts, findings)
+        return findings
+
+    def _block(self, stmts, tainted: Set[str], path, facts, findings):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.If):
+                a = self._block(list(stmt.body), set(tainted), path, facts,
+                                findings)
+                b = self._block(list(stmt.orelse), set(tainted), path, facts,
+                                findings)
+                tainted.clear()
+                tainted.update(a | b)
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                body = list(stmt.body) + list(stmt.orelse)
+                tainted.update(self._block(body, set(tainted), path, facts,
+                                           findings))
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._scan_sinks(item.context_expr, tainted, path, facts,
+                                     findings)
+                self._block(stmt.body, tainted, path, facts, findings)
+                continue
+            if isinstance(stmt, ast.Try):
+                for part in (stmt.body, *[h.body for h in stmt.handlers],
+                             stmt.orelse, stmt.finalbody):
+                    tainted.update(self._block(list(part), set(tainted),
+                                               path, facts, findings))
+                continue
+            self._scan_sinks(stmt, tainted, path, facts, findings)
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                name = stmt.targets[0].id
+                if self._is_view(stmt.value, tainted):
+                    tainted.add(name)
+                else:
+                    tainted.discard(name)
+        return tainted
+
+    def _is_view(self, expr, tainted) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Subscript):
+            if self._has_slice(expr.slice):
+                return True
+            return False
+        if isinstance(expr, ast.Call):
+            seg = last_segment(expr.func)
+            if seg in _VIEW_PROPAGATING:
+                if isinstance(expr.func, ast.Attribute):
+                    base = expr.func.value
+                    d = dotted_name(base)
+                    if d and d.split(".", 1)[0] in ("jnp", "np", "jax"):
+                        # jnp.asarray(x) / jnp.reshape(x, ...): first arg
+                        return bool(expr.args) and self._is_view(expr.args[0],
+                                                                 tainted)
+                    # x.reshape(...): method on a possibly-view base
+                    return self._is_view(base, tainted)
+                return bool(expr.args) and self._is_view(expr.args[0], tainted)
+        return False
+
+    @staticmethod
+    def _has_slice(node) -> bool:
+        if isinstance(node, ast.Slice):
+            return True
+        if isinstance(node, ast.Tuple):
+            return any(isinstance(e, ast.Slice) for e in node.elts)
+        return False
+
+    def _scan_sinks(self, stmt, tainted, path, facts, findings):
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            seg = last_segment(node.func)
+            if seg == "device_put" and node.args:
+                if self._is_view(node.args[0], tainted):
+                    findings.append(Finding(
+                        self.name, path, node.lineno, node.col_offset,
+                        "device_put of a possible no-op-view slice: the "
+                        "placed array may alias its base buffer; copy first "
+                        "(jnp.array(x, copy=True) or jnp.concatenate)"))
+                continue
+            fn = facts.donating.get(seg or "")
+            if fn is None:
+                continue
+            for pos in fn.donated:
+                if pos < len(node.args) and self._is_view(node.args[pos],
+                                                          tainted):
+                    findings.append(Finding(
+                        self.name, path, node.lineno, node.col_offset,
+                        f"donated argument {pos} of {seg}() may be a no-op-"
+                        f"view slice aliasing another live array; copy first"))
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-jit
+# ---------------------------------------------------------------------------
+
+
+def _jitted_defs(tree: ast.Module):
+    """FunctionDefs that become jitted: decorated with (a partial of)
+    ``jax.jit``, or passed by name to a ``jax.jit(...)`` call in this file."""
+    jitted_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and last_segment(node.func) == "jit" \
+                and node.args and isinstance(node.args[0], ast.Name):
+            jitted_names.add(node.args[0].id)
+    for fn in _functions(tree):
+        for dec in fn.decorator_list:
+            if last_segment(dec) == "jit":
+                yield fn
+                break
+            if isinstance(dec, ast.Call):
+                if last_segment(dec.func) == "jit":
+                    yield fn
+                    break
+                if last_segment(dec.func) == "partial" and dec.args \
+                        and last_segment(dec.args[0]) == "jit":
+                    yield fn
+                    break
+        else:
+            if fn.name in jitted_names:
+                yield fn
+
+
+@register
+class HostSyncInJit(Rule):
+    """``float()`` / ``np.asarray()`` / ``.item()`` inside a jit-traced
+    body: on a traced value these either crash at trace time or silently
+    constant-fold a stale concretization — either way the one-dispatch
+    contract is broken. Builtin casts are only flagged when their argument
+    involves a traced value (a parameter of the jitted function or a
+    ``jnp``/``jax`` call); static python-int shape math stays legal."""
+
+    name = "host-sync-in-jit"
+    help = "host-sync call inside a jit-compiled body"
+
+    def check(self, path, tree, source, facts):
+        findings: List[Finding] = []
+        for fn in _jitted_defs(tree):
+            params = set(_all_params(fn))
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._sync_call(node, params)
+                if msg:
+                    findings.append(Finding(
+                        self.name, path, node.lineno, node.col_offset,
+                        f"{msg} inside jitted body of '{fn.name}': forces a "
+                        f"host sync / breaks the single-dispatch contract"))
+        return findings
+
+    @staticmethod
+    def _sync_call(node: ast.Call, params: Set[str]) -> Optional[str]:
+        if isinstance(node.func, ast.Name) and node.func.id in _SYNC_BUILTINS:
+            if node.args and not _is_metadata_expr(node.args[0]) \
+                    and (_references_any(node.args[0], params)
+                         or _contains_device_call(node.args[0])):
+                return f"{node.func.id}() on a traced value"
+            return None
+        d = dotted_name(node.func)
+        if d and d.split(".", 1)[0] == "np" \
+                and d.rsplit(".", 1)[-1] in _NP_SYNC_FUNCS:
+            return f"{d}()"
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS and not node.args:
+            return f".{node.func.attr}()"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-loop
+# ---------------------------------------------------------------------------
+
+
+@register
+class HostSyncInLoop(Rule):
+    """A per-iteration device->host sync (``float(jnp...)``,
+    ``np.asarray(device_var)``, ``.item()``) inside a loop or comprehension:
+    each iteration blocks on the device queue, serializing a hot path that
+    should stay async. The sim engines pay ONE sync per run for exactly this
+    reason (``hidden_drift`` at finalize). Flagged only when the synced
+    expression provably touches device values — a ``jnp``/``jax`` call in
+    the argument, or a variable assigned from one (incl. names bound to
+    ``jax.jit(...)`` results)."""
+
+    name = "host-sync-in-loop"
+    help = "per-iteration host sync in a loop; batch it to one sync"
+
+    def check(self, path, tree, source, facts):
+        findings: List[Finding] = []
+        jit_bound = {
+            t.id for node in ast.walk(tree)
+            if isinstance(node, ast.Assign) and len(node.targets) == 1
+            and isinstance((t := node.targets[0]), ast.Name)
+            and isinstance(node.value, ast.Call)
+            and last_segment(node.value.func) == "jit"}
+        for fn in _functions(tree):
+            device_vars = self._device_vars(fn, jit_bound)
+            self._walk(fn, False, device_vars, path, findings)
+        # module-level loops (examples are scripts)
+        module_vars = self._device_vars(tree, jit_bound)
+        self._walk(tree, False, module_vars, path, findings,
+                   skip_functions=True)
+        return findings
+
+    @staticmethod
+    def _device_vars(scope, jit_bound: Set[str]) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(scope):
+            if not (isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call)):
+                continue
+            call = node.value
+            d = dotted_name(call.func)
+            is_device = (d and d.split(".", 1)[0] in ("jnp", "jax")) or (
+                isinstance(call.func, ast.Name) and call.func.id in jit_bound)
+            if not is_device:
+                continue
+            for t in node.targets:
+                targets = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                    else [t]
+                out.update(e.id for e in targets if isinstance(e, ast.Name))
+        return out
+
+    def _walk(self, node, in_loop, device_vars, path, findings,
+              skip_functions=False):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                if skip_functions:
+                    continue
+                # nested scope: handled by its own _device_vars pass
+                continue
+            child_in_loop = in_loop or isinstance(
+                child, (ast.For, ast.AsyncFor, ast.While, ast.ListComp,
+                        ast.SetComp, ast.DictComp, ast.GeneratorExp))
+            if in_loop and isinstance(child, ast.Call):
+                msg = self._sync_call(child, device_vars)
+                if msg:
+                    findings.append(Finding(
+                        self.name, path, child.lineno, child.col_offset,
+                        f"{msg} inside a loop: one device->host sync per "
+                        f"iteration; hoist to a single batched sync"))
+            self._walk(child, child_in_loop, device_vars, path, findings,
+                       skip_functions=skip_functions)
+
+    @staticmethod
+    def _touches_device(expr, device_vars: Set[str]) -> bool:
+        if _is_metadata_expr(expr):
+            return False
+        return (_contains_device_call(expr)
+                or _references_any(expr, device_vars))
+
+    def _sync_call(self, node: ast.Call, device_vars) -> Optional[str]:
+        if isinstance(node.func, ast.Name) and node.func.id in _SYNC_BUILTINS:
+            if node.args and self._touches_device(node.args[0], device_vars):
+                return f"{node.func.id}() on a device value"
+            return None
+        d = dotted_name(node.func)
+        if d and d.split(".", 1)[0] == "np" \
+                and d.rsplit(".", 1)[-1] in _NP_SYNC_FUNCS:
+            if node.args and self._touches_device(node.args[0], device_vars):
+                return f"{d}() on a device value"
+            return None
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS and not node.args:
+            if self._touches_device(node.func.value, device_vars):
+                return f".{node.func.attr}() on a device value"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# unhashable-static-arg
+# ---------------------------------------------------------------------------
+
+
+@register
+class UnhashableStaticArg(Rule):
+    """Arguments to an ``lru_cache``-d jit factory must be hashable AND
+    long-lived: a list/dict raises TypeError, and a lambda /
+    ``functools.partial`` / fresh array constructed at the call site hashes
+    by identity — every call is a cache miss, so every call RETRACES the
+    jit it was supposed to cache (the ``_cohort_step_fn`` hazard)."""
+
+    name = "unhashable-static-arg"
+    help = "unhashable or freshly-constructed arg to an lru-cached jit cache"
+
+    def check(self, path, tree, source, facts):
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            seg = last_segment(node.func)
+            if seg not in facts.lru_cached:
+                continue
+            for arg in (*node.args, *[kw.value for kw in node.keywords]):
+                why = self._bad_arg(arg)
+                if why:
+                    findings.append(Finding(
+                        self.name, path, arg.lineno, arg.col_offset,
+                        f"{why} passed to lru-cached '{seg}': unhashable or "
+                        f"identity-hashed => cache miss and a retrace per "
+                        f"call"))
+        return findings
+
+    @staticmethod
+    def _bad_arg(arg) -> Optional[str]:
+        if isinstance(arg, ast.Lambda):
+            return "a lambda (fresh object per evaluation)"
+        if isinstance(arg, (ast.List, ast.Set, ast.Dict)):
+            return "a list/set/dict literal"
+        if isinstance(arg, (ast.ListComp, ast.SetComp, ast.DictComp,
+                            ast.GeneratorExp)):
+            return "a comprehension"
+        if isinstance(arg, ast.Call):
+            seg = last_segment(arg.func)
+            if seg == "partial":
+                return "a functools.partial (fresh object per call)"
+            d = dotted_name(arg.func)
+            if d and d.split(".", 1)[0] in ("jnp", "np"):
+                return f"an array constructor ({d})"
+        return None
+
+
+def iter_rules(names: Optional[Sequence[str]] = None):
+    if names is None:
+        return list(RULES.values())
+    unknown = set(names) - set(RULES)
+    if unknown:
+        raise KeyError(f"unknown rule(s): {sorted(unknown)}; "
+                       f"known: {sorted(RULES)}")
+    return [RULES[n] for n in names]

@@ -1,0 +1,126 @@
+"""trace_guard: the single-dispatch assertion as a reusable context manager.
+
+Generalizes the hand-rolled plumbing tests used to pin the one-dispatch
+contract (snapshot ``ops.SERVER_FLUSH_TRACES``, monkeypatch the fused entry
+and every base kernel entry, gate an ``in_receive`` flag around the server
+path): one guard wraps the fused entry points of ``repro.kernels.ops`` and
+counts
+
+* ``calls``      — python-level calls into the guarded fused entry,
+* ``retraces``   — (re)traces of its jitted body (the module trace counter),
+* ``other_calls``— calls into any OTHER base kernel entry made inside an
+                   ``exclusive()`` window (the path that must be ONE
+                   dispatch: ``receive`` for the flush, cohort admission
+                   for the client step).
+
+On exit the guard restores the patched entries and, when ``retraces`` was
+given, raises ``TraceGuardError`` if the observed retrace count differs —
+so both tests and the compiled-contract pass share one enforcement point.
+
+    with trace_guard("server_flush", retraces=0) as g:
+        for ...:
+            msg, _ = algo.run_client(batches, k)
+            with g.exclusive():
+                algo.receive(msg, k2)
+    assert g.calls == n_flushes and g.other_calls == 0
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Tuple
+
+# fused entry group -> (entry attrs on kernels.ops, trace counter attr)
+ENTRIES: Dict[str, Tuple[Tuple[str, ...], str]] = {
+    "server_flush": (("server_flush_step", "server_flush_step_sharded"),
+                     "SERVER_FLUSH_TRACES"),
+    "cohort_step": (("cohort_train_encode_step",), "COHORT_STEP_TRACES"),
+}
+
+
+class TraceGuardError(AssertionError):
+    """The guarded entry violated its single-dispatch contract."""
+
+
+class TraceGuard:
+    def __init__(self, entry: str, *, retraces: Optional[int] = 0):
+        if entry not in ENTRIES:
+            raise KeyError(f"unknown entry {entry!r}; known: {sorted(ENTRIES)}")
+        self.entry = entry
+        self.expected_retraces = retraces
+        self.calls = 0
+        self.other_calls = 0
+        self._exclusive = False
+        self._in_entry = 0
+        self._saved: Dict[str, object] = {}
+        self._counter_start = 0
+
+    # -- counters ---------------------------------------------------------
+    @property
+    def retraces(self) -> int:
+        from repro.kernels import ops as kops
+        _, counter = ENTRIES[self.entry]
+        return getattr(kops, counter) - self._counter_start
+
+    @contextlib.contextmanager
+    def exclusive(self):
+        """The window in which NO base kernel entry may be dispatched —
+        anything but the guarded fused entry in here is an extra dispatch
+        on the one-dispatch path."""
+        prev, self._exclusive = self._exclusive, True
+        try:
+            yield self
+        finally:
+            self._exclusive = prev
+
+    # -- patching ---------------------------------------------------------
+    def __enter__(self) -> "TraceGuard":
+        from repro.kernels import ops as kops
+        entry_names, counter = ENTRIES[self.entry]
+        self._counter_start = getattr(kops, counter)
+
+        def counting(real):
+            def wrapper(*a, **kw):
+                self.calls += 1
+                self._in_entry += 1
+                try:
+                    return real(*a, **kw)
+                finally:
+                    self._in_entry -= 1
+            return wrapper
+
+        def forbidding(real):
+            def wrapper(*a, **kw):
+                # base kernel calls made WHILE the guarded entry executes are
+                # its own body being traced inline (nested jit) — not an
+                # extra dispatch on the guarded path
+                if self._exclusive and not self._in_entry:
+                    self.other_calls += 1
+                return real(*a, **kw)
+            return wrapper
+
+        for name in entry_names:
+            self._saved[name] = getattr(kops, name)
+            setattr(kops, name, counting(self._saved[name]))
+        for name in kops.KERNEL_ENTRY_POINTS:
+            if name in entry_names:
+                continue
+            self._saved[name] = getattr(kops, name)
+            setattr(kops, name, forbidding(self._saved[name]))
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        from repro.kernels import ops as kops
+        for name, real in self._saved.items():
+            setattr(kops, name, real)
+        self._saved.clear()
+        if exc_type is None and self.expected_retraces is not None \
+                and self.retraces != self.expected_retraces:
+            raise TraceGuardError(
+                f"{self.entry}: expected {self.expected_retraces} "
+                f"(re)trace(s) in this window, observed {self.retraces} — "
+                f"the fused entry is being re-traced (static-arg churn or a "
+                f"cache-key leak)")
+
+
+def trace_guard(entry: str, *, retraces: Optional[int] = 0) -> TraceGuard:
+    return TraceGuard(entry, retraces=retraces)

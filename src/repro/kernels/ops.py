@@ -416,3 +416,71 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
         out_specs=(vec, vec, vec, payload_specs), check_vma=False)
     return sm(x_flat, hidden_flat, momentum_flat, stack, norms, weights,
               extra, key2d, flag)
+
+
+# ---------------------------------------------------------------------------
+# Compiled contracts: the invariants flcheck machine-checks per entry
+# ---------------------------------------------------------------------------
+
+# The base (non-fused) kernel entry points. On the fused paths these must
+# NEVER be python-dispatched — the whole flush / cohort step is one call
+# into one compiled executable. analysis_static.trace_guard patches exactly
+# this list to enforce it.
+KERNEL_ENTRY_POINTS = ("qsgd_quantize", "qsgd_quantize_batch",
+                       "qsgd_dequantize", "buffer_aggregate")
+
+
+def _flush_boundaries(*, sbits, beta, **_) -> int:
+    """hard_boundary call sites traced into one flush dispatch:
+    the server-update products (lr*m always, beta*m with momentum — see
+    ``core.qafel.server_apply_flat``), the broadcast diff, and for a qsgd
+    broadcast the packed wire pair + the decoded hidden increment."""
+    return 2 + (1 if beta is not None else 0) + (2 if sbits is not None else 0)
+
+
+def _cohort_boundaries(**_) -> int:
+    """One boundary on the client path: the flat delta stack between the
+    local-SGD scan and the encode's norm math (``client_update_flat``).
+    The in-jit unflatten needs none — slices are exact data movement."""
+    return 1
+
+
+# Declarative contracts over the fused entries, consumed by
+# ``repro.analysis_static.contracts`` (the compiled-HLO pass):
+#
+# * ``donate``      — positional indices that MUST establish input->output
+#   aliasing in the compiled module (the in-place state update). An entry
+#   with ``donate=()`` must establish NONE: the cohort step's hidden_flat
+#   is read again by every later tier-group in the same window, so aliasing
+#   it would corrupt the cohort path.
+# * ``unused_without_momentum`` — donated args pruned from the compiled
+#   module when ``beta is None`` (jit's keep_unused=False drops them, and a
+#   pruned param cannot alias).
+# * ``min_hard_boundaries(**cfg)`` — lower bound on ``conditional`` ops the
+#   compiled module must retain: each ``hard_boundary`` is one lax.cond,
+#   and a vanished conditional means XLA is free to FMA-contract across
+#   what used to be an eager dispatch boundary (bit-exactness dies).
+# * ``trace_counter`` — the module global counting (re)traces of the entry.
+CONTRACTS = {
+    "server_flush_step": {
+        "donate": (0, 1, 2),
+        "donated_args": ("x_flat", "hidden_flat", "momentum_flat"),
+        "unused_without_momentum": (2,),
+        "min_hard_boundaries": _flush_boundaries,
+        "trace_counter": "SERVER_FLUSH_TRACES",
+    },
+    "server_flush_step_sharded": {
+        "donate": (0, 1, 2),
+        "donated_args": ("x_flat", "hidden_flat", "momentum_flat"),
+        "unused_without_momentum": (2,),
+        "min_hard_boundaries": _flush_boundaries,
+        "trace_counter": "SERVER_FLUSH_TRACES",
+    },
+    "cohort_train_encode_step": {
+        "donate": (),
+        "donated_args": (),
+        "unused_without_momentum": (),
+        "min_hard_boundaries": _cohort_boundaries,
+        "trace_counter": "COHORT_STEP_TRACES",
+    },
+}

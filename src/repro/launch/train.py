@@ -83,6 +83,8 @@ def main() -> None:
             key = jax.random.PRNGKey(args.seed * 100_003 + step)
             state, metrics = step_fn(state, sample_round_batch(), weights, key)
             if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+                # gated progress sync: ~10 per run, deliberate
+                # flcheck: ignore[host-sync-in-loop]
                 print(f"round {step:4d} loss={float(metrics['loss']):.4f} "
                       f"t={time.time() - t0:.1f}s", flush=True)
         if args.checkpoint_dir:

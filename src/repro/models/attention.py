@@ -164,7 +164,7 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
                     window: Optional[int] = None, dtype=None):
     """Per-layer cache. With a window it is a ring buffer of size `window`."""
     dtype = dtype or cfg.act_dtype
-    w = min(window, max_len) if window else max_len
+    w = min(window, max_len) if window is not None else max_len
     kv, hd = cfg.n_kv_heads, cfg.hd
     return {
         "k": jnp.zeros((batch, w, kv, hd), dtype),
@@ -197,7 +197,7 @@ def attention_decode(cfg: ModelConfig, params, x, cache, pos, *,
     q, k, v = _project_qkv(cfg, params, x, positions)
 
     w = cache["k"].shape[1]
-    slot = (pos % w).astype(jnp.int32) if window else jnp.minimum(pos, w - 1).astype(jnp.int32)
+    slot = (pos % w).astype(jnp.int32) if window is not None else jnp.minimum(pos, w - 1).astype(jnp.int32)
     cache = dict(cache)
     cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
     cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))

@@ -96,7 +96,7 @@ def mla_train(cfg: ModelConfig, params, x, positions, *,
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                    window: Optional[int] = None, dtype=None):
     dtype = dtype or cfg.act_dtype
-    w = min(window, max_len) if window else max_len
+    w = min(window, max_len) if window is not None else max_len
     return {
         "ckv": jnp.zeros((batch, w, cfg.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, w, cfg.qk_rope_head_dim), dtype),
@@ -128,7 +128,7 @@ def mla_decode(cfg: ModelConfig, params, x, cache, pos, *,
     ckv_t, k_rope_t = _latents(cfg, params, x, positions)  # (B,1,kr), (B,1,dr)
 
     w = cache["ckv"].shape[1]
-    slot = (pos % w).astype(jnp.int32) if window else jnp.minimum(pos, w - 1).astype(jnp.int32)
+    slot = (pos % w).astype(jnp.int32) if window is not None else jnp.minimum(pos, w - 1).astype(jnp.int32)
     cache = dict(cache)
     cache["ckv"] = jax.lax.dynamic_update_slice(
         cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, slot, 0))

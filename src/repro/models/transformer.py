@@ -74,7 +74,9 @@ def _init_attn_block(key, cfg: ModelConfig, *, moe: bool, d_ff: Optional[int] = 
     if moe:
         p["moe"] = moe_lib.init_moe(k2, cfg)
     else:
-        p["mlp"] = init_gated_mlp(k2, cfg.d_model, d_ff or cfg.d_ff, cfg.p_dtype)
+        p["mlp"] = init_gated_mlp(k2, cfg.d_model,
+                                  d_ff if d_ff is not None else cfg.d_ff,
+                                  cfg.p_dtype)
     return p
 
 
@@ -326,7 +328,7 @@ def loss_fn(cfg: ModelConfig, params, batch, *, window_override: Optional[int] =
 def _ring_write(arrays: Dict[str, jnp.ndarray], s: int, max_len: int,
                 window: Optional[int], dtype):
     """Write full-sequence tensors (B, S, ...) into a (ring) cache of width w."""
-    w = min(window, max_len) if window else max_len
+    w = min(window, max_len) if window is not None else max_len
     wk = min(s, w)
     idxs = jnp.arange(s - wk, s, dtype=jnp.int32)
     slots = idxs % w
@@ -377,7 +379,7 @@ def prefill(cfg: ModelConfig, params, inputs, *, max_len: Optional[int] = None,
     """
     h = _embed_inputs(cfg, params, inputs)
     b, s, _ = h.shape
-    max_len = max_len or s
+    max_len = max_len if max_len is not None else s
     positions = jnp.arange(s, dtype=jnp.int32)
     aux0 = jnp.zeros((), jnp.float32)
 
@@ -471,7 +473,9 @@ def _decode_sublayer(cfg: ModelConfig, kind: str, p, h, cache_slice, pos,
     if "moe" in p:
         # decode capacity: no-drop (n_experts/top_k) unless the config sets a
         # realistic serving factor
-        dcf = cfg.decode_capacity_factor or (cfg.n_experts / cfg.experts_per_token)
+        dcf = (cfg.decode_capacity_factor
+               if cfg.decode_capacity_factor is not None
+               else cfg.n_experts / cfg.experts_per_token)
         f, _ = _moe_apply(cfg, p["moe"], f_in, dcf)
     else:
         f = gated_mlp(p["mlp"], f_in, cfg.mlp_act)

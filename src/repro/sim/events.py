@@ -105,7 +105,10 @@ class BaseAsyncSimulator:
 
     def verify_replicas(self) -> bool:
         h = _hidden_wire(self.algo.state)
-        return all(bool(jnp.array_equal(rep, h)) for rep in self.replicas)
+        if not self.replicas:
+            return True
+        eqs = jnp.stack([jnp.array_equal(rep, h) for rep in self.replicas])
+        return bool(jnp.all(eqs))  # one host sync for all replicas
 
     def _apply_broadcast(self, bmsg, now: float, uploads: int,
                          accuracy_trace: List[tuple]) -> bool:

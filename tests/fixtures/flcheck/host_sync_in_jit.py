@@ -1,0 +1,12 @@
+"""Violates host-sync-in-jit: ``float()`` on a traced value inside a
+jitted body — it either crashes at trace time (ConcretizationTypeError)
+or silently constant-folds a stale value into the compiled program.
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scaled_loss(params, batch):
+    scale = float(jnp.mean(batch))  # BAD: host sync inside the traced body
+    return scale * jnp.mean((params - batch) ** 2)

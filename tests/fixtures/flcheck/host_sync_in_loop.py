@@ -1,0 +1,12 @@
+"""Violates host-sync-in-loop: one device->host sync per loop iteration.
+Each ``float()`` blocks on the device queue; the reduction belongs on
+device with ONE sync at the end.
+"""
+import jax.numpy as jnp
+
+
+def total_drift(leaves):
+    total = 0.0
+    for leaf in leaves:
+        total += float(jnp.abs(leaf).sum())  # BAD: per-iteration sync
+    return total

@@ -1,0 +1,18 @@
+"""Violates truthy-optional-guard: truthiness on an Optional numeric field.
+
+The target_accuracy=0.0 bug class: 0 is a legal value, None is the
+sentinel, and ``if cfg.target_accuracy:`` conflates them.
+"""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StopConfig:
+    target_accuracy: Optional[float] = None
+
+
+def should_stop(cfg: StopConfig, acc: float) -> bool:
+    if cfg.target_accuracy:  # BAD: target_accuracy=0.0 reads as "unset"
+        return acc >= cfg.target_accuracy
+    return False

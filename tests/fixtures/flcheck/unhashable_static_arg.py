@@ -1,0 +1,16 @@
+"""Violates unhashable-static-arg: passing a fresh lambda into an
+lru_cache'd jit factory. Every call site builds a new closure object, so
+the cache never hits and every step re-traces and re-compiles.
+"""
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=8)
+def make_step(loss_fn, lr):
+    return jax.jit(lambda p, b: p - lr * jax.grad(loss_fn)(p, b))
+
+
+def train_step(p, b):
+    return make_step(lambda pp, bb: ((pp - bb) ** 2).mean(), 0.1)(p, b)  # BAD

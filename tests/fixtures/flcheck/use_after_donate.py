@@ -1,0 +1,17 @@
+"""Violates use-after-donate: reading a buffer after passing it to a
+donating jit. The donated buffer is deleted by the dispatch; the read
+raises at runtime (or worse, observes reused memory under some backends).
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def apply_update(state, delta):
+    return state + delta
+
+
+def step(state, delta):
+    new_state = apply_update(state, delta)
+    return new_state, state.sum()  # BAD: state's buffer was donated above

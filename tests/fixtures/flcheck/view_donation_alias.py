@@ -1,0 +1,18 @@
+"""Violates view-donation-alias: feeding a slice view of a live buffer
+into a donating entry. Donation frees the underlying buffer, so the
+caller's retained array aliases freed memory — the place/donate paths must
+copy (``jnp.array(x, copy=True)``) before handing over ownership.
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def flush(x_flat, delta):
+    return x_flat + delta
+
+
+def bad_flush(buf, delta, n):
+    view = buf.reshape(-1)[:n]  # a view of the caller's buffer
+    return flush(view, delta)   # BAD: donates memory `buf` still owns

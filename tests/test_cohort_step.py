@@ -189,58 +189,39 @@ def build_sim(loss_fn, engine="cohort", cohort_size=4, scenario="identity",
                                   scenario=scenario, cohort_size=cohort_size)
 
 
-def test_cohort_client_path_is_one_compiled_dispatch(monkeypatch):
+def test_cohort_client_path_is_one_compiled_dispatch():
     """Across a multi-cohort run: exactly ONE (re)trace of the fused step
     and ZERO python-level calls into any other kernel entry point on the
-    client path — the whole cohort pipeline is one compiled executable."""
+    client path — the whole cohort pipeline is one compiled executable.
+    Enforced via the shared ``trace_guard`` (the same machinery the flcheck
+    compiled pass runs in CI)."""
+    from repro.analysis_static import trace_guard
+
     def loss_fn(params, batch, key):  # fresh fn => fresh jit-cache entry
         del key
         return jnp.sum((params["w"] - batch["target"]) ** 2)
 
-    traces_start = kops.COHORT_STEP_TRACES
-    build_sim(loss_fn, max_uploads=8).run()  # warm: compile step + flush
-    # the whole multi-cohort warm run compiled the client step exactly ONCE
-    assert kops.COHORT_STEP_TRACES == traces_start + 1
-    traces_before = kops.COHORT_STEP_TRACES
-    calls = {"other_kernel": 0, "step": 0}
+    # the whole multi-cohort warm run compiles the client step exactly ONCE
+    with trace_guard("cohort_step", retraces=1):
+        build_sim(loss_fn, max_uploads=8).run()
 
-    real_step = kops.cohort_train_encode_step
+    with trace_guard("cohort_step", retraces=0) as g:  # zero re-traces
+        sim = build_sim(loss_fn, max_uploads=16, seed=1)
+        real_admit = sim._admit_cohort
 
-    def counting_step(*a, **kw):
-        calls["step"] += 1
-        return real_step(*a, **kw)
+        # any other kernel entry used while admitting (training + encoding)
+        # a cohort would be an extra client-path dispatch; the per-flush
+        # broadcast decode (Algorithm 3's replica apply, outside admission)
+        # stays allowed
+        def tracked_admit(*a, **kw):
+            with g.exclusive():
+                return real_admit(*a, **kw)
 
-    # any other kernel entry used while admitting (training + encoding) a
-    # cohort would be an extra client-path dispatch; the per-flush broadcast
-    # decode (Algorithm 3's replica apply, outside admission) stays allowed
-    in_admit = {"on": False}
-    monkeypatch.setattr(kops, "cohort_train_encode_step", counting_step)
-    for name in ("qsgd_quantize", "qsgd_quantize_batch", "qsgd_dequantize",
-                 "buffer_aggregate"):
-        def make(real):
-            def wrapper(*a, **kw):
-                if in_admit["on"]:
-                    calls["other_kernel"] += 1
-                return real(*a, **kw)
-            return wrapper
-        monkeypatch.setattr(kops, name, make(getattr(kops, name)))
-
-    sim = build_sim(loss_fn, max_uploads=16, seed=1)
-    real_admit = sim._admit_cohort
-
-    def tracked_admit(*a, **kw):
-        in_admit["on"] = True
-        try:
-            return real_admit(*a, **kw)
-        finally:
-            in_admit["on"] = False
-
-    sim._admit_cohort = tracked_admit
-    res = sim.run()
+        sim._admit_cohort = tracked_admit
+        res = sim.run()
     assert res.uploads == 16
-    assert calls["step"] >= 4  # several cohorts actually ran
-    assert calls["other_kernel"] == 0  # nothing else on the client path
-    assert kops.COHORT_STEP_TRACES == traces_before  # zero re-traces
+    assert g.calls >= 4  # several cohorts actually ran
+    assert g.other_calls == 0  # nothing else on the client path
 
 
 def test_tier_groups_share_jit_cache_across_membership_churn():
@@ -252,19 +233,19 @@ def test_tier_groups_share_jit_cache_across_membership_churn():
         del key
         return jnp.sum((params["w"] - batch["target"]) ** 2)
 
+    from repro.analysis_static import trace_guard
+
     scenario = ScenarioConfig(tiers=((0.45, "qsgd2"),))
-    traces_before = kops.COHORT_STEP_TRACES
-    sim = build_sim(loss_fn, cohort_size=5, scenario=scenario,
-                    max_uploads=30, seed=2)
-    res = sim.run()
-    assert res.uploads == 30
     # the tier draw at p=0.45 over ~6+ cohorts of 5 sweeps group sizes
     # 0..5; the only traces are one per spec (default qsgd4 + tier qsgd2)
-    assert kops.COHORT_STEP_TRACES - traces_before == 2
+    with trace_guard("cohort_step", retraces=2):
+        res = build_sim(loss_fn, cohort_size=5, scenario=scenario,
+                        max_uploads=30, seed=2).run()
+    assert res.uploads == 30
     # a second engine instance re-uses both cache entries outright
-    build_sim(loss_fn, cohort_size=5, scenario=scenario,
-              max_uploads=10, seed=3).run()
-    assert kops.COHORT_STEP_TRACES - traces_before == 2
+    with trace_guard("cohort_step", retraces=0):
+        build_sim(loss_fn, cohort_size=5, scenario=scenario,
+                  max_uploads=10, seed=3).run()
 
 
 # ---------------------------------------------------------------------------

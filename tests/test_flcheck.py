@@ -1,0 +1,290 @@
+"""flcheck: fixtures must be flagged, the real tree must be clean, and the
+satellite fixes this PR landed must stay fixed.
+
+Layout:
+* rule positive controls — each ``tests/fixtures/flcheck`` snippet trips
+  exactly its own rule;
+* clean-tree gate — zero findings over ``src``/``benchmarks``/``examples``;
+* suppression + false-positive pins (metadata ``.size`` reads, gated
+  progress prints);
+* trace_guard mechanics (counts, exclusivity, retrace detection);
+* regression pins for the lint fixes (Optional ``is not None`` guards in
+  the models, single-sync replica verification, device-reduced drift);
+* slow: the compiled-contract pass end-to-end at ndev=1.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis_static.findings import (Finding, is_suppressed,
+                                            parse_json, render_json,
+                                            suppressions_for)
+from repro.analysis_static.lint import DEFAULT_PATHS, run_lint
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXDIR = os.path.join(REPO, "tests", "fixtures", "flcheck")
+TREE_PATHS = [os.path.join(REPO, p) for p in DEFAULT_PATHS]
+
+CASES = {
+    "truthy_optional_guard.py": "truthy-optional-guard",
+    "use_after_donate.py": "use-after-donate",
+    "view_donation_alias.py": "view-donation-alias",
+    "host_sync_in_jit.py": "host-sync-in-jit",
+    "host_sync_in_loop.py": "host-sync-in-loop",
+    "unhashable_static_arg.py": "unhashable-static-arg",
+}
+
+
+# ---------------------------------------------------------------------------
+# rule positive controls
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fname,rule", sorted(CASES.items()))
+def test_fixture_trips_exactly_its_rule(fname, rule):
+    res = run_lint([os.path.join(FIXDIR, fname)])
+    assert [f.rule for f in res.findings] == [rule], res.findings
+
+
+def test_real_tree_is_clean():
+    res = run_lint(TREE_PATHS)
+    assert res.findings == [], "\n".join(
+        f"{f.location()}: [{f.rule}] {f.message}" for f in res.findings)
+    assert res.checked_files > 50  # the scan actually covered the tree
+    assert res.suppressed >= 2  # the justified progress-print waivers
+
+
+def test_cli_exits_nonzero_on_fixture_and_emits_json():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis_static.flcheck",
+         "--pass", "ast", "--format", "json", FIXDIR],
+        env=env, capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stderr
+    found = parse_json(proc.stdout)
+    assert sorted({f.rule for f in found}) == sorted(set(CASES.values()))
+
+
+# ---------------------------------------------------------------------------
+# suppressions and pinned non-findings
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_trailing_and_standalone():
+    src = ("x = 1  # flcheck: ignore[some-rule]\n"
+           "# flcheck: ignore[other-rule]\n"
+           "y = 2\n"
+           "z = 3  # flcheck: ignore\n")
+    marks = suppressions_for(src)
+    assert is_suppressed(Finding("some-rule", "f.py", 1, 0, ""), marks)
+    assert not is_suppressed(Finding("other", "f.py", 1, 0, ""), marks)
+    # standalone comment covers the NEXT line
+    assert is_suppressed(Finding("other-rule", "f.py", 3, 0, ""), marks)
+    # bare ignore waives every rule
+    assert is_suppressed(Finding("anything", "f.py", 4, 0, ""), marks)
+
+
+def test_metadata_size_read_in_loop_is_not_flagged(tmp_path):
+    # the TreeLayout.of pattern: int() of .size/.shape metadata never syncs
+    p = tmp_path / "layout.py"
+    p.write_text(
+        "import jax.numpy as jnp\n"
+        "def layout_of(leaves):\n"
+        "    sizes = tuple(int(jnp.asarray(x).size) for x in leaves)\n"
+        "    rows = [int(jnp.asarray(x).shape[0]) for x in leaves]\n"
+        "    return sizes, rows\n")
+    res = run_lint([str(p)])
+    assert res.findings == [], res.findings
+
+
+def test_float_of_device_value_in_comprehension_is_flagged(tmp_path):
+    p = tmp_path / "drift.py"
+    p.write_text(
+        "import jax.numpy as jnp\n"
+        "def drift(leaves):\n"
+        "    return sum(float(jnp.abs(x).sum()) for x in leaves)\n")
+    res = run_lint([str(p)])
+    assert [f.rule for f in res.findings] == ["host-sync-in-loop"]
+
+
+def test_is_not_none_guard_is_not_flagged(tmp_path):
+    p = tmp_path / "cfgmod.py"
+    p.write_text(
+        "import dataclasses\n"
+        "from typing import Optional\n"
+        "@dataclasses.dataclass\n"
+        "class C:\n"
+        "    window: Optional[int] = None\n"
+        "def pick(c: C, m: int) -> int:\n"
+        "    return min(c.window, m) if c.window is not None else m\n")
+    res = run_lint([str(p)])
+    assert res.findings == [], res.findings
+
+
+# ---------------------------------------------------------------------------
+# trace_guard mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_trace_guard_counts_and_exclusive_window():
+    import jax.numpy as jnp
+
+    from repro.analysis_static.trace_guard import trace_guard
+    from repro.kernels import ops as kops
+
+    x = jnp.linspace(-1.0, 1.0, 256)
+    key2d = jnp.zeros((1, 2), jnp.uint32)
+    with trace_guard("server_flush", retraces=None) as g:
+        # outside the exclusive window: base kernels are free
+        kops.qsgd_quantize_batch(x[None], key2d, 4)
+        assert g.other_calls == 0
+        with g.exclusive():
+            kops.qsgd_quantize_batch(x[None], key2d, 4)
+        assert g.other_calls == 1
+    # patched entries restored
+    assert kops.qsgd_quantize_batch.__name__ != "wrapper"
+
+
+def test_trace_guard_raises_on_unexpected_retrace():
+    import jax.numpy as jnp
+
+    from repro.analysis_static.trace_guard import (TraceGuardError,
+                                                   trace_guard)
+    from repro.kernels import ops as kops
+
+    with pytest.raises(TraceGuardError):
+        with trace_guard("server_flush", retraces=0):
+            kops.SERVER_FLUSH_TRACES += 1  # simulate a surprise retrace
+    # counter bumps inside the window are fine when they are expected
+    with trace_guard("server_flush", retraces=2):
+        kops.SERVER_FLUSH_TRACES += 2
+    del jnp
+
+
+# ---------------------------------------------------------------------------
+# regression pins for the lint fixes landed with this PR
+# ---------------------------------------------------------------------------
+
+
+def test_attn_cache_window_none_vs_explicit():
+    # fixed: `if window:` -> `if window is not None:` — None means full
+    # max_len, an explicit window means exactly that window
+    from repro.configs import get_reduced
+    from repro.models import attention as attn_lib
+
+    cfg = get_reduced("gemma2-2b")
+    full = attn_lib.init_attn_cache(cfg, 1, 16, window=None)
+    ringed = attn_lib.init_attn_cache(cfg, 1, 16, window=4)
+    assert full["k"].shape[1] == 16
+    assert ringed["k"].shape[1] == 4
+
+
+def test_ring_write_window_none_uses_max_len():
+    import jax.numpy as jnp
+
+    from repro.models.transformer import _ring_write
+
+    arrays = {"k": jnp.arange(8.0).reshape(1, 8, 1)}
+    out_full = _ring_write(arrays, 8, 8, None, jnp.float32)
+    out_ring = _ring_write(arrays, 8, 8, 4, jnp.float32)
+    assert out_full["k"].shape[1] == 8
+    assert out_ring["k"].shape[1] == 4
+
+
+def test_verify_replicas_single_sync_semantics():
+    import jax.numpy as jnp
+
+    from repro.core.qafel import QAFeL, QAFeLConfig
+    from repro.sim.events import BaseAsyncSimulator, SimConfig
+
+    def loss(params, batch, key):
+        del key
+        return jnp.mean((params["w"] - batch["target"]) ** 2)
+
+    qcfg = QAFeLConfig(client_lr=0.1, buffer_size=2, local_steps=1,
+                       client_quantizer="qsgd4", server_quantizer="qsgd4")
+    algo = QAFeL(qcfg, loss, {"w": jnp.zeros((256,))})
+    sim = BaseAsyncSimulator(
+        algo, SimConfig(max_uploads=4, seed=0, track_hidden_replicas=2),
+        lambda cid, key: {"target": jnp.ones((1, 256))},
+        lambda params: 0.0)
+    assert sim.verify_replicas()  # pristine replicas match
+    sim.replicas[1] = sim.replicas[1] + 1.0
+    assert not sim.verify_replicas()  # any diverged replica fails the check
+
+
+def test_example_model_drift_is_device_scalar():
+    import importlib.util
+
+    import jax
+    import jax.numpy as jnp
+
+    spec = importlib.util.spec_from_file_location(
+        "federated_llm_example",
+        os.path.join(REPO, "examples", "federated_llm.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    x = {"a": jnp.ones((4,)), "b": 2.0 * jnp.ones((3,))}
+    h = {"a": jnp.zeros((4,)), "b": jnp.ones((3,))}
+    out = mod.model_drift(x, h)
+    assert isinstance(out, jax.Array) and out.shape == ()  # stays on device
+    assert float(out) == pytest.approx(4.0 + 3.0)
+
+
+def test_example_trees_equal_single_sync():
+    import importlib.util
+
+    import jax.numpy as jnp
+
+    spec = importlib.util.spec_from_file_location(
+        "quickstart_example", os.path.join(REPO, "examples", "quickstart.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    a = {"w": jnp.arange(4.0), "b": jnp.ones((2,))}
+    b = {"w": jnp.arange(4.0), "b": jnp.ones((2,))}
+    assert mod.trees_equal(a, b)
+    b["b"] = b["b"] + 1e-7
+    assert not mod.trees_equal(a, b)
+
+
+def test_moe_decode_capacity_factor_none_falls_back():
+    # fixed: `cfg.decode_capacity_factor or ...` -> `is not None` — the
+    # declared Optional sentinel, not truthiness, selects the fallback
+    from repro.models.config import ModelConfig
+
+    assert ModelConfig.__dataclass_fields__[
+        "decode_capacity_factor"].default is None
+
+
+# ---------------------------------------------------------------------------
+# compiled-contract pass (slow: lowers + compiles the fused entries)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_compiled_pass_ndev1_clean():
+    from repro.analysis_static.contracts import run_compiled
+
+    res = run_compiled((1,))
+    assert res.findings == [], "\n".join(
+        f"{f.location()}: [{f.rule}] {f.message}" for f in res.findings)
+    assert res.checks >= 20
+
+
+def test_alias_header_parser():
+    from repro.analysis_static.contracts import parse_io_aliases
+
+    text = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+            "{1}: (1, {}, may-alias) }, entry_computation_layout=...")
+    assert parse_io_aliases(text) == [("0", 0), ("1", 1)]
+    assert parse_io_aliases("HloModule m") == []
+
+
+def test_render_json_roundtrip():
+    fs = [Finding("r", "p.py", 3, 1, "msg")]
+    assert parse_json(render_json(fs, checked_files=1, suppressed=0)) == fs

@@ -322,10 +322,14 @@ def drive_flushes(algo, n_uploads, seed=0, d=300):
     return flushes
 
 
-def test_flush_is_one_compiled_dispatch(monkeypatch):
+def test_flush_is_one_compiled_dispatch():
     """After the first flush compiles the fused step, further flushes (a)
     never re-trace it and (b) touch NO other kernel entry point — the whole
-    server step is one python-level call into one compiled executable."""
+    server step is one python-level call into one compiled executable.
+    Enforced via the shared ``trace_guard`` (the same machinery the flcheck
+    compiled pass runs in CI)."""
+    from repro.analysis_static import trace_guard
+
     qcfg = QAFeLConfig(client_lr=0.1, server_lr=1.0, server_momentum=0.3,
                        buffer_size=3, local_steps=1,
                        client_quantizer="qsgd4", server_quantizer="qsgd4")
@@ -334,50 +338,20 @@ def test_flush_is_one_compiled_dispatch(monkeypatch):
     algo = QAFeL(qcfg, quad_loss, params0)
     assert drive_flushes(algo, 3) == 1  # warm-up: compile the fused step
 
-    traces_before = kops.SERVER_FLUSH_TRACES
-    calls = {"flush_step": 0, "other_kernel": 0}
-    real_flush = kops.server_flush_step
-
-    def counting_flush(*a, **kw):
-        calls["flush_step"] += 1
-        return real_flush(*a, **kw)
-
-    def forbid(name, real):
-        def wrapper(*a, **kw):
-            calls["other_kernel"] += 1
-            return real(*a, **kw)
-        return wrapper
-
-    in_receive = {"on": False}
-    monkeypatch.setattr(kops, "server_flush_step", counting_flush)
-    # any other kernel entry used during receive would be an extra dispatch
-    for name in ("qsgd_quantize", "qsgd_quantize_batch", "qsgd_dequantize",
-                 "buffer_aggregate"):
-        real = getattr(kops, name)
-
-        def make(real):
-            def wrapper(*a, **kw):
-                if in_receive["on"]:
-                    calls["other_kernel"] += 1
-                return real(*a, **kw)
-            return wrapper
-        monkeypatch.setattr(kops, name, make(real))
-
     key = jax.random.PRNGKey(99)
     flushes = 0
-    for _ in range(9):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        msg, _ = algo.run_client(make_batches(k1), k2)
-        in_receive["on"] = True
-        try:
-            if algo.receive(msg, k3) is not None:
-                flushes += 1
-        finally:
-            in_receive["on"] = False
+    with trace_guard("server_flush", retraces=0) as g:  # zero re-traces
+        for _ in range(9):
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            msg, _ = algo.run_client(make_batches(k1), k2)
+            # any other kernel entry used during receive would be an extra
+            # dispatch on the one-dispatch server path
+            with g.exclusive():
+                if algo.receive(msg, k3) is not None:
+                    flushes += 1
     assert flushes == 3
-    assert calls["flush_step"] == 3  # one dispatch per flush...
-    assert calls["other_kernel"] == 0  # ...and nothing else on the server path
-    assert kops.SERVER_FLUSH_TRACES == traces_before  # zero re-traces
+    assert g.calls == 3  # one dispatch per flush...
+    assert g.other_calls == 0  # ...and nothing else on the server path
 
 
 def test_flush_state_buffers_are_donated():
