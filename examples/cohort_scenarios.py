@@ -13,6 +13,10 @@ process, dropouts, stragglers, per-client quantizer bit-width tiers.
     PYTHONPATH=src python examples/cohort_scenarios.py --devices 8 ...
 
 ``--min-acc`` makes the run assert convergence (used by the CI smoke job).
+``--trace PATH`` attaches a ``repro.obs.RunTracer`` with in-dispatch metric
+taps enabled, writes the full structured event stream (uploads, drops,
+flushes with per-flush quantization error, broadcasts, evals, compiles) to
+PATH as JSONL, schema-validates it, and prints the telemetry summary table.
 ``--devices N`` runs the sharded flat substrate on an N-device ("data",)
 mesh — cohort members and server flat-state segments shard over it, with
 bit-identical results to ``--devices 1``. On CPU, N fake host devices are
@@ -36,6 +40,9 @@ def parse_args():
     ap.add_argument("--samples", type=int, default=1200)
     ap.add_argument("--min-acc", type=float, default=None,
                     help="assert final accuracy >= this (CI smoke)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry taps, write the structured "
+                         "event stream to PATH as JSONL (schema-validated)")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the flat substrate over an N-device mesh "
                          "(fakes N host devices on CPU)")
@@ -90,7 +97,11 @@ def main():
     qcfg = QAFeLConfig(client_lr=0.05, server_lr=1.0, server_momentum=0.3,
                        buffer_size=args.buffer, local_steps=2,
                        client_quantizer="qsgd4", server_quantizer="qsgd4")
-    algo = QAFeL(qcfg, loss_fn, params0, mesh=mesh)
+    tracer = None
+    if args.trace is not None:
+        from repro.obs import RunTracer
+        tracer = RunTracer(taps=True)
+    algo = QAFeL(qcfg, loss_fn, params0, mesh=mesh, telemetry=tracer)
     sim = CohortAsyncFLSimulator(
         algo,
         SimConfig(concurrency=args.concurrency, max_uploads=args.uploads,
@@ -112,6 +123,14 @@ def main():
         assert res.final_accuracy >= args.min_acc, (
             f"accuracy {res.final_accuracy:.3f} < required {args.min_acc}")
         print(f"  convergence check passed (>= {args.min_acc})")
+    if tracer is not None:
+        from repro.obs import summary_table, validate_jsonl, write_jsonl
+        write_jsonl(tracer, args.trace)
+        errors = validate_jsonl(args.trace)
+        assert not errors, f"trace schema errors: {errors[:5]}"
+        print(summary_table(tracer, title=f"telemetry ({args.trace})"))
+        print(f"  trace: {len(tracer.events())} events -> {args.trace} "
+              f"(schema OK)")
 
 
 if __name__ == "__main__":

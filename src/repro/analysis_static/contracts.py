@@ -89,7 +89,8 @@ def _probe_loss(params, batch, key):
     return jnp.mean((params["w"] - batch["target"]) ** 2)
 
 
-def _make_algo(server_quantizer: str, server_momentum: float, mesh):
+def _make_algo(server_quantizer: str, server_momentum: float, mesh,
+               taps: bool = False):
     import jax.numpy as jnp
 
     from repro.core.qafel import QAFeL, QAFeLConfig
@@ -99,7 +100,11 @@ def _make_algo(server_quantizer: str, server_momentum: float, mesh):
                        client_quantizer="qsgd4",
                        server_quantizer=server_quantizer)
     params0 = {"w": jnp.zeros((_PROBE_D,), jnp.float32)}
-    return QAFeL(qcfg, _probe_loss, params0, mesh=mesh)
+    telemetry = None
+    if taps:
+        from repro.obs import RunTracer
+        telemetry = RunTracer(taps=True)
+    return QAFeL(qcfg, _probe_loss, params0, mesh=mesh, telemetry=telemetry)
 
 
 def _drive(algo, n_flushes: int, guard=None, guard_client=None, seed: int = 0):
@@ -211,7 +216,8 @@ def _lower_entry(entry: str, args: tuple, kwargs: dict) -> str:
         bound.apply_defaults()
         p = bound.arguments
         jitted = kops._cohort_step_fn(p["loss_fn"], p["qcfg"], p["spec"],
-                                      p["layout"], p["b"], p["mesh"])
+                                      p["layout"], p["b"], p["mesh"],
+                                      p["taps"])
         return jitted.lower(p["hidden_flat"], p["batches"], p["k_train"],
                             p["k_enc"], p["flag"]).compile().as_text()
     return getattr(kops, entry).lower(*args, **kwargs).compile().as_text()
@@ -223,6 +229,7 @@ def _check_hlo(entry: str, label: str, ndev: int, args: tuple, kwargs: dict,
     contract = kops.CONTRACTS[entry]
     beta = kwargs.get("beta")
     sbits = kwargs.get("sbits")
+    taps = bool(kwargs.get("taps", False))
     checks = 0
 
     hlo = _lower_entry(entry, args, kwargs)
@@ -241,16 +248,18 @@ def _check_hlo(entry: str, label: str, ndev: int, args: tuple, kwargs: dict,
             f"beta={beta!r} prunes {list(pruned)}): the in-place state "
             f"update contract is not established in the compiled module"))
 
-    # 2. hard_boundary conditionals survived compilation
-    want = contract["min_hard_boundaries"](sbits=sbits, beta=beta)
+    # 2. hard_boundary conditionals survived compilation (the telemetry
+    # tap squares declare one extra cond when taps=True)
+    want = contract["min_hard_boundaries"](sbits=sbits, beta=beta, taps=taps)
     n_cond = count_conditionals(hlo)
     checks += 1
     if n_cond < want:
         findings.append(Finding(
             "hlo-hard-boundary", _loc(entry, label, ndev), 0, 0,
             f"{n_cond} HLO conditional(s) < required {want} "
-            f"(sbits={sbits!r}, beta={beta!r}): a hard_boundary was "
-            f"compiled away and XLA may now contract across it"))
+            f"(sbits={sbits!r}, beta={beta!r}, taps={taps!r}): a "
+            f"hard_boundary was compiled away and XLA may now contract "
+            f"across it"))
     return checks
 
 
@@ -258,10 +267,15 @@ def _check_flush(mesh, ndev: int, findings: List[Finding]) -> int:
     from repro.kernels import ops as kops
     entry = "server_flush_step" if mesh is None else "server_flush_step_sharded"
     checks = 0
-    for label, squant, momentum in (("qsgd4+momentum", "qsgd4", 0.3),
-                                    ("identity+nomomentum", "identity", 0.0)):
+    for label, squant, momentum, taps in (
+            ("qsgd4+momentum", "qsgd4", 0.3, False),
+            ("identity+nomomentum", "identity", 0.0, False),
+            # telemetry taps ride the SAME dispatch: all contracts (donation,
+            # boundary floor incl. the tap cond, single dispatch, no retrace)
+            # must hold with the tap vector threaded through
+            ("qsgd4+momentum+taps", "qsgd4", 0.3, True)):
         cap = _Capture((entry,))
-        algo = _make_algo(squant, momentum, mesh)
+        algo = _make_algo(squant, momentum, mesh, taps=taps)
         with cap, trace_guard("server_flush", retraces=None) as g:
             _drive(algo, 2, guard=g)
         checks += 2
@@ -283,8 +297,8 @@ def _check_flush(mesh, ndev: int, findings: List[Finding]) -> int:
         checks += 1
         try:
             with trace_guard("server_flush", retraces=0) as g2:
-                _drive(_make_algo(squant, momentum, mesh), 1, guard=g2,
-                       seed=1)
+                _drive(_make_algo(squant, momentum, mesh, taps=taps), 1,
+                       guard=g2, seed=1)
         except TraceGuardError as exc:
             findings.append(Finding(
                 "retrace", _loc(entry, label, ndev), 0, 0, str(exc)))
@@ -296,33 +310,36 @@ def _check_flush(mesh, ndev: int, findings: List[Finding]) -> int:
 
 def _check_cohort(mesh, ndev: int, findings: List[Finding]) -> int:
     entry = "cohort_train_encode_step"
-    cap = _Capture((entry,))
-    algo = _make_algo("qsgd4", 0.3, mesh)
-    with cap, trace_guard("cohort_step", retraces=None) as g:
-        _drive(algo, 1, guard_client=g)
-    checks = 2
-    if g.calls < 1 or entry not in cap.calls:
-        findings.append(Finding(
-            "single-dispatch", _loc(entry, "qsgd4", ndev), 0, 0,
-            f"client path made {g.calls} call(s) into {entry}: the fused "
-            f"cohort entry is being bypassed"))
-        return checks
-    if g.other_calls:
-        findings.append(Finding(
-            "single-dispatch", _loc(entry, "qsgd4", ndev), 0, 0,
-            f"{g.other_calls} base kernel dispatch(es) inside the client "
-            f"window: the client pipeline is not ONE compiled dispatch"))
+    checks = 0
+    for label, taps in (("qsgd4", False), ("qsgd4+taps", True)):
+        cap = _Capture((entry,))
+        algo = _make_algo("qsgd4", 0.3, mesh, taps=taps)
+        with cap, trace_guard("cohort_step", retraces=None) as g:
+            _drive(algo, 1, guard_client=g)
+        checks += 2
+        if g.calls < 1 or entry not in cap.calls:
+            findings.append(Finding(
+                "single-dispatch", _loc(entry, label, ndev), 0, 0,
+                f"client path made {g.calls} call(s) into {entry}: the "
+                f"fused cohort entry is being bypassed"))
+            continue
+        if g.other_calls:
+            findings.append(Finding(
+                "single-dispatch", _loc(entry, label, ndev), 0, 0,
+                f"{g.other_calls} base kernel dispatch(es) inside the client "
+                f"window: the client pipeline is not ONE compiled dispatch"))
 
-    checks += 1
-    try:
-        with trace_guard("cohort_step", retraces=0) as g2:
-            _drive(_make_algo("qsgd4", 0.3, mesh), 1, guard_client=g2, seed=1)
-    except TraceGuardError as exc:
-        findings.append(Finding(
-            "retrace", _loc(entry, "qsgd4", ndev), 0, 0, str(exc)))
+        checks += 1
+        try:
+            with trace_guard("cohort_step", retraces=0) as g2:
+                _drive(_make_algo("qsgd4", 0.3, mesh, taps=taps), 1,
+                       guard_client=g2, seed=1)
+        except TraceGuardError as exc:
+            findings.append(Finding(
+                "retrace", _loc(entry, label, ndev), 0, 0, str(exc)))
 
-    checks += _check_hlo(entry, "qsgd4", ndev, *cap.calls[entry],
-                         findings=findings)
+        checks += _check_hlo(entry, label, ndev, *cap.calls[entry],
+                             findings=findings)
     return checks
 
 

@@ -18,5 +18,7 @@ def fedbuff_config(base: QAFeLConfig) -> QAFeLConfig:
                                server_quantizer="identity")
 
 
-def make_fedbuff(qcfg: QAFeLConfig, loss_fn, params0) -> QAFeL:
-    return QAFeL(fedbuff_config(qcfg), loss_fn, params0)
+def make_fedbuff(qcfg: QAFeLConfig, loss_fn, params0, mesh=None,
+                 telemetry=None) -> QAFeL:
+    return QAFeL(fedbuff_config(qcfg), loss_fn, params0, mesh=mesh,
+                 telemetry=telemetry)

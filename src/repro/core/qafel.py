@@ -133,7 +133,8 @@ def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key,
 
 def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
                        hidden_flat, batches, k_train, k_enc, flag, *, b: int,
-                       with_loss: bool = False, batched: Optional[bool] = None):
+                       with_loss: bool = False, batched: Optional[bool] = None,
+                       taps: bool = False, tap_gather=None):
     """Flat-in / packed-out client pipeline: the traceable body of the fused
     cohort train+encode dispatch (``kernels.ops.cohort_train_encode_step``).
 
@@ -163,7 +164,13 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
     ``(out, losses)`` — the distributed round's metric thread. ``batched``
     overrides the b==1 dispatch/dither convention (see inline note): the
     sharded cohort step's per-device slice may hold one member and must
-    still emit the batched counter-hash wire bits.
+    still emit the batched counter-hash wire bits. ``taps=True`` adds a
+    ``"taps"`` output — per-member delta norm + relative quantization error
+    of the ACTUAL wire bits (the packed codes are decoded back in-graph),
+    see ``repro.obs.taps.COHORT_TAP_NAMES`` — at the cost of one more
+    hard-boundary cond in the same dispatch. ``tap_gather`` (from the jit
+    factory) pins the tap inputs to a replicated layout first, so a
+    sharded caller's tap reductions keep the meshless f32 grouping.
     """
     from repro.core.quantizers import (flatten_stacked_leaves,
                                        qsgd_encode_flat2d)
@@ -190,6 +197,21 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
         out = {"packed": packed, "norms": norms}
     else:
         out = {"flat": flat2d}
+    if taps:
+        from repro.obs.taps import cohort_tap_rows, decode_qsgd_stack
+        q2d = None
+        t2d = flat2d if tap_gather is None else tap_gather(flat2d)
+        if spec.kind == "qsgd":
+            # the qdq half of the error tap decodes the ACTUAL wire bits —
+            # the exact vector the server will accumulate — in the same
+            # graph; identity uploads wire the raw delta (error exactly 0)
+            # and sparse kinds are host-encoded after the dispatch
+            # (reported as 0 here)
+            q2d = decode_qsgd_stack(out["packed"], out["norms"], spec.bits,
+                                    flat2d.shape[1])
+            if tap_gather is not None:
+                q2d = tap_gather(q2d)
+        out["taps"] = cohort_tap_rows(boundary, t2d, q2d)
     return (out, losses) if with_loss else out
 
 
@@ -360,15 +382,25 @@ class QAFeL:
     placed segment vectors, the flush runs the sharded single dispatch,
     and the cohort train+encode step shards cohort members — all
     bit-identical to the single-device path at the same seed.
+
+    ``telemetry`` (a ``repro.obs.RunTracer``) turns on structured run
+    tracing: one typed event per upload / drop / flush / broadcast, and —
+    when the tracer has ``taps=True`` — the fused dispatches additionally
+    emit their in-dispatch metric tap vectors (``repro.obs.taps``), which
+    land on the events and in ``metrics()``. With ``telemetry=None``
+    (default) every dispatch keeps its pre-telemetry signature and the
+    trajectory is bit-identical to a pre-telemetry run.
     """
 
     def __init__(self, qcfg: QAFeLConfig, loss_fn: Callable, params0,
-                 mesh=None):
+                 mesh=None, telemetry=None):
         self.qcfg = qcfg
         self.loss_fn = loss_fn
         self.cq = qcfg.cq()
         self.sq = qcfg.sq()
         self.mesh = mesh
+        self.telemetry = telemetry
+        self._taps = bool(telemetry is not None and telemetry.taps)
         self.state = ServerState.init(params0, mesh=mesh)
         # the runtime-True predicate behind the fused flush's hard
         # materialization boundaries (see kernels.ops.hard_boundary)
@@ -400,9 +432,13 @@ class QAFeL:
         st = self.state
         out = kops.cohort_train_encode_step(
             self.loss_fn, self.qcfg, self.cq.spec, st.layout, st.hidden_flat,
-            batches, k_train, k_enc, self._flag, b=1, mesh=self.mesh)
+            batches, k_train, k_enc, self._flag, b=1, mesh=self.mesh,
+            taps=self._taps)
         msg = frame_cohort_messages(CLIENT_UPDATE, self.cq, out, st.layout,
                                     enc_keys=[k_enc], version=st.t)[0]
+        if self._taps:
+            from repro.obs.taps import named_cohort_taps
+            msg.meta["taps"] = named_cohort_taps(out["taps"][0])
         return msg, st.t
 
     # -- checkpoint / resume ----------------------------------------------
@@ -442,12 +478,21 @@ class QAFeL:
             # it reaches the buffer; the uplink bytes were still spent.
             self.meter.record_dropped(msg)
             self.staleness.record_dropped(tau)
+            if self.telemetry is not None:
+                self.telemetry.emit("drop", step=self.state.t,
+                                    client=msg.meta.get("client", -1),
+                                    tau=tau, reason="stale")
             return None
         self.meter.record(msg)
         self.staleness.observe(tau)
         # host-side scalar of staleness_weight: a jnp call here would force a
         # device sync on every single upload
         w = (1.0 / math.sqrt(1.0 + tau)) if self.qcfg.staleness_scaling else 1.0
+        if self.telemetry is not None:
+            extra = ({"taps": msg.meta["taps"]} if "taps" in msg.meta else {})
+            self.telemetry.emit("upload", step=self.state.t,
+                                client=msg.meta.get("client", -1),
+                                tau=tau, weight=w, **extra)
         payload = msg.payload
         if isinstance(payload, dict) and payload.get("format") == "packed":
             if (payload["kind"] == self.cq.spec.kind
@@ -484,6 +529,7 @@ class QAFeL:
             raise ValueError("buffered uploads do not match the server's "
                              "parameter layout")
         batch: FlushBatch = self.buffer.drain(normalize="capacity")
+        tap_vec = None
         kind = self.sq.spec.kind
         if kind in ("qsgd", "identity"):
             sbits = self.sq.spec.bits if kind == "qsgd" else None
@@ -513,22 +559,29 @@ class QAFeL:
                         [jnp.asarray(extra, jnp.float32),
                          jnp.zeros((rows_pad * kops.BUCKET - batch.n,),
                                    jnp.float32)])
-                x_new, h_new, m_new, payload = kops.server_flush_step_sharded(
+                out = kops.server_flush_step_sharded(
                     st.x_flat, st.hidden_flat, st.momentum_flat,
                     stack, norms, batch.weights, extra, key2d, self._flag,
                     bits=bits, sbits=sbits, lr=self.qcfg.server_lr,
-                    beta=beta, mesh=self.mesh)
+                    beta=beta, mesh=self.mesh,
+                    n=batch.n if self._taps else None, taps=self._taps)
+                x_new, h_new, m_new, payload = out[:4]
+                if self._taps:
+                    tap_vec = out[4]
                 if kind == "qsgd":
                     payload = (payload[0][:rows], payload[1][:rows])
                 else:
                     payload = (payload[0][:batch.n],)
             else:
-                x_new, h_new, m_new, payload = kops.server_flush_step(
+                out = kops.server_flush_step(
                     st.x_flat, st.hidden_flat, st.momentum_flat,
                     batch.stack, batch.norms, batch.weights, batch.extra,
                     key2d, self._flag,
                     bits=bits, sbits=sbits, n=batch.n,
-                    lr=self.qcfg.server_lr, beta=beta)
+                    lr=self.qcfg.server_lr, beta=beta, taps=self._taps)
+                x_new, h_new, m_new, payload = out[:4]
+                if self._taps:
+                    tap_vec = out[4]
             if kind == "qsgd":
                 enc = packed_qsgd_payload(payload[0], payload[1], sbits,
                                           batch.n, st.layout)
@@ -558,6 +611,18 @@ class QAFeL:
                 h_new = place_flat_on_mesh(h_new, self.mesh, batch.n)
                 m_new = place_flat_on_mesh(m_new, self.mesh, batch.n)
         self.meter.record(bmsg, n_receivers=n_receivers)
+        if self.telemetry is not None:
+            extra = {}
+            if tap_vec is not None:
+                from repro.obs.taps import named_flush_taps
+                extra["taps"] = named_flush_taps(tap_vec)
+            self.telemetry.emit(
+                "flush", step=st.t, window=self.qcfg.buffer_size,
+                packed_k=0 if batch.stack is None else int(batch.stack.shape[0]),
+                has_residual=batch.extra is not None, **extra)
+            self.telemetry.emit("broadcast", step=st.t + 1,
+                                n_receivers=n_receivers,
+                                wire_kB=bmsg.wire_bytes / 1e3)
         self.state = ServerState(x_flat=x_new, hidden_flat=h_new,
                                  momentum_flat=m_new, layout=st.layout,
                                  t=st.t + 1, mesh=st.mesh)
@@ -583,9 +648,11 @@ class QAFeL:
         return float(_hidden_drift_ratio(x, h))
 
     def metrics(self, drift: bool = False) -> Dict[str, Any]:
-        out = dict(self.meter.summary())
-        out.update(self.staleness.summary())
-        out["server_steps"] = self.state.t
-        if drift:
-            out["hidden_drift"] = self.hidden_drift()
-        return out
+        """The unified metrics surface (``repro.obs.metrics.collect``):
+        the pre-telemetry ``TrafficMeter`` / ``StalenessMonitor`` /
+        ``server_steps`` keys bit-for-bit, plus the tracer's deterministic
+        tap series when telemetry is attached."""
+        from repro.obs.metrics import collect
+        return collect(self.meter, self.staleness, self.state.t,
+                       tracer=self.telemetry,
+                       drift=self.hidden_drift() if drift else None)

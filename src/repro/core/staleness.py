@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Any, Dict, List, Tuple
 
 import jax.numpy as jnp
 
@@ -64,11 +64,37 @@ class StalenessMonitor:
     def tau_mean(self) -> float:
         return sum(self.history) / len(self.history) if self.history else 0.0
 
-    def summary(self) -> Dict[str, float]:
+    def histogram(self, bins: int = 8) -> Dict[str, Tuple]:
+        """Tau distribution as counts per bucket, accepted vs dropped.
+
+        Power-of-two edges ``[0, 1, 2, 4, ...]``: bucket i counts
+        ``edges[i] <= tau < edges[i+1]``, and the last bucket is open-ended
+        (every tau >= edges[-1]). All values are tuples so two same-seed
+        runs' metrics dicts compare with plain ``==``.
+        """
+        if bins < 2:
+            raise ValueError(f"histogram needs >= 2 bins, got {bins}")
+        edges = [0] + [1 << i for i in range(bins - 1)]
+
+        def bucketize(taus):
+            counts = [0] * bins
+            for tau in taus:
+                for i in range(bins - 1, -1, -1):
+                    if tau >= edges[i]:
+                        counts[i] += 1
+                        break
+            return tuple(counts)
+
+        return {"edges": tuple(edges),
+                "accepted": bucketize(self.history),
+                "dropped": bucketize(self.dropped)}
+
+    def summary(self) -> Dict[str, Any]:
         return {"tau_max": self.tau_max, "tau_mean": self.tau_mean,
                 "n": len(self.history),
                 "stale_dropped": len(self.dropped),
-                "tau_max_dropped": max(self.dropped, default=0)}
+                "tau_max_dropped": max(self.dropped, default=0),
+                "tau_hist": self.histogram()}
 
 
 def tau_max_for_buffer(tau_max_1: int, k: int) -> int:

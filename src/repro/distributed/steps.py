@@ -72,8 +72,14 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
                      remat: bool = True,
                      window_override: Optional[int] = None,
                      pod_quantized: bool = False, mesh=None,
-                     podq_bits: int = 4) -> Callable:
+                     podq_bits: int = 4, taps: bool = False) -> Callable:
     """Build the jittable round function for a decoder architecture.
+
+    ``taps=True`` adds the flush metric tap vector
+    (``repro.obs.taps.FLUSH_TAP_NAMES`` layout) to the round's metrics dict
+    under ``"taps"`` — the same in-dispatch scalars the host flush emits,
+    computed in the same round dispatch (baseline round only; the
+    pod-quantized variant keeps its leafwise metrics).
 
     pod_quantized=True (requires a mesh with a "pod" axis): hierarchical
     QAFeL — the K buffered clients are partitioned across pods; each pod
@@ -166,6 +172,11 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
                                momentum=layout.unflatten(m_new),
                                t=state.t + 1)
         metrics = {"loss": loss_sum / qcfg.buffer_size}
+        if taps:
+            from repro.obs.taps import flush_tap_vector
+            boundary = functools.partial(kops.hard_boundary, flag)
+            metrics["taps"] = flush_tap_vector(
+                boundary, x_flat, x_new, delta_bar, diff, q, weights)
         return new_state, metrics
 
     return round_fn

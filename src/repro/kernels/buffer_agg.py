@@ -110,7 +110,7 @@ def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
 
 def aggregate_update(x_flat, m_flat, stack, norms, weights, extra, *,
                      bits, n: int, lr, beta, boundary=None,
-                     interpret: bool = True):
+                     interpret: bool = True, with_delta: bool = False):
     """Chain the buffer aggregation into the FedBuff server update without
     leaving the device: Delta-bar = sum_k w_k dequant(msg_k) (+ pre-scaled
     residual), m <- beta m + Delta-bar, x <- x + eta_g m.
@@ -121,7 +121,10 @@ def aggregate_update(x_flat, m_flat, stack, norms, weights, extra, *,
     ``ops.hard_boundary``) pins the intermediate scalar products so XLA
     cannot FMA-contract them and drift bit-wise from the eager reference.
 
-    Returns ``(m_new, x_new)``.
+    Returns ``(m_new, x_new)``, or ``(m_new, x_new, delta)`` with
+    ``with_delta=True`` — the aggregated Delta-bar is what the flush's
+    in-dispatch metric taps reduce over, and recovering it from the
+    momentum recurrence would not be f32-exact.
     """
     from repro.core.qafel import server_apply_flat  # lazy: kernels stay core-free
 
@@ -135,4 +138,6 @@ def aggregate_update(x_flat, m_flat, stack, norms, weights, extra, *,
         delta = extra
     x_new, m_new = server_apply_flat(x_flat, m_flat, delta,
                                      lr=lr, beta=beta, boundary=boundary)
+    if with_delta:
+        return m_new, x_new, delta
     return m_new, x_new

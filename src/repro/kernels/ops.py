@@ -189,11 +189,12 @@ COHORT_STEP_TRACES = 0
 
 
 @functools.lru_cache(maxsize=64)
-def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None):
+def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
+                    taps: bool = False):
     """jit of the flat-in/packed-out client pipeline, cached by
-    (loss_fn, qcfg, quantizer spec, layout, cohort size, mesh) so engine
-    instances, benchmark sweeps and scenario tiers share compilations.
-    Bounded: loss_fn closures can capture datasets.
+    (loss_fn, qcfg, quantizer spec, layout, cohort size, mesh, taps) so
+    engine instances, benchmark sweeps and scenario tiers share
+    compilations. Bounded: loss_fn closures can capture datasets.
 
     With a ("data",) ``mesh`` and b > 1 the cohort member dim is sharded
     via shard_map: each device trains its member slice of the tier-group
@@ -214,11 +215,26 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None):
     from repro.core.qafel import client_update_flat  # lazy: kernels stay core-free
 
     if mesh is None or b == 1:
+        gather = None
+        if taps and mesh is not None:
+            # the b=1 path takes a SHARDED hidden_flat from a mesh server;
+            # GSPMD would keep the tap reductions partitioned along d and
+            # their f32 grouping would drift from the meshless bits — pin
+            # the tap inputs to replicated before reducing (the flush taps
+            # make the same move)
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            replicated = NamedSharding(mesh, P())
+
+            def gather(v):
+                return jax.lax.with_sharding_constraint(v, replicated)
+
         def step(hidden_flat, batches, k_train, k_enc, flag):
             global COHORT_STEP_TRACES
             COHORT_STEP_TRACES += 1
             return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
-                                      batches, k_train, k_enc, flag, b=b)
+                                      batches, k_train, k_enc, flag, b=b,
+                                      taps=taps, tap_gather=gather)
 
         return jax.jit(step)
 
@@ -236,12 +252,17 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None):
         # the batched counter-hash convention of the whole-cohort dispatch
         return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
                                   batches, k_train, k_enc, flag, b=b_loc,
-                                  batched=True)
+                                  batched=True, taps=taps)
 
     if spec.kind == "qsgd":
         out_specs = {"norms": P("data", None), "packed": P("data", None, None)}
     else:
         out_specs = {"flat": P("data", None)}
+    if taps:
+        # per-member tap rows shard over members like every other output;
+        # each member's reduction runs over its own full (d,) row, so the
+        # values are independent of the member-dim sharding
+        out_specs["taps"] = P("data", None)
 
     def lead_spec(leaf):
         return P(*(["data"] + [None] * (leaf.ndim - 1)))
@@ -269,7 +290,7 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None):
 
 def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
                              batches, k_train, k_enc, flag, *, b: int,
-                             mesh=None):
+                             mesh=None, taps: bool = False):
     """The entire client pipeline of one cohort tier-group as ONE jitted
     dispatch: unflatten the device-resident flat x-hat *inside* the jit, run
     the (vmapped) local-SGD scan, flatten the delta stack to (b, d), and
@@ -287,16 +308,20 @@ def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
     Returns ``{"packed": (b, rows, 128*bits//8), "norms": (b, rows)}`` for
     qsgd, ``{"flat": (b, d)}`` otherwise (identity's flat rows ARE the wire
     payload; sparse kinds are encoded by the host from the flat rows).
+    ``taps=True`` adds a ``"taps"`` entry — the (b, len(COHORT_TAP_NAMES))
+    per-member in-dispatch metric rows — to the SAME dispatch.
     """
-    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh)(
+    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh, taps)(
         hidden_flat, batches, k_train, k_enc, flag)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "sbits", "n", "lr", "beta"),
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "sbits", "n", "lr", "beta", "taps"),
                    donate_argnums=(0, 1, 2))
 def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
                       weights, extra, key2d, flag, *,
-                      bits: int, sbits, n: int, lr: float, beta):
+                      bits: int, sbits, n: int, lr: float, beta,
+                      taps: bool = False):
     """The entire QAFeL buffer flush as ONE jitted, buffer-donated dispatch.
 
     Chains, without leaving the device or materializing any pytree:
@@ -320,32 +345,46 @@ def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
 
     Returns ``(x_new, hidden_new, momentum_new, (payload...))`` where the
     payload is ``(packed, norms)`` for a qsgd broadcast or ``(diff,)`` for
-    identity.
+    identity. ``taps=True`` appends the in-dispatch metric tap vector
+    (``repro.obs.taps.FLUSH_TAP_NAMES`` layout) as a fifth element — one
+    extra f32 output of the SAME dispatch, never a new kernel entry; the
+    tap math consumes only hard-boundary-pinned values, so the state/
+    payload outputs stay bit-identical to a ``taps=False`` flush.
     """
     global SERVER_FLUSH_TRACES
     SERVER_FLUSH_TRACES += 1
     boundary = functools.partial(hard_boundary, flag)
-    m_new, x_new = _agg.aggregate_update(
+    agg = _agg.aggregate_update(
         x_flat, momentum_flat, stack, norms, weights, extra,
         bits=bits, n=n, lr=lr, beta=beta, boundary=boundary,
-        interpret=_interpret())
+        interpret=_interpret(), with_delta=taps)
+    m_new, x_new = agg[0], agg[1]
     diff = boundary(x_new - hidden_flat)
     if sbits is None:  # identity server quantizer: the diff IS the wire payload
         h_new = hidden_flat + diff
-        return x_new, h_new, m_new, (diff,)
-    bp3, bn3 = qsgd_quantize_batch(diff[None], key2d, sbits)
-    bpacked, bnorms = boundary((bp3[0], bn3[0]))
-    q = boundary(qsgd_dequantize(bpacked, bnorms, sbits, n))
-    h_new = hidden_flat + q
-    return x_new, h_new, m_new, (bpacked, bnorms)
+        q, payload = diff, (diff,)
+    else:
+        bp3, bn3 = qsgd_quantize_batch(diff[None], key2d, sbits)
+        bpacked, bnorms = boundary((bp3[0], bn3[0]))
+        q = boundary(qsgd_dequantize(bpacked, bnorms, sbits, n))
+        h_new = hidden_flat + q
+        payload = (bpacked, bnorms)
+    if not taps:
+        return x_new, h_new, m_new, payload
+    from repro.obs.taps import flush_tap_vector  # lazy: kernels stay obs-free
+    tap_vec = flush_tap_vector(boundary, x_flat, x_new, agg[2], diff, q,
+                               weights)
+    return x_new, h_new, m_new, payload, tap_vec
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "sbits", "lr", "beta", "mesh"),
+                   static_argnames=("bits", "sbits", "lr", "beta", "mesh",
+                                    "n", "taps"),
                    donate_argnums=(0, 1, 2))
 def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
                               weights, extra, key2d, flag, *,
-                              bits: int, sbits, lr: float, beta, mesh):
+                              bits: int, sbits, lr: float, beta, mesh,
+                              n=None, taps: bool = False):
     """``server_flush_step`` on a flat state sharded over a ("data",) mesh.
 
     Same chain, one shard_map: every device owns one CONTIGUOUS segment of
@@ -373,38 +412,60 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     momentum), ``key2d`` None (identity broadcast). Returns the same
     ``(x_new, hidden_new, momentum_new, (payload...))`` contract with
     padded-length payload arrays.
+
+    ``taps=True`` (requires the static TRUE length ``n``) appends the
+    in-dispatch metric tap vector as a fifth element, sharding-invariant by
+    construction: the per-segment delta/diff/decoded-broadcast vectors come
+    back as extra sharded outputs of the SAME shard_map, are gathered to a
+    replicated layout inside the same jit, sliced to the true ``n`` (a
+    reduction over the zero-padded length has a different f32 tree-reduce
+    grouping), and fed to the ONE shared ``flush_tap_vector`` — so every
+    mesh size reduces the exact shapes the single-device dispatch reduces.
     """
     global SERVER_FLUSH_TRACES
     SERVER_FLUSH_TRACES += 1
+    from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
 
     from repro.common.compat import shard_map as _shard_map
     from repro.sharding.rules import (flat_norms_spec, flat_stack_spec,
                                       flat_vector_spec)
 
+    if taps and n is None:
+        raise ValueError("server_flush_step_sharded(taps=True) requires the "
+                         "static true length n")
+
     def seg_body(x_l, h_l, m_l, stack_l, norms_l, w, extra_l, key2d_l, flag_l):
         boundary = functools.partial(hard_boundary, flag_l)
         n_l = x_l.shape[0]
-        m_new, x_new = _agg.aggregate_update(
+        agg = _agg.aggregate_update(
             x_l, m_l, stack_l, norms_l, w, extra_l,
             bits=bits, n=n_l, lr=lr, beta=beta, boundary=boundary,
-            interpret=_interpret())
+            interpret=_interpret(), with_delta=taps)
+        m_new, x_new = agg[0], agg[1]
         diff = boundary(x_new - h_l)
         if sbits is None:  # identity server quantizer
-            return x_new, h_l + diff, m_new, (diff,)
-        rows_l = n_l // BUCKET
-        seeds = jnp.asarray(key2d_l).reshape(1, -1)[:, :2].astype(jnp.uint32)
-        row_off = (jax.lax.axis_index("data") * rows_l).astype(jnp.uint32)
-        bp, bn = _qsgd._quantize_pack_batch_block(
-            diff.reshape(1, rows_l, BUCKET), seeds[:, 0], seeds[:, 1],
-            row_off, sbits)
-        bpacked, bnorms = boundary((bp[0], bn.reshape(rows_l)))
-        q = boundary(_qsgd._unpack_dequantize_block(
-            bpacked, bnorms.reshape(rows_l, 1), sbits).reshape(-1))
-        return x_new, h_l + q, m_new, (bpacked, bnorms)
+            q, h_new, payload = diff, h_l + diff, (diff,)
+        else:
+            rows_l = n_l // BUCKET
+            seeds = jnp.asarray(key2d_l).reshape(1, -1)[:, :2].astype(jnp.uint32)
+            row_off = (jax.lax.axis_index("data") * rows_l).astype(jnp.uint32)
+            bp, bn = _qsgd._quantize_pack_batch_block(
+                diff.reshape(1, rows_l, BUCKET), seeds[:, 0], seeds[:, 1],
+                row_off, sbits)
+            bpacked, bnorms = boundary((bp[0], bn.reshape(rows_l)))
+            q = boundary(_qsgd._unpack_dequantize_block(
+                bpacked, bnorms.reshape(rows_l, 1), sbits).reshape(-1))
+            h_new, payload = h_l + q, (bpacked, bnorms)
+        if not taps:
+            return x_new, h_new, m_new, payload
+        return x_new, h_new, m_new, payload, (agg[2], diff, q)
 
     vec, rep = flat_vector_spec(), P()
     payload_specs = (vec,) if sbits is None else (P("data", None), vec)
+    out_specs = (vec, vec, vec, payload_specs)
+    if taps:
+        out_specs = out_specs + ((vec, vec, vec),)
     sm = _shard_map(
         seg_body, mesh=mesh,
         in_specs=(vec, vec, vec,
@@ -413,9 +474,23 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
                   None if weights is None else rep,
                   None if extra is None else vec,
                   None if key2d is None else rep, rep),
-        out_specs=(vec, vec, vec, payload_specs), check_vma=False)
-    return sm(x_flat, hidden_flat, momentum_flat, stack, norms, weights,
-              extra, key2d, flag)
+        out_specs=out_specs, check_vma=False)
+    out = sm(x_flat, hidden_flat, momentum_flat, stack, norms, weights,
+             extra, key2d, flag)
+    if not taps:
+        return out
+    x_new, h_new, m_new, payload, (delta, diff, q) = out
+    from repro.obs.taps import flush_tap_vector  # lazy: kernels stay obs-free
+    replicated = NamedSharding(mesh, P())
+
+    def gather(v):
+        return jax.lax.with_sharding_constraint(v, replicated)[:n]
+
+    boundary = functools.partial(hard_boundary, flag)
+    tap_vec = flush_tap_vector(boundary, gather(x_flat), gather(x_new),
+                               gather(delta), gather(diff), gather(q),
+                               weights)
+    return x_new, h_new, m_new, payload, tap_vec
 
 
 # ---------------------------------------------------------------------------
@@ -430,19 +505,25 @@ KERNEL_ENTRY_POINTS = ("qsgd_quantize", "qsgd_quantize_batch",
                        "qsgd_dequantize", "buffer_aggregate")
 
 
-def _flush_boundaries(*, sbits, beta, **_) -> int:
+def _flush_boundaries(*, sbits, beta, taps: bool = False, **_) -> int:
     """hard_boundary call sites traced into one flush dispatch:
     the server-update products (lr*m always, beta*m with momentum — see
     ``core.qafel.server_apply_flat``), the broadcast diff, and for a qsgd
-    broadcast the packed wire pair + the decoded hidden increment."""
-    return 2 + (1 if beta is not None else 0) + (2 if sbits is not None else 0)
+    broadcast the packed wire pair + the decoded hidden increment. Metric
+    taps add exactly one more: the squares feeding the tap reductions are
+    materialized behind a single shared boundary
+    (``obs.taps._materialized_sq_sums``)."""
+    return (2 + (1 if beta is not None else 0)
+            + (2 if sbits is not None else 0) + (1 if taps else 0))
 
 
-def _cohort_boundaries(**_) -> int:
+def _cohort_boundaries(*, taps: bool = False, **_) -> int:
     """One boundary on the client path: the flat delta stack between the
     local-SGD scan and the encode's norm math (``client_update_flat``).
-    The in-jit unflatten needs none — slices are exact data movement."""
-    return 1
+    The in-jit unflatten needs none — slices are exact data movement.
+    Metric taps add one: the shared squares boundary of the per-member tap
+    reductions."""
+    return 1 + (1 if taps else 0)
 
 
 # Declarative contracts over the fused entries, consumed by

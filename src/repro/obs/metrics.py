@@ -1,0 +1,32 @@
+"""The one metrics surface.
+
+``collect`` merges the pre-existing host-side monitors into a single dict in
+the exact order and with the exact keys ``QAFeL.metrics()`` produced before
+the telemetry substrate existed — those keys are pinned bit-for-bit by the
+pre-refactor trajectory tests — and appends tracer-derived series only when
+a tracer is attached.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+
+def collect(meter, staleness, server_steps: int, *,
+            tracer=None, drift: Optional[float] = None) -> Dict[str, Any]:
+    """Build the unified metrics dict.
+
+    ``meter`` / ``staleness`` are the run's ``TrafficMeter`` /
+    ``StalenessMonitor``; their ``summary()`` keys come first, unchanged.
+    ``drift`` is the optional ``hidden_drift`` scalar. ``tracer`` adds its
+    deterministic tap series (``flush/*`` / ``upload/*`` keys) — compile
+    counters deliberately stay out (warm-cache dependent, and same-seed
+    runs are compared on full-dict equality).
+    """
+    out: Dict[str, Any] = dict(meter.summary())
+    out.update(staleness.summary())
+    out["server_steps"] = server_steps
+    if drift is not None:
+        out["hidden_drift"] = drift
+    if tracer is not None:
+        out.update(tracer.metrics())
+    return out

@@ -1,0 +1,25 @@
+"""Named record types for host-side time series.
+
+``AccuracyPoint`` replaces the positional ``(now, uploads, step, acc)``
+tuples the simulators used to append to ``accuracy_trace``. As a NamedTuple
+it compares and indexes exactly like the plain tuple it replaces —
+``AccuracyPoint(1.0, 2, 3, 0.5) == (1.0, 2, 3, 0.5)`` — so every pinned
+trace-equality test and every ``trace[-1][1]`` caller keeps working, while
+new code can say ``point.accuracy``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class AccuracyPoint(NamedTuple):
+    """One entry of a simulator's accuracy trace."""
+
+    t_sim: float  # simulated wall-clock at the eval
+    uploads: int  # uploads delivered so far
+    step: int  # server step (model version) evaluated
+    accuracy: float  # eval_fn on the full-precision server model x
+
+    def as_dict(self) -> dict:
+        return {"t_sim": self.t_sim, "uploads": self.uploads,
+                "step": self.step, "accuracy": self.accuracy}

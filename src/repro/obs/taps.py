@@ -1,0 +1,135 @@
+"""In-dispatch metric taps: the device-computed scalars the fused entries
+optionally emit, and the host-side named views of them.
+
+The tap functions here are traced INSIDE the fused dispatches
+(``kernels.ops.server_flush_step(_sharded)`` / ``cohort_train_encode_step``
+with ``taps=True``) — they add one flat f32 output to the existing single
+dispatch, never a new kernel entry.
+
+Bit-invariance contract (the same discipline as ``hidden_drift``): a tap
+value must be identical across the sequential engine, the cohort engine and
+every mesh size. Two rules enforce it:
+
+* every norm is computed by ONE shared function here, on the TRUE-n
+  (unpadded) vectors — the sharded flush gathers its segment outputs to a
+  replicated layout and slices to ``n`` before calling it, so the f32
+  reduction runs over the exact shape/order of the single-device module;
+* the squares feeding each reduction are materialized behind the caller's
+  ``hard_boundary`` (one ``lax.cond`` for the whole tuple), so XLA cannot
+  FMA-contract the multiply into the reduce differently in different
+  modules (``jax.lax.optimization_barrier`` is not sufficient on XLA:CPU —
+  see ``kernels.ops.hard_boundary``). The reduce then consumes a
+  materialized array: adds and sqrt only, bit-deterministic per shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Flush tap layout, in order. All norms are L2 over the TRUE-n flat vector.
+FLUSH_TAP_NAMES = (
+    "delta_norm",        # ||Delta-bar||: the aggregated buffer delta
+    "update_norm",       # ||x_new - x_old||: the applied server update
+    "bcast_diff_norm",   # ||x_new - x-hat||: the broadcast diff
+    "bcast_qerr_rel",    # ||diff - qdq(diff)|| / ||diff|| (0 for identity)
+    "hidden_step_norm",  # ||q||: the decoded broadcast increment
+    "weight_sum",        # sum of the window's normalized staleness weights
+    "weight_min",        # min of the window's normalized staleness weights
+)
+
+# Per-cohort-member tap layout (one row per member of the fused dispatch).
+COHORT_TAP_NAMES = (
+    "delta_norm",       # ||delta_i||: the member's local-SGD delta
+    "upload_qerr_rel",  # ||delta_i - qdq(delta_i)|| / ||delta_i||
+)
+
+
+def _materialized_sq_sums(boundary, vecs, axis=None):
+    """Sum of squares per vector, squares pinned behind ONE hard boundary
+    so the reductions consume materialized arrays in every module."""
+    squares = boundary(tuple(v * v for v in vecs))
+    return [jnp.sum(s, axis=axis, dtype=jnp.float32) for s in squares]
+
+
+def flush_tap_vector(boundary, x_old, x_new, delta, diff, q, weights):
+    """The flush tap vector, f32 shape ``(len(FLUSH_TAP_NAMES),)``.
+
+    All vector arguments are the TRUE-n flat f32 vectors of one flush (the
+    sharded caller gathers+slices before calling); ``q`` is the decoded
+    broadcast increment (``== diff`` for an identity server quantizer, so
+    the relative error tap is exactly 0 there). ``weights`` is the window's
+    normalized staleness-weight vector, or None (pure identity/sparse
+    window: the weights were already folded into the residual host-side).
+    ``boundary`` is the dispatch's ``hard_boundary`` partial.
+    """
+    d2, u2, b2, e2, q2 = _materialized_sq_sums(
+        boundary, (delta, x_new - x_old, diff, diff - q, q))
+    bn = jnp.sqrt(b2)
+    taps = [jnp.sqrt(d2), jnp.sqrt(u2), bn,
+            jnp.sqrt(e2) / jnp.maximum(bn, 1e-30), jnp.sqrt(q2)]
+    if weights is None:
+        zero = jnp.zeros((), jnp.float32)
+        taps += [zero, zero]
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        taps += [jnp.sum(w, dtype=jnp.float32), jnp.min(w)]
+    return jnp.stack(taps)
+
+
+def cohort_tap_rows(boundary, flat2d, q2d):
+    """Per-member upload taps, f32 shape ``(b, len(COHORT_TAP_NAMES))``.
+
+    ``flat2d`` is the fused client step's (b, d) delta stack; ``q2d`` is
+    the decoded wire bits of the same stack — the exact vector the server
+    will accumulate — or None when the wire is the raw delta (identity
+    uploads, error exactly 0) or host-encoded after the dispatch (sparse
+    kinds, reported as 0). Each member's reduction runs over its own full
+    (d,) row, so the values are independent of cohort batching and of the
+    member-dim sharding.
+    """
+    if q2d is None:
+        (d2,) = _materialized_sq_sums(boundary, (flat2d,), axis=1)
+        dn = jnp.sqrt(d2)
+        return jnp.stack([dn, jnp.zeros_like(dn)], axis=1)
+    d2, e2 = _materialized_sq_sums(boundary, (flat2d, flat2d - q2d), axis=1)
+    dn = jnp.sqrt(d2)
+    qe = jnp.sqrt(e2) / jnp.maximum(dn, 1e-30)
+    return jnp.stack([dn, qe], axis=1)
+
+
+def _named(names: Sequence[str], values) -> Dict[str, float]:
+    arr = np.asarray(values).reshape(-1)
+    if arr.shape[0] != len(names):
+        raise ValueError(f"expected {len(names)} tap values, got {arr.shape}")
+    return {name: float(v) for name, v in zip(names, arr)}
+
+
+def named_flush_taps(vec) -> Dict[str, float]:
+    """Host-side named view of one flush tap vector."""
+    return _named(FLUSH_TAP_NAMES, vec)
+
+
+def named_cohort_taps(row) -> Dict[str, float]:
+    """Host-side named view of one member's cohort tap row."""
+    return _named(COHORT_TAP_NAMES, row)
+
+
+def decode_qsgd_stack(packed, norms, bits: int, d: int) -> Optional[jnp.ndarray]:
+    """In-graph decode of a (b, rows, ...) packed qsgd stack back to the
+    (b, d) f32 values its receiver will reconstruct — the qdq half of the
+    per-upload error tap. Pure traced block math (``kernels.qsgd``), so it
+    lives inside the same fused dispatch as the encode.
+    """
+    import jax
+
+    from repro.kernels import qsgd as _kq
+
+    rows = packed.shape[1]
+
+    def one(p, nm):
+        return _kq._unpack_dequantize_block(p, nm.reshape(rows, 1), bits)
+
+    q3 = jax.vmap(one)(packed, norms)
+    return q3.reshape(packed.shape[0], rows * _kq.LANES)[:, :d]

@@ -134,14 +134,22 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
             out = kops.cohort_train_encode_step(
                 self.algo.loss_fn, self.algo.qcfg, q.spec, st.layout,
                 st.hidden_flat, grp_batches, gt, ge, self.algo._flag, b=b,
-                mesh=self.algo.mesh)
+                mesh=self.algo.mesh, taps=self.algo._taps)
             ekeys = np.asarray(ge).reshape(b, -1) if b > 1 else [ge]
             mlist = frame_cohort_messages(CLIENT_UPDATE, q, out, st.layout,
                                           enc_keys=ekeys, version=version,
                                           count=members.size,
                                           to_numpy=(b > 1))
+            tap_rows = None
+            if self.algo._taps:
+                from repro.obs.taps import named_cohort_taps
+                # row j of the fused output is pad_idx[j] == members[j],
+                # matching the payload slicing above
+                tap_rows = np.asarray(out["taps"])
             for j, i in enumerate(members.tolist()):
                 msgs[i] = mlist[j]
+                if tap_rows is not None:
+                    msgs[i].meta["taps"] = named_cohort_taps(tap_rows[j])
         return msgs
 
     def _admit_cohort(self, next_arrival: float, next_client: int):
@@ -211,7 +219,15 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
                 for i in range(self.cohort_size):
                     if drops[i]:
                         self.dropped += 1
+                        if self.tracer is not None:
+                            # emitted at the tracer's CURRENT clock (not the
+                            # member's future arrival time) so the event
+                            # stream stays t_sim-monotone
+                            self.tracer.emit("drop", step=algo.state.t,
+                                             client=next_client + i, tau=0,
+                                             reason="dropout")
                         continue
+                    msgs[i].meta["client"] = next_client + i
                     heapq.heappush(heap, (float(arrivals[i] + durations[i]),
                                           seq, next_client + i))
                     heapq.heappush(arrival_heap, float(arrivals[i]))
@@ -226,6 +242,8 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
                 heapq.heappop(arrival_heap)
                 started += 1
             delivered += 1
+            if self.tracer is not None:
+                self.tracer.set_sim_time(now)
             bmsg = algo.receive(msg, self._next_receive_key(),
                                 n_receivers=max(1, started - delivered))
             uploads += 1

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.protocol import decode_message_flat
 from repro.core.qafel import QAFeL, QAFeLConfig
+from repro.obs.records import AccuracyPoint
 from repro.sim.scenarios import HALF_NORMAL_MEAN
 
 
@@ -72,7 +73,7 @@ class SimResult:
     server_steps: int
     sim_time: float
     metrics: Dict[str, Any]
-    accuracy_trace: List[tuple]
+    accuracy_trace: List[AccuracyPoint]  # tuple-compatible named records
     final_accuracy: float
 
 
@@ -92,6 +93,9 @@ class BaseAsyncSimulator:
         self.eval_fn = eval_fn
         self.rng = np.random.default_rng(sim_cfg.seed)
         self.key = jax.random.PRNGKey(sim_cfg.seed)
+        # the algorithm's RunTracer, if one is attached: the engine stamps
+        # its sim clock before every delivery and adds eval/compile events
+        self.tracer = getattr(algo, "telemetry", None)
         # flat replicas of the hidden state held by tracked "clients"
         # (copies: the server's own buffers are donated to the fused flush).
         # Replicas live in the TRUE wire coordinate space (_hidden_wire).
@@ -123,7 +127,10 @@ class BaseAsyncSimulator:
         step = self.algo.state.t
         if step - self._last_eval_step >= self.cfg.eval_every_steps:
             acc = float(self.eval_fn(self.algo.state.x))
-            accuracy_trace.append((now, uploads, step, acc))
+            accuracy_trace.append(AccuracyPoint(now, uploads, step, acc))
+            if self.tracer is not None:
+                self.tracer.emit("eval", step=step, accuracy=acc,
+                                 uploads=uploads)
             self._last_eval_step = step
             # `is not None`, NOT truthiness: target_accuracy=0.0 is a real
             # target (e.g. "stop at break-even" on signed scores) that a
@@ -141,7 +148,17 @@ class BaseAsyncSimulator:
         0.0 if no flush ever evaluated."""
         final_acc = float(self.eval_fn(self.algo.state.x))
         if not accuracy_trace or accuracy_trace[-1][1] != uploads:
-            accuracy_trace.append((now, uploads, self.algo.state.t, final_acc))
+            accuracy_trace.append(
+                AccuracyPoint(now, uploads, self.algo.state.t, final_acc))
+            if self.tracer is not None:
+                self.tracer.set_sim_time(now)
+                self.tracer.emit("eval", step=self.algo.state.t,
+                                 accuracy=final_acc, uploads=uploads)
+        if self.tracer is not None:
+            # one terminal poll records any (re)compiles of the fused
+            # entries that happened during the run (warm-cache dependent,
+            # so compile events never enter metrics()/stream comparisons)
+            self.tracer.poll_compiles(step=self.algo.state.t)
         # drift=True: hidden_drift is one jitted reduction + sync, paid once
         # per run here rather than inside the hot loop
         metrics = self.algo.metrics(drift=True)
@@ -194,6 +211,7 @@ class AsyncFLSimulator(BaseAsyncSimulator):
                 cid = next_client
                 batches = self.client_batches_fn(cid, self._next_key())
                 msg, _version = algo.run_client(batches, self._next_key())
+                msg.meta["client"] = cid
                 duration = abs(self.rng.normal(0.0, 1.0))
                 heapq.heappush(heap, (next_arrival + duration, seq, cid))
                 pending[seq] = msg
@@ -206,6 +224,8 @@ class AsyncFLSimulator(BaseAsyncSimulator):
             # every client still training (in flight) at that instant
             now, s, cid = heapq.heappop(heap)
             msg = pending.pop(s)
+            if self.tracer is not None:
+                self.tracer.set_sim_time(now)
             bmsg = algo.receive(msg, self._next_key(),
                                 n_receivers=max(1, len(heap)))
             uploads += 1
