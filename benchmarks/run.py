@@ -68,9 +68,10 @@ def _parse_derived(derived: str):
 SUITES = ["kernel", "roofline", "table1", "fig3", "table2"]
 
 # rows the --check gate covers: the fused-path speedup families plus the
-# sharded-substrate overhead rows (shard/*_speedup_ndevN — sub-parity on a
-# 2-core CI box, gated so the sharding overhead can't silently balloon)
-_GATED_PREFIXES = ("server/flush_", "sim/cohort_step_", "shard/")
+# sharded-substrate overhead rows (shard/*_speedup_ndevN and the 2-D
+# shard2d/*_speedup rows — sub-parity on a 2-core CI box, gated so the
+# sharding/chunking overhead can't silently balloon)
+_GATED_PREFIXES = ("server/flush_", "sim/cohort_step_", "shard/", "shard2d/")
 
 
 def _speedup_value(row) -> float | None:

@@ -217,7 +217,8 @@ def _lower_entry(entry: str, args: tuple, kwargs: dict) -> str:
         p = bound.arguments
         jitted = kops._cohort_step_fn(p["loss_fn"], p["qcfg"], p["spec"],
                                       p["layout"], p["b"], p["mesh"],
-                                      p["taps"])
+                                      p["taps"], p["member_chunk"],
+                                      p["chunk_rows"])
         return jitted.lower(p["hidden_flat"], p["batches"], p["k_train"],
                             p["k_enc"], p["flag"]).compile().as_text()
     return getattr(kops, entry).lower(*args, **kwargs).compile().as_text()
@@ -343,22 +344,61 @@ def _check_cohort(mesh, ndev: int, findings: List[Finding]) -> int:
     return checks
 
 
+def _check_encode_chunk(ndev: int, findings: List[Finding]) -> int:
+    """The streaming chunk encode (``qsgd_quantize_chunk``): deliberately
+    one dispatch per chunk, so its contracts are (a) row_start is TRACED —
+    one compilation serves every chunk of a shape, the host loop never
+    retraces per chunk — and (b) the declared (empty) donation set and
+    boundary floor hold in the compiled module."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    checks = 0
+    rows_c, total_rows = 4, 12
+    flat = jnp.ones((rows_c * kops.BUCKET,), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    for label, threefry in (("threefry", True), ("hash", False)):
+        kwargs = {"bits": 4, "total_rows": total_rows, "threefry": threefry}
+        t0 = kops.ENCODE_CHUNK_TRACES
+        for start in (0, rows_c, 2 * rows_c):
+            kops.qsgd_quantize_chunk(flat, key, start, **kwargs)
+        checks += 1
+        traces = kops.ENCODE_CHUNK_TRACES - t0
+        if traces > 1:
+            findings.append(Finding(
+                "retrace", _loc("qsgd_quantize_chunk", label, ndev), 0, 0,
+                f"{traces} trace(s) for 3 same-shape chunks: row_start is "
+                f"being treated as static and the host streaming loop "
+                f"recompiles per chunk"))
+        checks += _check_hlo("qsgd_quantize_chunk", label, ndev,
+                             (flat, key, 0), kwargs, findings=findings)
+    return checks
+
+
 # ---------------------------------------------------------------------------
 # Orchestration
 # ---------------------------------------------------------------------------
 
 
 def _run_in_process(ndev: int) -> CompiledResult:
-    from repro.launch.mesh import make_sim_mesh
+    from repro.launch.mesh import make_sim_mesh, make_sim_mesh2d
     findings: List[Finding] = []
     checks = 0
     if ndev == 1:
         # the unsharded entries are device-count independent: check once
         checks += _check_flush(None, 1, findings)
         checks += _check_cohort(None, 1, findings)
+        checks += _check_encode_chunk(1, findings)
     mesh = make_sim_mesh(ndev)
     checks += _check_flush(mesh, ndev, findings)
     checks += _check_cohort(mesh, ndev, findings)
+    # the 2-D ("data","model") substrate: (1,1) on a single device, a
+    # genuinely 2-D (2, ndev/2) split when more are visible — the same
+    # entries must hold every contract with the model axis in play
+    mesh2 = make_sim_mesh2d((1, 1) if ndev == 1 else (2, ndev // 2))
+    checks += _check_flush(mesh2, ndev, findings)
+    checks += _check_cohort(mesh2, ndev, findings)
     return CompiledResult(findings, checks)
 
 

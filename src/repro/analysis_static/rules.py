@@ -439,30 +439,50 @@ class ViewDonationAlias(Rule):
 # ---------------------------------------------------------------------------
 
 
+def _static_argnames(call: ast.Call, fn) -> Set[str]:
+    """Parameter names a ``jit(...)`` call declares static
+    (``static_argnames`` str constants, ``static_argnums`` positions):
+    host values at trace time, exempt from traced-value rules."""
+    out: Set[str] = set()
+    positional = [p.arg for p in (*fn.args.posonlyargs, *fn.args.args)]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            out.update(n.value for n in ast.walk(kw.value)
+                       if isinstance(n, ast.Constant)
+                       and isinstance(n.value, str))
+        elif kw.arg == "static_argnums":
+            out.update(positional[n.value] for n in ast.walk(kw.value)
+                       if isinstance(n, ast.Constant)
+                       and isinstance(n.value, int)
+                       and 0 <= n.value < len(positional))
+    return out
+
+
 def _jitted_defs(tree: ast.Module):
-    """FunctionDefs that become jitted: decorated with (a partial of)
-    ``jax.jit``, or passed by name to a ``jax.jit(...)`` call in this file."""
-    jitted_names: Set[str] = set()
+    """``(FunctionDef, static_param_names)`` pairs for defs that become
+    jitted: decorated with (a partial of) ``jax.jit``, or passed by name to
+    a ``jax.jit(...)`` call in this file."""
+    jitted_names: Dict[str, ast.Call] = {}
     for node in ast.walk(tree):
         if isinstance(node, ast.Call) and last_segment(node.func) == "jit" \
                 and node.args and isinstance(node.args[0], ast.Name):
-            jitted_names.add(node.args[0].id)
+            jitted_names[node.args[0].id] = node
     for fn in _functions(tree):
         for dec in fn.decorator_list:
             if last_segment(dec) == "jit":
-                yield fn
+                yield fn, set()
                 break
             if isinstance(dec, ast.Call):
                 if last_segment(dec.func) == "jit":
-                    yield fn
+                    yield fn, _static_argnames(dec, fn)
                     break
                 if last_segment(dec.func) == "partial" and dec.args \
                         and last_segment(dec.args[0]) == "jit":
-                    yield fn
+                    yield fn, _static_argnames(dec, fn)
                     break
         else:
             if fn.name in jitted_names:
-                yield fn
+                yield fn, _static_argnames(jitted_names[fn.name], fn)
 
 
 @register
@@ -472,15 +492,17 @@ class HostSyncInJit(Rule):
     constant-fold a stale concretization — either way the one-dispatch
     contract is broken. Builtin casts are only flagged when their argument
     involves a traced value (a parameter of the jitted function or a
-    ``jnp``/``jax`` call); static python-int shape math stays legal."""
+    ``jnp``/``jax`` call); static python-int shape math stays legal, and
+    parameters declared in ``static_argnames``/``static_argnums`` are host
+    values at trace time, so casts on them are exempt."""
 
     name = "host-sync-in-jit"
     help = "host-sync call inside a jit-compiled body"
 
     def check(self, path, tree, source, facts):
         findings: List[Finding] = []
-        for fn in _jitted_defs(tree):
-            params = set(_all_params(fn))
+        for fn, static_params in _jitted_defs(tree):
+            params = set(_all_params(fn)) - static_params
             for node in ast.walk(fn):
                 if not isinstance(node, ast.Call):
                     continue

@@ -162,6 +162,73 @@ class UpdateBuffer:
         self._weights.append(float(weight))
         self.count += 1
 
+    def add_encoded_chunks(self, chunks: List[dict], weight: float = 1.0) -> None:
+        """Packed mode: ingest ONE upload that arrived as streamed row
+        chunks (``protocol.packed_qsgd_chunk_payload``) — the LLM-scale
+        uplink, where no single full packed message ever existed on a
+        device. The chunks are validated as a set (same layout/bits/n,
+        contiguous gap-free row coverage ``[0, rows_for(n))``) BEFORE any
+        state mutates, then assembled into one preallocated host-numpy
+        (rows, bytes) + (rows,) pair and stored exactly like an
+        ``add_encoded`` qsgd upload — the flush path cannot tell them
+        apart."""
+        if self.quantizer is None:
+            raise RuntimeError("add_encoded_chunks requires a quantizer "
+                               "(packed mode)")
+        if not chunks:
+            raise ValueError("empty chunk stream")
+        from repro.kernels import ops as kops
+        first = chunks[0]
+        if any(ch.get("format") != "packed_chunk" for ch in chunks):
+            raise ValueError("add_encoded_chunks expects packed_chunk "
+                             "payloads (see protocol.packed_qsgd_chunk_payload)")
+        if first["kind"] != "qsgd" or self.quantizer.spec.kind != "qsgd":
+            raise ValueError("chunk streaming is defined for qsgd uploads "
+                             f"(got {first['kind']!r} into a "
+                             f"{self.quantizer.spec.kind!r} buffer)")
+        for ch in chunks[1:]:
+            if (ch["layout"] != first["layout"] or ch["n"] != first["n"]
+                    or ch["bits"] != first["bits"]):
+                raise ValueError("inconsistent chunk stream: all chunks must "
+                                 "share one layout / n / bits")
+        if self._layout is not None:
+            if first["layout"] != self._layout:
+                raise ValueError("message layout mismatch: all buffered "
+                                 "uploads must encode the same pytree "
+                                 "structure")
+            if self._bits is not None and first["bits"] != self._bits:
+                raise ValueError(f"message bits mismatch: {first['bits']} != "
+                                 f"{self._bits}")
+        rows = kops.rows_for(first["n"])
+        ordered = sorted(chunks, key=lambda ch: ch["row0"])
+        cover = 0
+        for ch in ordered:
+            if ch["row0"] != cover:
+                raise ValueError(f"chunk stream has a gap/overlap at row "
+                                 f"{cover} (next chunk starts at "
+                                 f"{ch['row0']})")
+            if ch["norms"].shape[0] != ch["rows"] or ch["rows"] <= 0:
+                raise ValueError("corrupt chunk: rows/norms mismatch")
+            cover += ch["rows"]
+        if cover != rows:
+            raise ValueError(f"chunk stream covers {cover} rows, message "
+                             f"needs {rows}")
+        packed = np.empty((rows, ordered[0]["packed"].shape[-1]), np.uint8)
+        norms = np.empty((rows,), np.float32)
+        for ch in ordered:
+            r0, r1 = ch["row0"], ch["row0"] + ch["rows"]
+            packed[r0:r1] = np.asarray(ch["packed"])
+            norms[r0:r1] = np.asarray(ch["norms"])
+        if self._layout is None:
+            self._layout = first["layout"]
+            self._n = first["n"]
+        if self._bits is None:
+            self._bits = first["bits"]
+        self._packed.append((packed, norms))
+        self._weightsum += float(weight)
+        self._weights.append(float(weight))
+        self.count += 1
+
     @property
     def full(self) -> bool:
         return self.count >= self.capacity

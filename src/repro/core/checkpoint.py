@@ -59,16 +59,19 @@ def save_checkpoint(path, algo) -> None:
     re-places for whatever mesh the target ``algo`` holds.
     """
     st, buf = algo.state, algo.buffer
-    ndev = 1
+    ndev, axes, mesh_shape = 1, None, None
     if st.mesh is not None:
-        from repro.sharding.rules import mesh_data_extent
-        ndev = mesh_data_extent(st.mesh)
+        from repro.sharding.rules import flat_axes, mesh_flat_extent
+        ndev = mesh_flat_extent(st.mesh)
+        axes = list(flat_axes(st.mesh))
+        mesh_shape = [int(st.mesh.shape[a]) for a in axes]
     meta = {
         "version": CHECKPOINT_VERSION,
         "t": int(st.t),
         "layout": _layout_fingerprint(st.layout),
         "sharding": {"devices": ndev,
-                     "axis": None if st.mesh is None else "data",
+                     "axes": axes,
+                     "mesh_shape": mesh_shape,
                      "n": int(st.layout.total_size),
                      "n_padded": int(st.x_flat.shape[0])},
         "quantizers": {"client": algo.cq.spec.label(),

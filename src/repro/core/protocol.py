@@ -121,6 +121,41 @@ def frame_cohort_messages(kind: str, quantizer: Quantizer, out: dict,
                                            count=count, to_numpy=to_numpy)]
 
 
+def packed_qsgd_chunk_payload(packed_c, norms_c, bits: int, n: int,
+                              layout: TreeLayout, *, row0: int, seq: int,
+                              last: bool) -> dict:
+    """One streamed segment of a packed qsgd upload: ``packed_c`` /
+    ``norms_c`` are the wire rows ``[row0, row0 + len(norms_c))`` of the
+    full ``(rows_for(n), ...)`` message. The chunk is self-describing
+    (bits / n / layout ride on every chunk) so a receiver can validate it
+    against its buffer window before any chunk mutates state."""
+    return {"format": "packed_chunk", "kind": "qsgd", "packed": packed_c,
+            "norms": norms_c, "bits": bits, "n": n, "layout": layout,
+            "row0": int(row0), "rows": int(norms_c.shape[0]),
+            "seq": int(seq), "last": bool(last)}
+
+
+def frame_chunk_messages(kind: str, quantizer: Quantizer, chunks: List[dict],
+                         layout: TreeLayout, *, version: int = 0,
+                         stream: int = 0) -> List[Message]:
+    """Frame the streamed chunks of ONE upload as wire Messages.
+
+    Per-chunk wire bytes are the chunk's packed codes + one fp32 norm per
+    row; the LAST chunk absorbs the rounding remainder so the stream's
+    total is EXACTLY ``wire_bytes_packed(layout)`` — byte accounting is
+    conserved against the unstreamed message, chunk count notwithstanding.
+    """
+    total = quantizer.wire_bytes_packed(layout)
+    msgs, spent = [], 0.0
+    for ch in chunks:
+        wire = (total - spent if ch["last"]
+                else float(ch["packed"].size + 4 * ch["rows"]))
+        spent += wire
+        msgs.append(Message(kind=kind, payload=ch, wire_bytes=wire,
+                            meta={"version": version, "stream": stream}))
+    return msgs
+
+
 def decode_message(quantizer: Quantizer, msg: Message):
     return quantizer.decode(msg.payload)
 

@@ -45,8 +45,9 @@ from repro.core.buffer import FlushBatch, UpdateBuffer
 from repro.core.hidden_state import HiddenState
 from repro.core.protocol import (CLIENT_UPDATE, HIDDEN_BROADCAST, Message,
                                  TrafficMeter, decode_message,
-                                 encode_message_flat, frame_cohort_messages,
-                                 frame_packed_message)
+                                 encode_message_flat, frame_chunk_messages,
+                                 frame_cohort_messages, frame_packed_message,
+                                 packed_qsgd_chunk_payload)
 from repro.core.quantizers import (Quantizer, TreeLayout, flatten_tree,
                                    make_quantizer, packed_identity_payload,
                                    packed_qsgd_payload)
@@ -134,7 +135,8 @@ def client_update(loss_fn: Callable, qcfg: QAFeLConfig, x_hat, batches, key,
 def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
                        hidden_flat, batches, k_train, k_enc, flag, *, b: int,
                        with_loss: bool = False, batched: Optional[bool] = None,
-                       taps: bool = False, tap_gather=None):
+                       taps: bool = False, tap_gather=None,
+                       chunk_rows: Optional[int] = None, row_block=None):
     """Flat-in / packed-out client pipeline: the traceable body of the fused
     cohort train+encode dispatch (``kernels.ops.cohort_train_encode_step``).
 
@@ -171,10 +173,26 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
     hard-boundary cond in the same dispatch. ``tap_gather`` (from the jit
     factory) pins the tap inputs to a replicated layout first, so a
     sharded caller's tap reductions keep the meshless f32 grouping.
+
+    ``chunk_rows`` tiles the qsgd encode over fixed-size wire-row chunks
+    inside the same dispatch (``quantizers.qsgd_encode_flat2d``) — the
+    chunked-streaming mode of the LLM-scale substrate; bit-invisible
+    because the dither keys on global element indices. ``row_block``
+    (``(axis_name, n_model)``, batched callers inside a 2-D shard_map only)
+    makes this device emit ONLY its model-axis row segment of the packed
+    codes: the flat delta is padded to ``n_model`` whole-bucket-row
+    segments, this device's segment is sliced out, and the counter-hash
+    dither is keyed by the segment's global row offset — so the
+    concatenation over model ranks is the single-device wire bits exactly,
+    and full packed codes never materialize per device. Taps under
+    ``row_block`` all_gather the packed segments back (the ONLY model-axis
+    collective on the cohort path, and it moves wire-sized uint8 codes,
+    not f32).
     """
     from repro.core.quantizers import (flatten_stacked_leaves,
-                                       qsgd_encode_flat2d)
+                                       qsgd_encode_flat2d, qsgd_encode_rows)
     from repro.kernels import ops as kops  # local import: kernels are optional
+    from repro.kernels import qsgd as _kq
 
     # ``batched`` decouples the dispatch shape from the dither/stacking
     # convention: a sharded tier-group's per-device slice can hold ONE
@@ -192,8 +210,34 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
     deltas, losses = res if with_loss else (res, None)
     flat2d = boundary(flatten_stacked_leaves(jax.tree.leaves(deltas), b))
     if spec.kind == "qsgd":
-        packed, norms = qsgd_encode_flat2d(flat2d, k_enc, spec.bits,
-                                           threefry=not batched)
+        if row_block is None:
+            packed, norms = qsgd_encode_flat2d(flat2d, k_enc, spec.bits,
+                                               threefry=not batched,
+                                               chunk_rows=chunk_rows)
+        else:
+            # 2-D mesh: encode ONLY this device's model-axis row segment of
+            # the (already-trained, model-replicated) delta stack; the
+            # global row offset keys the dither, so the model-concatenated
+            # codes equal the single-device encode bit for bit
+            if not batched:
+                raise ValueError("row_block requires the batched "
+                                 "counter-hash dither convention")
+            axis, nm = row_block
+            d = flat2d.shape[1]
+            rows = -(-d // _kq.LANES)
+            rows_pad = -(-rows // nm) * nm
+            cpad = rows_pad * _kq.LANES - d
+            xp = flat2d if not cpad else jnp.concatenate(
+                [flat2d, jnp.zeros((b, cpad), flat2d.dtype)], axis=1)
+            x3 = xp.reshape(b, rows_pad, _kq.LANES)
+            rows_l = rows_pad // nm
+            midx = jax.lax.axis_index(axis)
+            x3_l = jax.lax.dynamic_slice_in_dim(x3, midx * rows_l, rows_l,
+                                                axis=1)
+            seeds = jnp.asarray(k_enc).reshape(b, -1)[:, :2].astype(jnp.uint32)
+            packed, norms = qsgd_encode_rows(
+                x3_l, seeds, spec.bits, (midx * rows_l).astype(jnp.uint32),
+                chunk_rows=chunk_rows)
         out = {"packed": packed, "norms": norms}
     else:
         out = {"flat": flat2d}
@@ -207,8 +251,14 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
             # graph; identity uploads wire the raw delta (error exactly 0)
             # and sparse kinds are host-encoded after the dispatch
             # (reported as 0 here)
-            q2d = decode_qsgd_stack(out["packed"], out["norms"], spec.bits,
-                                    flat2d.shape[1])
+            p_, n_ = out["packed"], out["norms"]
+            if row_block is not None:
+                # gather-to-replicated BEFORE reducing along d (the taps
+                # sharding-invariance law): every model rank reconstructs
+                # the full wire bits and reduces the single-device shapes
+                p_ = jax.lax.all_gather(p_, row_block[0], axis=1, tiled=True)
+                n_ = jax.lax.all_gather(n_, row_block[0], axis=1, tiled=True)
+            q2d = decode_qsgd_stack(p_, n_, spec.bits, flat2d.shape[1])
             if tap_gather is not None:
                 q2d = tap_gather(q2d)
         out["taps"] = cohort_tap_rows(boundary, t2d, q2d)
@@ -286,9 +336,9 @@ def place_flat_on_mesh(flat, mesh, n: int) -> jnp.ndarray:
     NamedSharding. Always returns a fresh buffer (the flush donates these,
     so no two state vectors may alias)."""
     from repro.sharding.rules import (flat_padded_len, flat_vector_sharding,
-                                      mesh_data_extent)
+                                      mesh_flat_extent)
 
-    n_pad = flat_padded_len(n, mesh_data_extent(mesh))
+    n_pad = flat_padded_len(n, mesh_flat_extent(mesh))
     flat = jnp.asarray(flat, jnp.float32).reshape(-1)[:n]
     if n_pad > n:
         flat = jnp.concatenate([flat, jnp.zeros((n_pad - n,), flat.dtype)])
@@ -393,13 +443,19 @@ class QAFeL:
     """
 
     def __init__(self, qcfg: QAFeLConfig, loss_fn: Callable, params0,
-                 mesh=None, telemetry=None):
+                 mesh=None, telemetry=None, chunk_rows=None):
         self.qcfg = qcfg
         self.loss_fn = loss_fn
         self.cq = qcfg.cq()
         self.sq = qcfg.sq()
         self.mesh = mesh
         self.telemetry = telemetry
+        # LLM-scale streaming: tile the client encode and the sharded flush
+        # over fixed-size wire-row chunks (bit-invisible; see
+        # kernels.ops.server_flush_step_sharded / quantizers.qsgd_encode_*)
+        self.chunk_rows = int(chunk_rows) if chunk_rows else None
+        # in-flight chunk-streamed uploads, keyed by (client, stream, version)
+        self._pending_chunks: Dict[Any, list] = {}
         self._taps = bool(telemetry is not None and telemetry.taps)
         self.state = ServerState.init(params0, mesh=mesh)
         # the runtime-True predicate behind the fused flush's hard
@@ -433,13 +489,65 @@ class QAFeL:
         out = kops.cohort_train_encode_step(
             self.loss_fn, self.qcfg, self.cq.spec, st.layout, st.hidden_flat,
             batches, k_train, k_enc, self._flag, b=1, mesh=self.mesh,
-            taps=self._taps)
+            taps=self._taps, chunk_rows=self.chunk_rows)
         msg = frame_cohort_messages(CLIENT_UPDATE, self.cq, out, st.layout,
                                     enc_keys=[k_enc], version=st.t)[0]
         if self._taps:
             from repro.obs.taps import named_cohort_taps
             msg.meta["taps"] = named_cohort_taps(out["taps"][0])
         return msg, st.t
+
+    def run_client_stream(self, batches, key, *,
+                          chunk_rows=None) -> Tuple[list, int]:
+        """Algorithm 2 with a memory-bounded uplink: one fused train
+        dispatch produces the flat delta, then a host loop of per-chunk
+        quantize-encode dispatches (``kernels.ops.qsgd_quantize_chunk``)
+        streams the packed wire rows out ``chunk_rows`` rows at a time —
+        the full packed message never materializes on a device, only one
+        chunk of codes at any moment. The threefry dither is keyed by the
+        GLOBAL wire-row index, so the streamed chunks reassemble to the
+        fused ``run_client`` message bit for bit (pinned in
+        tests/test_mesh2d.py). Returns ``(chunk messages, version)``; feed
+        the messages to ``receive`` in any order — the buffer validates
+        and reassembles the stream (``UpdateBuffer.add_encoded_chunks``).
+        """
+        from repro.kernels import ops as kops  # local import: kernels optional
+
+        if self.cq.spec.kind != "qsgd":
+            raise ValueError("streamed uploads are defined for qsgd client "
+                             f"quantizers (got {self.cq.spec.kind!r})")
+        c = int(chunk_rows if chunk_rows else (self.chunk_rows or 0))
+        if c <= 0:
+            raise ValueError("run_client_stream needs chunk_rows (argument "
+                             "or QAFeL(chunk_rows=...))")
+        k_train, k_enc = jax.random.split(key)
+        st = self.state
+        # identity-spec fused step = the SAME train math as run_client's
+        # dispatch, returning the flat delta instead of encoding in-jit
+        out = kops.cohort_train_encode_step(
+            self.loss_fn, self.qcfg, make_quantizer("identity").spec,
+            st.layout, st.hidden_flat, batches, k_train, k_enc, self._flag,
+            b=1, mesh=self.mesh)
+        delta = out["flat"][0]
+        n, bits = st.n, self.cq.spec.bits
+        rows = kops.rows_for(n)
+        nch = -(-rows // c)
+        pad = nch * c * kops.BUCKET - n
+        if pad:  # zero tail: padded rows encode to zero codes, sliced off
+            delta = jnp.concatenate([delta, jnp.zeros((pad,), delta.dtype)])
+        chunks = []
+        for i in range(nch):
+            r0 = i * c
+            p_c, n_c = kops.qsgd_quantize_chunk(
+                delta[r0 * kops.BUCKET:(r0 + c) * kops.BUCKET], k_enc, r0,
+                bits=bits, total_rows=rows)
+            rc = min(c, rows - r0)  # true rows of the tail chunk
+            chunks.append(packed_qsgd_chunk_payload(
+                np.asarray(p_c[:rc]), np.asarray(n_c[:rc]), bits, n,
+                st.layout, row0=r0, seq=i, last=(i == nch - 1)))
+        msgs = frame_chunk_messages(CLIENT_UPDATE, self.cq, chunks, st.layout,
+                                    version=st.t, stream=st.t)
+        return msgs, st.t
 
     # -- checkpoint / resume ----------------------------------------------
     def save_checkpoint(self, path) -> None:
@@ -464,6 +572,9 @@ class QAFeL:
         ``n_receivers`` is the number of concurrently active clients the
         resulting broadcast fans out to (downlink byte accounting).
         """
+        if (isinstance(msg.payload, dict)
+                and msg.payload.get("format") == "packed_chunk"):
+            return self._receive_chunk(msg, key, n_receivers)
         version = msg.meta["version"]
         if version > self.state.t:
             # clock-skew / replay guard: a client cannot have trained on a
@@ -507,6 +618,49 @@ class QAFeL:
                                              weight=w, layout=payload["layout"])
         else:  # legacy per-leaf message: decode eagerly
             self.buffer.add(decode_message(self.cq, msg), weight=w)
+        if not self.buffer.full:
+            return None
+        return self._flush(key, n_receivers)
+
+    def _receive_chunk(self, msg: Message, key,
+                       n_receivers: int) -> Optional[Message]:
+        """One streamed chunk of an upload (``run_client_stream``). The
+        stream meters as ONE upload when it completes, with its summed chunk
+        bytes (equal to the unstreamed message's wire total exactly —
+        ``frame_chunk_messages``), so traffic summaries are identical to the
+        fused uplink's; the staleness decision and the buffer insert also
+        happen once, at completion, against the server clock at that time."""
+        version = msg.meta["version"]
+        if version > self.state.t:
+            raise ValueError(
+                f"message version {version} is ahead of the server clock "
+                f"t={self.state.t} (clock skew or replay)")
+        sid = (msg.meta.get("client", -1), msg.meta.get("stream", 0), version)
+        pend = self._pending_chunks.setdefault(sid, [[], 0])
+        pend[0].append(msg.payload)
+        pend[1] += msg.wire_bytes
+        if not msg.payload["last"]:
+            return None
+        chunks, stream_bytes = self._pending_chunks.pop(sid)
+        tau = self.state.t - version
+        if self.staleness.would_drop(tau):
+            self.meter.uploads_dropped += 1
+            self.meter.dropped_bytes += stream_bytes
+            self.staleness.record_dropped(tau)
+            if self.telemetry is not None:
+                self.telemetry.emit("drop", step=self.state.t,
+                                    client=msg.meta.get("client", -1),
+                                    tau=tau, reason="stale")
+            return None
+        self.meter.uploads += 1
+        self.meter.upload_bytes += stream_bytes
+        self.staleness.observe(tau)
+        w = (1.0 / math.sqrt(1.0 + tau)) if self.qcfg.staleness_scaling else 1.0
+        if self.telemetry is not None:
+            self.telemetry.emit("upload", step=self.state.t,
+                                client=msg.meta.get("client", -1),
+                                tau=tau, weight=w)
+        self.buffer.add_encoded_chunks(chunks, weight=w)
         if not self.buffer.full:
             return None
         return self._flush(key, n_receivers)
@@ -564,7 +718,8 @@ class QAFeL:
                     stack, norms, batch.weights, extra, key2d, self._flag,
                     bits=bits, sbits=sbits, lr=self.qcfg.server_lr,
                     beta=beta, mesh=self.mesh,
-                    n=batch.n if self._taps else None, taps=self._taps)
+                    n=batch.n if self._taps else None, taps=self._taps,
+                    chunk_rows=self.chunk_rows)
                 x_new, h_new, m_new, payload = out[:4]
                 if self._taps:
                     tap_vec = out[4]

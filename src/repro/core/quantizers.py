@@ -204,8 +204,51 @@ def flatten_stacked_leaves(leaves, b: int) -> jnp.ndarray:
         [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
 
 
+def qsgd_encode_rows(x3d: jnp.ndarray, seeds, bits: int, row_off, *,
+                     chunk_rows=None):
+    """Counter-hash quantize-pack of a ``(B, R, 128)`` row block whose first
+    row sits at GLOBAL wire row ``row_off`` (a traced value is fine — the
+    sharded and streamed callers pass axis-index offsets).
+
+    The dither keys on the global element index, so ANY tiling of the rows
+    — ``chunk_rows``-sized ``lax.scan`` chunks here, model-axis segments in
+    the 2-D cohort step, host-streamed chunks in ``QAFeL.run_client`` —
+    emits the same wire bits as one whole-message encode. ``chunk_rows``
+    bounds the f32 dither/code transients to one chunk at a time (the tail
+    chunk is zero-row-padded; zero rows emit zero codes and are sliced
+    off). Returns ``(packed (B, R, 128*bits//8), norms (B, R))``.
+    """
+    from repro.kernels import qsgd as _kq  # local import: kernels are optional
+
+    b, rows, lanes = x3d.shape
+    if chunk_rows is None or chunk_rows >= rows:
+        packed, norm = _kq._quantize_pack_batch_block(
+            x3d, seeds[:, 0], seeds[:, 1], row_off, bits)
+        return packed, norm.reshape(b, rows)
+    c = int(chunk_rows)
+    nch = -(-rows // c)
+    rpad = nch * c - rows
+    if rpad:
+        x3d = jnp.concatenate(
+            [x3d, jnp.zeros((b, rpad, lanes), x3d.dtype)], axis=1)
+    x4 = x3d.reshape(b, nch, c, lanes).transpose(1, 0, 2, 3)
+    row_off = jnp.asarray(row_off).astype(jnp.uint32)
+
+    def body(_, xs):
+        x_c, i = xs
+        p_c, n_c = _kq._quantize_pack_batch_block(
+            x_c, seeds[:, 0], seeds[:, 1], row_off + i * jnp.uint32(c), bits)
+        return None, (p_c, n_c.reshape(b, c))
+
+    _, (p4, n4) = jax.lax.scan(body, None,
+                               (x4, jnp.arange(nch, dtype=jnp.uint32)))
+    packed = p4.transpose(1, 0, 2, 3).reshape(b, nch * c, -1)[:, :rows]
+    norms = n4.transpose(1, 0, 2).reshape(b, nch * c)[:, :rows]
+    return packed, norms
+
+
 def qsgd_encode_flat2d(flat2d: jnp.ndarray, keys, bits: int, *,
-                       threefry: bool = False):
+                       threefry: bool = False, chunk_rows=None):
     """Traceable batched quantize-pack over an already-flat ``(B, n)`` stack.
 
     The in-jit callee behind the fused cohort train+encode step
@@ -223,6 +266,14 @@ def qsgd_encode_flat2d(flat2d: jnp.ndarray, keys, bits: int, *,
       uses the batched entry's in-kernel counter-hash dither, bit-identical
       to ``kernels.ops.qsgd_quantize_batch``.
 
+    ``chunk_rows`` tiles the encode over fixed-size row chunks inside one
+    ``lax.scan`` so no full-width f32 dither/code transient materializes:
+    the counter-hash path keys on global element indices and the threefry
+    path reproduces exact chunks of the whole-message uniform field
+    (``kernels.qsgd.threefry_uniform_rows``), so the emitted wire bits are
+    IDENTICAL to the unchunked encode for any chunk size (pinned in
+    tests/test_mesh2d.py).
+
     Returns ``(packed uint8 (B, rows, 128*bits//8), norms f32 (B, rows))``
     in wire layout.
     """
@@ -239,14 +290,29 @@ def qsgd_encode_flat2d(flat2d: jnp.ndarray, keys, bits: int, *,
             raise ValueError("threefry dither is the single-message path; "
                              f"got B={b}")
         x2d = flat2d.reshape(rows, _kq.LANES)
+        if chunk_rows is not None and chunk_rows < rows:
+            c = int(chunk_rows)
+            nch = -(-rows // c)
+            rpad = nch * c - rows
+            if rpad:
+                x2d = jnp.concatenate(
+                    [x2d, jnp.zeros((rpad, _kq.LANES), x2d.dtype)])
+            x3 = x2d.reshape(nch, c, _kq.LANES)
+
+            def body(_, xs):
+                x_c, i = xs
+                u_c = _kq.threefry_uniform_rows(keys, i * c, c, rows)
+                return None, _kq._quantize_pack_block(x_c, u_c, bits)
+
+            _, (p3, n3) = jax.lax.scan(body, None, (x3, jnp.arange(nch)))
+            return (p3.reshape(nch * c, -1)[:rows][None],
+                    n3.reshape(nch * c)[:rows].reshape(1, rows))
         u2d = jax.random.uniform(keys, (rows, _kq.LANES), dtype=jnp.float32)
         packed, norm = _kq._quantize_pack_block(x2d, u2d, bits)
         return packed[None], norm.reshape(1, rows)
     x3d = flat2d.reshape(b, rows, _kq.LANES)
     seeds = jnp.asarray(keys).reshape(b, -1)[:, :2].astype(jnp.uint32)
-    packed, norm = _kq._quantize_pack_batch_block(
-        x3d, seeds[:, 0], seeds[:, 1], 0, bits)
-    return packed, norm.reshape(b, rows)
+    return qsgd_encode_rows(x3d, seeds, bits, 0, chunk_rows=chunk_rows)
 
 
 def qsgd_pack_lastdim(x: jnp.ndarray, key, bits: int, bucket: int = 128):

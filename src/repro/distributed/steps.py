@@ -72,8 +72,16 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
                      remat: bool = True,
                      window_override: Optional[int] = None,
                      pod_quantized: bool = False, mesh=None,
-                     podq_bits: int = 4, taps: bool = False) -> Callable:
+                     podq_bits: int = 4, taps: bool = False,
+                     chunk_rows: Optional[int] = None) -> Callable:
     """Build the jittable round function for a decoder architecture.
+
+    ``chunk_rows`` streams both wire encodes (the per-client upload and the
+    hidden-state broadcast) through fixed-size bucket-row chunks — the
+    LLM-scale memory lever: full packed code buffers never materialize at
+    once. The counter-hash / threefry dither is keyed by global element
+    index, so any chunk size produces bit-identical codes (``None`` = one
+    unchunked encode, the small-model default).
 
     ``taps=True`` adds the flush metric tap vector
     (``repro.obs.taps.FLUSH_TAP_NAMES`` layout) to the round's metrics dict
@@ -141,7 +149,8 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
             k_train, k_enc = jax.random.split(key_k)
             out, losses = client_update_flat(
                 loss, qcfg, cq.spec, layout, hidden_flat, batches_kp,
-                k_train, k_enc, flag, b=1, with_loss=True)
+                k_train, k_enc, flag, b=1, with_loss=True,
+                chunk_rows=chunk_rows)
             buf = buf + w_k * decode_client_flat(out, k_enc, d)
             return (buf, loss_sum + losses.mean()), None
 
@@ -160,7 +169,7 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
         diff = x_new - hidden_flat
         if sq.spec.kind == "qsgd":
             bp, bn = qsgd_encode_flat2d(diff[None], k_server, sq.spec.bits,
-                                        threefry=True)
+                                        threefry=True, chunk_rows=chunk_rows)
             q = kops.qsgd_dequantize(bp[0], bn[0], sq.spec.bits, d)
         elif sq.spec.kind == "identity":
             q = diff

@@ -113,6 +113,55 @@ def qsgd_quantize_batch(flat_batch: jnp.ndarray, keys, bits: int = 4):
     return packed, norms.reshape(b, rows)
 
 
+# Trace counter for the streaming chunk encode, mirroring the fused-entry
+# counters: the host-driven streaming client (``QAFeL`` with ``chunk_rows``)
+# deliberately dispatches this once per chunk — it is NOT a fused single
+# dispatch and is therefore NOT in KERNEL_ENTRY_POINTS — but it must compile
+# once per chunk SHAPE (row_start is traced), not once per chunk.
+ENCODE_CHUNK_TRACES = 0
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "total_rows", "threefry"))
+def qsgd_quantize_chunk(flat_chunk: jnp.ndarray, key, row_start, *,
+                        bits: int, total_rows: int, threefry: bool = True):
+    """Encode rows ``[row_start, row_start + rows_c)`` of a flat message of
+    ``total_rows`` wire rows — the streaming quantize-encode of the
+    LLM-scale substrate: full packed codes never materialize on one device;
+    each dispatch sees one fixed-size flat chunk and emits its wire rows.
+
+    ``flat_chunk`` is ``(rows_c * 128,)`` f32 (the caller zero-pads the tail
+    chunk's last row; zero elements encode to zero codes). ``row_start`` is
+    TRACED — one compilation covers every chunk of a given shape.
+
+    Bit-exactness with the whole-message entries, for any chunking:
+
+    * ``threefry=True`` reproduces ``qsgd_quantize``'s b=1 wire convention:
+      the dither rows are exact chunks of the full
+      ``jax.random.uniform(key, (total_rows, 128))`` field
+      (``qsgd.threefry_uniform_rows`` rebuilds jax's counter pairing per
+      flat index, which is why ``total_rows`` must be the TRUE total).
+    * ``threefry=False`` is the batched counter-hash convention keyed by
+      the global element index (``row_start`` is the counter offset);
+      ``total_rows`` is ignored by the math but kept in the signature so
+      both paths compile per (shape, message-size) pair.
+
+    Returns ``(packed uint8 (rows_c, 128*bits//8), norms f32 (rows_c,))``.
+    """
+    global ENCODE_CHUNK_TRACES
+    ENCODE_CHUNK_TRACES += 1
+    x2d = flat_chunk.astype(jnp.float32).reshape(-1, BUCKET)
+    if threefry:
+        u2d = _qsgd.threefry_uniform_rows(jnp.asarray(key), row_start,
+                                          x2d.shape[0], total_rows)
+        packed, norms = _qsgd._quantize_pack_block(x2d, u2d, bits)
+        return packed, norms.reshape(-1)
+    seeds = jnp.asarray(key).reshape(1, -1)[:, :2].astype(jnp.uint32)
+    p3, n3 = _qsgd._quantize_pack_batch_block(
+        x2d[None], seeds[:, 0], seeds[:, 1],
+        jnp.asarray(row_start).astype(jnp.uint32), bits)
+    return p3[0], n3.reshape(-1)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "n"))
 def qsgd_dequantize(packed: jnp.ndarray, norms: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
     """Dequantize wire-layout packed codes back to a flat f32 vector of
@@ -188,13 +237,73 @@ def hard_boundary(flag, vals):
 COHORT_STEP_TRACES = 0
 
 
+def _index_pad_members(b: int, b_pad: int, batches, k_train, k_enc):
+    """Index-pad the member dim from b to b_pad by repeating member 0 (the
+    padding's outputs are sliced off by the caller)."""
+    k_train, k_enc = jnp.asarray(k_train), jnp.asarray(k_enc)
+    if b_pad == b:
+        return batches, k_train, k_enc
+    idx = jnp.concatenate([jnp.arange(b), jnp.zeros((b_pad - b,), jnp.int32)])
+    return (jax.tree.map(lambda l: jnp.take(l, idx, axis=0), batches),
+            jnp.take(k_train, idx, axis=0), jnp.take(k_enc, idx, axis=0))
+
+
+def _scan_member_chunks(call, b: int, mc: int, batches, k_train, k_enc):
+    """Run the per-chunk client pipeline ``call(batches, k_train, k_enc)``
+    (a ``client_update_flat`` closure at b=mc) over ``ceil(b / mc)``
+    member-chunks inside ONE ``lax.scan`` — still a single dispatch, but
+    each chunk's train+encode working set stays cache-resident instead of
+    streaming the whole (b, d) stack through memory per pass. This is the
+    d=98304 parity lever: per-member math is independent and the batched
+    counter-hash dither keys only on (member seed, global element index),
+    so the wire bits are identical to the whole-cohort vmap for any mc.
+    b is index-padded to a chunk multiple (member-0 repeats, sliced off)."""
+    nch = -(-b // mc)
+    batches, k_train, k_enc = _index_pad_members(b, nch * mc, batches,
+                                                 k_train, k_enc)
+
+    def resh(l):
+        return l.reshape((nch, mc) + l.shape[1:])
+
+    xs = (jax.tree.map(resh, batches), resh(k_train), resh(k_enc))
+
+    def body(_, x):
+        return None, call(*x)
+
+    _, ys = jax.lax.scan(body, None, xs)
+    return {k: v.reshape((nch * mc,) + v.shape[2:])[:b]
+            for k, v in ys.items()}
+
+
+class _PaddedMemberStep:
+    """Callable façade over the jitted sharded cohort step that index-pads
+    the member dim EAGERLY (host-side) before dispatch. ``lower`` pads the
+    same way, so flcheck's compiled-HLO pass sees the real executable."""
+
+    def __init__(self, inner, b: int, b_pad: int):
+        self._inner, self._b, self._b_pad = inner, b, b_pad
+
+    def _pad(self, batches, k_train, k_enc):
+        return _index_pad_members(self._b, self._b_pad, batches, k_train,
+                                  k_enc)
+
+    def __call__(self, hidden_flat, batches, k_train, k_enc, flag):
+        batches, k_train, k_enc = self._pad(batches, k_train, k_enc)
+        return self._inner(hidden_flat, batches, k_train, k_enc, flag)
+
+    def lower(self, hidden_flat, batches, k_train, k_enc, flag):
+        batches, k_train, k_enc = self._pad(batches, k_train, k_enc)
+        return self._inner.lower(hidden_flat, batches, k_train, k_enc, flag)
+
+
 @functools.lru_cache(maxsize=64)
 def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
-                    taps: bool = False):
+                    taps: bool = False, member_chunk=None, chunk_rows=None):
     """jit of the flat-in/packed-out client pipeline, cached by
-    (loss_fn, qcfg, quantizer spec, layout, cohort size, mesh, taps) so
-    engine instances, benchmark sweeps and scenario tiers share
-    compilations. Bounded: loss_fn closures can capture datasets.
+    (loss_fn, qcfg, quantizer spec, layout, cohort size, mesh, taps,
+    member_chunk, chunk_rows) so engine instances, benchmark sweeps and
+    scenario tiers share compilations. Bounded: loss_fn closures can
+    capture datasets.
 
     With a ("data",) ``mesh`` and b > 1 the cohort member dim is sharded
     via shard_map: each device trains its member slice of the tier-group
@@ -211,8 +320,28 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
     takes the unsharded path: a single message cannot shard over members,
     and its threefry dither is the sequential engine's pinned wire
     contract.
+
+    With a 2-D ("data","model") mesh the member dim still shards over
+    "data" while each member's ENCODE shards its wire rows over "model":
+    training is replicated along "model" (the honest tradeoff — the model
+    axis buys packed-code memory, not training FLOPs), each model rank
+    slices its whole-bucket-row segment of the flat delta and encodes it
+    with the segment's GLOBAL row offset keying the counter-hash dither,
+    so the model-concatenated codes are the single-device wire bits
+    exactly. The one model-axis collective on this path is the x-hat
+    all-gather GSPMD inserts at the dispatch boundary (the replicated
+    in_spec); taps add a wire-sized uint8 all_gather (see
+    ``client_update_flat``).
+
+    ``member_chunk`` tiles the member dim over mc-sized lax.scan chunks
+    inside the same dispatch (``_scan_member_chunks`` — the cache-locality
+    lever); ``chunk_rows`` tiles each encode over fixed-size wire-row
+    chunks (``quantizers.qsgd_encode_flat2d``). Both are bit-invisible.
     """
     from repro.core.qafel import client_update_flat  # lazy: kernels stay core-free
+
+    mc = (int(member_chunk)
+          if member_chunk is not None and b > member_chunk else None)
 
     if mesh is None or b == 1:
         gather = None
@@ -232,65 +361,104 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
         def step(hidden_flat, batches, k_train, k_enc, flag):
             global COHORT_STEP_TRACES
             COHORT_STEP_TRACES += 1
-            return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
-                                      batches, k_train, k_enc, flag, b=b,
-                                      taps=taps, tap_gather=gather)
+            if mc is None:
+                return client_update_flat(
+                    loss_fn, qcfg, spec, layout, hidden_flat, batches,
+                    k_train, k_enc, flag, b=b, taps=taps, tap_gather=gather,
+                    chunk_rows=chunk_rows)
+            return _scan_member_chunks(
+                lambda bt, kt, ke: client_update_flat(
+                    loss_fn, qcfg, spec, layout, hidden_flat, bt, kt, ke,
+                    flag, b=mc, batched=True, taps=taps, tap_gather=gather,
+                    chunk_rows=chunk_rows),
+                b, mc, batches, k_train, k_enc)
 
         return jax.jit(step)
 
     from jax.sharding import PartitionSpec as P
 
     from repro.common.compat import shard_map as _shard_map
-    from repro.sharding.rules import mesh_data_extent
+    from repro.sharding.rules import (FLAT_MODEL_AXIS, mesh_data_extent,
+                                      mesh_model_extent)
 
     ndev = mesh_data_extent(mesh)
+    nm = mesh_model_extent(mesh)
     b_pad = -(-b // ndev) * ndev
     b_loc = b_pad // ndev
+    row_block = ((FLAT_MODEL_AXIS, nm)
+                 if nm > 1 and spec.kind == "qsgd" else None)
+    mc_loc = (int(member_chunk)
+              if member_chunk is not None and b_loc > member_chunk else None)
 
     def member_slice(hidden_flat, batches, k_train, k_enc, flag):
         # batched=True even at b_loc == 1: every member's wire bits must be
         # the batched counter-hash convention of the whole-cohort dispatch
-        return client_update_flat(loss_fn, qcfg, spec, layout, hidden_flat,
-                                  batches, k_train, k_enc, flag, b=b_loc,
-                                  batched=True, taps=taps)
+        def call(bt, kt, ke, bb):
+            return client_update_flat(loss_fn, qcfg, spec, layout,
+                                      hidden_flat, bt, kt, ke, flag, b=bb,
+                                      batched=True, taps=taps,
+                                      chunk_rows=chunk_rows,
+                                      row_block=row_block)
+
+        if mc_loc is None:
+            return call(batches, k_train, k_enc, b_loc)
+        return _scan_member_chunks(
+            lambda bt, kt, ke: call(bt, kt, ke, mc_loc),
+            b_loc, mc_loc, batches, k_train, k_enc)
 
     if spec.kind == "qsgd":
-        out_specs = {"norms": P("data", None), "packed": P("data", None, None)}
+        if row_block is not None:
+            # wire rows shard over "model"; members over "data"
+            out_specs = {"norms": P("data", FLAT_MODEL_AXIS),
+                         "packed": P("data", FLAT_MODEL_AXIS, None)}
+        else:
+            out_specs = {"norms": P("data", None),
+                         "packed": P("data", None, None)}
     else:
         out_specs = {"flat": P("data", None)}
     if taps:
         # per-member tap rows shard over members like every other output;
         # each member's reduction runs over its own full (d,) row, so the
-        # values are independent of the member-dim sharding
+        # values are independent of the member-dim sharding (under a 2-D
+        # mesh they are replicated along "model" — every model rank
+        # reconstructs the full wire bits before reducing)
         out_specs["taps"] = P("data", None)
 
     def lead_spec(leaf):
         return P(*(["data"] + [None] * (leaf.ndim - 1)))
 
+    rows = -(-layout.total_size // BUCKET)
+
     def step(hidden_flat, batches, k_train, k_enc, flag):
         global COHORT_STEP_TRACES
         COHORT_STEP_TRACES += 1
-        k_train, k_enc = jnp.asarray(k_train), jnp.asarray(k_enc)
-        if b_pad != b:
-            idx = jnp.concatenate(
-                [jnp.arange(b), jnp.zeros((b_pad - b,), jnp.int32)])
-            batches = jax.tree.map(lambda l: jnp.take(l, idx, axis=0), batches)
-            k_train = jnp.take(k_train, idx, axis=0)
-            k_enc = jnp.take(k_enc, idx, axis=0)
         sm = _shard_map(
             member_slice, mesh=mesh,
             in_specs=(P(), jax.tree.map(lead_spec, batches),
                       lead_spec(k_train), lead_spec(k_enc), P()),
             out_specs=out_specs, check_vma=False)
         out = sm(hidden_flat, batches, k_train, k_enc, flag)
-        return {k: v[:b] for k, v in out.items()}
+        out = {k: v[:b] for k, v in out.items()}
+        if row_block is not None:
+            # model-axis padding rounded rows up to an nm multiple; slice
+            # the global outputs back to the true wire rows
+            out["packed"] = out["packed"][:, :rows]
+            out["norms"] = out["norms"][:, :rows]
+        return out
 
-    return jax.jit(step)
+    # the member index-padding runs EAGERLY, before the jit: feeding a
+    # computed (padded) member dim into the 2-D shard_map from inside the
+    # same jit miscompiles on XLA:CPU (GSPMD reshards the scan-carrying
+    # train body's inputs wrong — members permute / go NaN), while jit
+    # ARGUMENTS partition correctly on every mesh shape. One host-side
+    # gather per call, member-dim-sized — noise next to the train step.
+    return _PaddedMemberStep(jax.jit(step), b, b_pad)
 
 
 def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
                              batches, k_train, k_enc, flag, *, b: int,
-                             mesh=None, taps: bool = False):
+                             mesh=None, taps: bool = False,
+                             member_chunk=None, chunk_rows=None):
     """The entire client pipeline of one cohort tier-group as ONE jitted
     dispatch: unflatten the device-resident flat x-hat *inside* the jit, run
     the (vmapped) local-SGD scan, flatten the delta stack to (b, d), and
@@ -310,8 +478,14 @@ def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
     payload; sparse kinds are encoded by the host from the flat rows).
     ``taps=True`` adds a ``"taps"`` entry — the (b, len(COHORT_TAP_NAMES))
     per-member in-dispatch metric rows — to the SAME dispatch.
+
+    ``member_chunk`` / ``chunk_rows`` enable the LLM-scale chunked modes
+    (member-chunked lax.scan / row-chunked streaming encode) — both
+    bit-invisible; see ``_cohort_step_fn``. With a 2-D ("data","model")
+    mesh the packed wire rows additionally shard over "model".
     """
-    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh, taps)(
+    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh, taps,
+                           member_chunk, chunk_rows)(
         hidden_flat, batches, k_train, k_enc, flag)
 
 
@@ -379,19 +553,23 @@ def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "sbits", "lr", "beta", "mesh",
-                                    "n", "taps"),
+                                    "n", "taps", "chunk_rows"),
                    donate_argnums=(0, 1, 2))
 def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
                               weights, extra, key2d, flag, *,
                               bits: int, sbits, lr: float, beta, mesh,
-                              n=None, taps: bool = False):
-    """``server_flush_step`` on a flat state sharded over a ("data",) mesh.
+                              n=None, taps: bool = False, chunk_rows=None):
+    """``server_flush_step`` on a flat state sharded over a ("data",) or
+    2-D ("data","model") mesh.
 
     Same chain, one shard_map: every device owns one CONTIGUOUS segment of
-    the flat vectors (``sharding.rules.flat_vector_spec``) and the matching
-    row segment of the K-upload code/norm stacks. All state arrays are
-    segment-aligned-padded to ``sharding.rules.flat_padded_len`` (bucket
-    rows padded to a device multiple, zero tails — the caller pads the
+    the flat vectors (``sharding.rules.flat_vector_spec`` — under a 2-D
+    mesh the segments enumerate the flat axes data-major) and the matching
+    row segment of the K-upload code/norm stacks, so the K-upload buffer is
+    sharded along d rather than replicated. All state arrays are
+    segment-aligned-padded to ``sharding.rules.flat_padded_len`` over
+    ``sharding.rules.mesh_flat_extent`` segments (bucket rows padded to a
+    segment-count multiple, zero tails — the caller pads the
     stack/norms/extra the same way), so:
 
     * the fused dequantize-accumulate, momentum and server update are
@@ -400,12 +578,27 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     * the broadcast encode's bucket-norm math only ever sees whole
       128-element rows (segments are row-aligned — the BUCKET alignment
       rule), and its counter-hash dither is keyed by the GLOBAL element
-      index via a per-segment row offset (``axis_index * local_rows``), so
-      the emitted codes are the single-device wire bits exactly;
+      index via a per-segment row offset
+      (``sharding.rules.flat_segment_index * local_rows``), so the emitted
+      codes are the single-device wire bits exactly on every mesh shape;
     * the zero tails stay zero through every step (zero codes -> zero
       delta -> zero diff -> zero broadcast rows), and the caller slices
       the payload back to the true ``rows_for(n)`` wire rows — zero
       wire-format change.
+
+    No model-axis collective exists on this path: every step is
+    segment-local, and GSPMD only moves data if the CALLER hands in arrays
+    laid out differently from the flat specs (taps excepted, below).
+
+    ``chunk_rows`` additionally tiles the whole per-segment chain —
+    dequant-accumulate, momentum/server update, broadcast encode AND the
+    hidden apply of the decoded bits — over fixed-size row chunks inside
+    one ``lax.scan``, so the f32 transients (dequantized sums, diff,
+    decoded broadcast) never materialize beyond one chunk per device.
+    Per-chunk math is the same per-element chain (the ascending-k
+    accumulation order is per element, the dither keys on global indices),
+    so chunking is bit-invisible; the tail chunk is zero-row-padded and
+    sliced off.
 
     Donation keeps the sharded state update in place per device. ``stack``
     may be None (no packed qsgd uploads this window), ``beta`` None (no
@@ -420,7 +613,9 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     replicated layout inside the same jit, sliced to the true ``n`` (a
     reduction over the zero-padded length has a different f32 tree-reduce
     grouping), and fed to the ONE shared ``flush_tap_vector`` — so every
-    mesh size reduces the exact shapes the single-device dispatch reduces.
+    mesh size (model axis included) reduces the exact shapes the
+    single-device dispatch reduces. The gather-to-replicated is the one
+    collective taps add.
     """
     global SERVER_FLUSH_TRACES
     SERVER_FLUSH_TRACES += 1
@@ -428,49 +623,129 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     from jax.sharding import PartitionSpec as P
 
     from repro.common.compat import shard_map as _shard_map
-    from repro.sharding.rules import (flat_norms_spec, flat_stack_spec,
+    from repro.sharding.rules import (flat_axes, flat_norms_spec,
+                                      flat_segment_index, flat_stack_spec,
                                       flat_vector_spec)
 
     if taps and n is None:
         raise ValueError("server_flush_step_sharded(taps=True) requires the "
                          "static true length n")
+    # static host int: resolved OUTSIDE the jitted body (chunking is a
+    # dispatch shape, never a traced value)
+    chunk_c = None if chunk_rows is None else int(chunk_rows)
+
+    def encode_decode(boundary, diff, seeds, row_off, rows_c):
+        """Broadcast quantize-pack + decode of one row-aligned diff block
+        (the whole segment, or one chunk of it) at global row ``row_off``."""
+        bp, bn = _qsgd._quantize_pack_batch_block(
+            diff.reshape(1, rows_c, BUCKET), seeds[:, 0], seeds[:, 1],
+            row_off, sbits)
+        bpacked, bnorms = boundary((bp[0], bn.reshape(rows_c)))
+        q = boundary(_qsgd._unpack_dequantize_block(
+            bpacked, bnorms.reshape(rows_c, 1), sbits).reshape(-1))
+        return bpacked, bnorms, q
 
     def seg_body(x_l, h_l, m_l, stack_l, norms_l, w, extra_l, key2d_l, flag_l):
         boundary = functools.partial(hard_boundary, flag_l)
         n_l = x_l.shape[0]
-        agg = _agg.aggregate_update(
-            x_l, m_l, stack_l, norms_l, w, extra_l,
-            bits=bits, n=n_l, lr=lr, beta=beta, boundary=boundary,
-            interpret=_interpret(), with_delta=taps)
-        m_new, x_new = agg[0], agg[1]
-        diff = boundary(x_new - h_l)
-        if sbits is None:  # identity server quantizer
-            q, h_new, payload = diff, h_l + diff, (diff,)
+        rows_l = n_l // BUCKET
+        seg_row0 = flat_segment_index(mesh) * rows_l
+        seeds = (None if sbits is None else
+                 jnp.asarray(key2d_l).reshape(1, -1)[:, :2].astype(jnp.uint32))
+        if chunk_c is None or chunk_c >= rows_l:
+            agg = _agg.aggregate_update(
+                x_l, m_l, stack_l, norms_l, w, extra_l,
+                bits=bits, n=n_l, lr=lr, beta=beta, boundary=boundary,
+                interpret=_interpret(), with_delta=taps)
+            m_new, x_new = agg[0], agg[1]
+            diff = boundary(x_new - h_l)
+            if sbits is None:  # identity server quantizer
+                q, h_new, payload = diff, h_l + diff, (diff,)
+            else:
+                bpacked, bnorms, q = encode_decode(
+                    boundary, diff, seeds, seg_row0.astype(jnp.uint32),
+                    rows_l)
+                h_new, payload = h_l + q, (bpacked, bnorms)
+            if not taps:
+                return x_new, h_new, m_new, payload
+            return x_new, h_new, m_new, payload, (agg[2], diff, q)
+
+        # chunked streaming mode: one lax.scan tiles the entire chain over
+        # c-row chunks; only chunk-sized f32 transients ever exist
+        c = chunk_c
+        nch = -(-rows_l // c)
+        rpad = nch * c - rows_l
+        cb = c * BUCKET
+
+        def padv(v):  # (n_l,) f32 vector -> (nch, cb) chunk rows
+            if rpad:
+                v = jnp.concatenate([v, jnp.zeros((rpad * BUCKET,), v.dtype)])
+            return v.reshape(nch, cb)
+
+        xs = {"x": padv(x_l), "h": padv(h_l), "m": padv(m_l),
+              "i": jnp.arange(nch, dtype=jnp.uint32)}
+        if stack_l is not None:
+            st, nr = stack_l, norms_l
+            if rpad:
+                k_ = st.shape[0]
+                st = jnp.concatenate(
+                    [st, jnp.zeros((k_, rpad, st.shape[2]), st.dtype)], axis=1)
+                nr = jnp.concatenate(
+                    [nr, jnp.zeros((k_, rpad), nr.dtype)], axis=1)
+            xs["stack"] = st.reshape(st.shape[0], nch, c,
+                                     st.shape[2]).transpose(1, 0, 2, 3)
+            xs["norms"] = nr.reshape(nr.shape[0], nch, c).transpose(1, 0, 2)
+        if extra_l is not None:
+            xs["extra"] = padv(extra_l)
+
+        def chunk_body(_, ch):
+            agg = _agg.aggregate_update(
+                ch["x"], ch["m"], ch.get("stack"), ch.get("norms"), w,
+                ch.get("extra"), bits=bits, n=cb, lr=lr, beta=beta,
+                boundary=boundary, interpret=_interpret(), with_delta=taps)
+            m_new, x_new = agg[0], agg[1]
+            diff = boundary(x_new - ch["h"])
+            if sbits is None:
+                q, h_new, payload = diff, ch["h"] + diff, (diff,)
+            else:
+                row_off = (seg_row0.astype(jnp.uint32)
+                           + ch["i"] * jnp.uint32(c))
+                bpacked, bnorms, q = encode_decode(boundary, diff, seeds,
+                                                   row_off, c)
+                h_new, payload = ch["h"] + q, (bpacked, bnorms)
+            ys = (x_new, h_new, m_new, payload)
+            if taps:
+                ys = ys + ((agg[2], diff, q),)
+            return None, ys
+
+        _, ys = jax.lax.scan(chunk_body, None, xs)
+
+        def unchunk(v):  # (nch, cb) -> (n_l,)
+            return v.reshape(-1)[:n_l]
+
+        x_new, h_new, m_new = unchunk(ys[0]), unchunk(ys[1]), unchunk(ys[2])
+        if sbits is None:
+            payload = (unchunk(ys[3][0]),)
         else:
-            rows_l = n_l // BUCKET
-            seeds = jnp.asarray(key2d_l).reshape(1, -1)[:, :2].astype(jnp.uint32)
-            row_off = (jax.lax.axis_index("data") * rows_l).astype(jnp.uint32)
-            bp, bn = _qsgd._quantize_pack_batch_block(
-                diff.reshape(1, rows_l, BUCKET), seeds[:, 0], seeds[:, 1],
-                row_off, sbits)
-            bpacked, bnorms = boundary((bp[0], bn.reshape(rows_l)))
-            q = boundary(_qsgd._unpack_dequantize_block(
-                bpacked, bnorms.reshape(rows_l, 1), sbits).reshape(-1))
-            h_new, payload = h_l + q, (bpacked, bnorms)
+            payload = (ys[3][0].reshape(nch * c, -1)[:rows_l],
+                       ys[3][1].reshape(-1)[:rows_l])
         if not taps:
             return x_new, h_new, m_new, payload
-        return x_new, h_new, m_new, payload, (agg[2], diff, q)
+        delta, diff, q = (unchunk(t) for t in ys[4])
+        return x_new, h_new, m_new, payload, (delta, diff, q)
 
-    vec, rep = flat_vector_spec(), P()
-    payload_specs = (vec,) if sbits is None else (P("data", None), vec)
+    ax = flat_axes(mesh)
+    ax = ax[0] if len(ax) == 1 else ax
+    vec, rep = flat_vector_spec(mesh), P()
+    payload_specs = (vec,) if sbits is None else (P(ax, None), vec)
     out_specs = (vec, vec, vec, payload_specs)
     if taps:
         out_specs = out_specs + ((vec, vec, vec),)
     sm = _shard_map(
         seg_body, mesh=mesh,
         in_specs=(vec, vec, vec,
-                  None if stack is None else flat_stack_spec(),
-                  None if norms is None else flat_norms_spec(),
+                  None if stack is None else flat_stack_spec(mesh),
+                  None if norms is None else flat_norms_spec(mesh),
                   None if weights is None else rep,
                   None if extra is None else vec,
                   None if key2d is None else rep, rep),
@@ -563,5 +838,18 @@ CONTRACTS = {
         "unused_without_momentum": (),
         "min_hard_boundaries": _cohort_boundaries,
         "trace_counter": "COHORT_STEP_TRACES",
+    },
+    # The streaming chunk encode is DELIBERATELY one dispatch per chunk
+    # (the host stages each chunk's wire bytes off-device) — so it is not
+    # in KERNEL_ENTRY_POINTS and needs no hard boundary (nothing fuses
+    # across its dispatch edge by construction). Its contract is the
+    # aliasing-free single-compilation property: row_start is traced, so
+    # one trace covers every chunk of a shape.
+    "qsgd_quantize_chunk": {
+        "donate": (),
+        "donated_args": (),
+        "unused_without_momentum": (),
+        "min_hard_boundaries": lambda **_: 0,
+        "trace_counter": "ENCODE_CHUNK_TRACES",
     },
 }

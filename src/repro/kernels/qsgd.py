@@ -222,6 +222,41 @@ def qsgd_quantize_pack_batch(x3d: jnp.ndarray, seeds: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Chunked threefry dither (streaming encode of the b=1 wire convention)
+# ---------------------------------------------------------------------------
+
+
+def threefry_uniform_rows(key, row_start, rows: int, total_rows: int,
+                          lanes: int = LANES):
+    """Rows [row_start, row_start+rows) of the EXACT uniform field
+    ``jax.random.uniform(key, (total_rows, lanes), f32)`` — the b=1 wire
+    convention's dither — without materializing the whole field.
+
+    jax's threefry stream for an even-size draw of n elements pairs counter
+    i with i+n/2 and emits cipher word 0 for the first half, word 1 for the
+    second; this reproduces that pairing per flat index (``row_start`` may
+    be traced — one compilation covers every chunk of a given shape) and
+    applies the same bits->f32 mapping (top 23 bits into the mantissa of
+    1.x, minus 1). Bit-exactness with the full draw is pinned in
+    tests/test_mesh2d.py, chunk-boundary cases included.
+    """
+    from jax.extend.random import threefry_2x32
+    n = total_rows * lanes  # always even: lanes is a power of two
+    h = n // 2
+    j = (jnp.uint32(row_start) * jnp.uint32(lanes)
+         + jnp.arange(rows * lanes, dtype=jnp.uint32))
+    lo = jnp.where(j < h, j, j - jnp.uint32(h))
+    hi = lo + jnp.uint32(h)
+    out = threefry_2x32(jnp.asarray(key).reshape(-1)[:2].astype(jnp.uint32),
+                        jnp.concatenate([lo, hi]))
+    m = rows * lanes
+    bits32 = jnp.where(j < h, out[:m], out[m:])
+    u = jax.lax.bitcast_convert_type(
+        (bits32 >> 9) | jnp.uint32(0x3F800000), jnp.float32) - 1.0
+    return u.reshape(rows, lanes)
+
+
+# ---------------------------------------------------------------------------
 # Unpack + dequantize
 # ---------------------------------------------------------------------------
 

@@ -45,3 +45,25 @@ def make_sim_mesh(n_dev: int | None = None):
             "are visible; set XLA_FLAGS=--xla_force_host_platform_device_count"
             f"={n_dev} before importing jax to fake them on CPU")
     return jax.make_mesh((n_dev,), ("data",))
+
+
+def make_sim_mesh2d(shape: tuple[int, int] | None = None):
+    """A 2-D ("data","model") mesh for the LLM-scale flat substrate.
+
+    The flat server state shards over BOTH axes (bucket-row segments,
+    data-major — ``sharding.rules.flat_axes``); cohort members shard over
+    "data" only while each member's packed codes shard their row dim over
+    "model". ``shape=None`` puts every local device on "data" (the 1-D
+    layout, as a 2-D mesh). Same visibility rule / XLA_FLAGS hint as
+    ``make_sim_mesh``.
+    """
+    if shape is None:
+        shape = (jax.device_count(), 1)
+    n_data, n_model = shape
+    if n_data * n_model > jax.device_count():
+        raise ValueError(
+            f"make_sim_mesh2d({shape}) needs {n_data * n_model} devices but "
+            f"only {jax.device_count()} are visible; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_data * n_model} before importing jax to fake them on CPU")
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

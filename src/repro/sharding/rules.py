@@ -242,8 +242,30 @@ def to_shardings(rules: ShardingRules, pspec_tree) -> Any:
 # single-device one: no bucket ever straddles two devices. The same specs
 # shard the buffered upload stack — (K, rows, bytes) codes and (K, rows)
 # norms — over the rows dim, which is the same segment boundary.
+#
+# Under a 2-D ("data","model") mesh the SAME flat vector shards over the
+# combined axes (data-major: segment g lives on device (g // n_model,
+# g % n_model)) — nd*nm whole-bucket-row segments, the identical alignment
+# law, so the per-segment bucket-norm math and the global-element-index
+# dither keep the wire bits device-layout-invariant. ``flat_axes`` is the
+# one place the axis list lives; every spec helper takes the mesh so the
+# 1-D and 2-D layouts share one code path.
 
 FLAT_AXIS = "data"  # the axis flat segments (and cohort members) shard over
+FLAT_MODEL_AXIS = "model"  # second flat axis: shards the vector, not members
+
+
+def flat_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the flat substrate shards over, segment-major order.
+
+    ("data",) for None / 1-D meshes; ("data","model") when the mesh carries
+    a model axis ("pod" is the federation boundary — never a flat axis).
+    """
+    if mesh is None:
+        return (FLAT_AXIS,)
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in (FLAT_AXIS, FLAT_MODEL_AXIS) if a in names) \
+        or (FLAT_AXIS,)
 
 
 def mesh_data_extent(mesh) -> int:
@@ -251,6 +273,25 @@ def mesh_data_extent(mesh) -> int:
     if mesh is None:
         return 1
     return int(dict(mesh.shape).get(FLAT_AXIS, 1))
+
+
+def mesh_model_extent(mesh) -> int:
+    """Extent of the "model" axis of a mesh (1 for None / no such axis)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(FLAT_MODEL_AXIS, 1))
+
+
+def mesh_flat_extent(mesh) -> int:
+    """Total number of flat segments = product of the flat axes' extents
+    (the padding divisor for ``flat_padded_len``). 1 for mesh=None."""
+    if mesh is None:
+        return 1
+    shape = dict(mesh.shape)
+    extent = 1
+    for a in flat_axes(mesh):
+        extent *= int(shape.get(a, 1))
+    return extent
 
 
 def flat_padded_len(n: int, ndev: int, bucket: int = 128) -> int:
@@ -262,21 +303,44 @@ def flat_padded_len(n: int, ndev: int, bucket: int = 128) -> int:
     return rows_pad * bucket
 
 
-def flat_vector_spec() -> P:
-    """Spec of a flat state/residual vector: one contiguous segment/device."""
-    return P(FLAT_AXIS)
+def flat_vector_spec(mesh=None) -> P:
+    """Spec of a flat state/residual vector: one contiguous segment/device.
+    With a 2-D mesh the single dim shards over BOTH flat axes."""
+    axes = flat_axes(mesh)
+    return P(axes[0] if len(axes) == 1 else axes)
 
 
-def flat_stack_spec() -> P:
+def flat_stack_spec(mesh=None) -> P:
     """Spec of the (K, rows, 128*bits//8) buffered code stack: every device
     dequant-accumulates its own row segment of all K uploads."""
-    return P(None, FLAT_AXIS, None)
+    axes = flat_axes(mesh)
+    return P(None, axes[0] if len(axes) == 1 else axes, None)
 
 
-def flat_norms_spec() -> P:
+def flat_norms_spec(mesh=None) -> P:
     """Spec of the (K, rows) bucket-norm stack (rows dim = segments)."""
-    return P(None, FLAT_AXIS)
+    axes = flat_axes(mesh)
+    return P(None, axes[0] if len(axes) == 1 else axes)
 
 
 def flat_vector_sharding(mesh) -> NamedSharding:
-    return NamedSharding(mesh, flat_vector_spec())
+    return NamedSharding(mesh, flat_vector_spec(mesh))
+
+
+def flat_segment_index(mesh):
+    """Traced GLOBAL segment index of the executing device inside a
+    shard_map over the flat axes (data-major fold — matches how GSPMD lays
+    a dim sharded over an axis tuple across the mesh). This times
+    ``local_rows`` is the global row offset that keys the broadcast
+    encode's counter-hash dither, which is what makes the emitted wire
+    bits identical across every mesh shape."""
+    idx = jax.lax.axis_index(FLAT_AXIS) * 0  # 0 of the right dtype
+    for a in flat_axes(mesh):
+        idx = idx * mesh_extent_of(mesh, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def mesh_extent_of(mesh, axis: str) -> int:
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))

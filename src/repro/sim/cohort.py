@@ -53,6 +53,28 @@ from repro.sim.events import BaseAsyncSimulator, SimConfig, SimResult
 from repro.sim.scenarios import ScenarioConfig, ScenarioSampler, get_scenario
 
 
+# Above this many batched delta elements (b * d), one monolithic vmap over
+# cohort members loses to a lax.scan of member chunks: the (b, d) delta
+# stack and its padded (b, rows, 128) encode view stop fitting in cache and
+# the dispatch goes memory-bound. Scanning small member chunks keeps the
+# working set cache-resident at identical bits (the dither is keyed per
+# member + global element index, so chunking is invisible on the wire).
+# The ~100k-element chunk target is the measured CPU optimum at d=98304
+# (member_chunk=1: 1020us/upload vs 1701 monolithic; mc=2: 1332, and larger
+# chunks regress monotonically toward the monolithic number).
+_MEMBER_CHUNK_THRESHOLD = 4_000_000
+_MEMBER_CHUNK_TARGET = 100_000
+
+
+def auto_member_chunk(b: int, d: int) -> int | None:
+    """The engine's member-chunk policy for one cohort dispatch: ``None``
+    (monolithic vmap) below the threshold, else the largest chunk keeping
+    ``chunk * d`` near the cache-resident target."""
+    if b <= 1 or b * d < _MEMBER_CHUNK_THRESHOLD:
+        return None
+    return max(1, min(b, _MEMBER_CHUNK_TARGET // max(d, 1)))
+
+
 @jax.jit
 def _stack_trees(*trees):
     """One jitted call stacks a whole cohort's batches (B eager
@@ -95,8 +117,9 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
         return self._receive_keys.pop()
 
     # -- cohort admission -------------------------------------------------
-    def _train_encode_cohort(self, batches: List[Any], train_keys, enc_keys,
-                             tiers: np.ndarray) -> List[Message]:
+    def _train_encode_cohort(self, batches: Any, train_keys, enc_keys,
+                             tiers: np.ndarray, *,
+                             stacked: bool = False) -> List[Message]:
         """Train + encode one admitted cohort, one fused dispatch per
         tier-group.
 
@@ -116,7 +139,7 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
         """
         from repro.kernels import ops as kops  # local import: kernels optional
 
-        b = len(batches)
+        b = int(tiers.size) if stacked else len(batches)
         st = self.algo.state
         version = st.t
         msgs: List[Any] = [None] * b
@@ -129,12 +152,25 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
                 pad_idx = np.concatenate(
                     [members, np.repeat(members[:1], b - members.size)])
                 midx = jnp.asarray(pad_idx)
-                grp_batches = _stack_trees(*[batches[i] for i in pad_idx])
-                gt, ge = train_keys[midx], enc_keys[midx]
+                if stacked and members.size == b:
+                    # single-tier cohort from a batched provider: the
+                    # stacked tree IS the group — no per-cohort host stack
+                    # (the former 39MB-at-d98304 copy) and no gather
+                    grp_batches = batches
+                elif stacked:
+                    grp_batches = jax.tree.map(lambda x: x[midx], batches)
+                else:
+                    grp_batches = _stack_trees(*[batches[i] for i in pad_idx])
+                if members.size == b:  # identity permutation: skip the gather
+                    gt, ge = train_keys, enc_keys
+                else:
+                    gt, ge = train_keys[midx], enc_keys[midx]
             out = kops.cohort_train_encode_step(
                 self.algo.loss_fn, self.algo.qcfg, q.spec, st.layout,
                 st.hidden_flat, grp_batches, gt, ge, self.algo._flag, b=b,
-                mesh=self.algo.mesh, taps=self.algo._taps)
+                mesh=self.algo.mesh, taps=self.algo._taps,
+                member_chunk=auto_member_chunk(b, st.layout.total_size),
+                chunk_rows=self.algo.chunk_rows)
             ekeys = np.asarray(ge).reshape(b, -1) if b > 1 else [ge]
             mlist = frame_cohort_messages(CLIENT_UPDATE, q, out, st.layout,
                                           enc_keys=ekeys, version=version,
@@ -181,9 +217,21 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
             batch_keys = np.asarray(subs[1:b + 1])
             te = jax.vmap(jax.random.split)(subs[b + 1:])
             train_keys, enc_keys = te[:, 0], te[:, 1]
-        batches = [self.client_batches_fn(next_client + i, batch_keys[i])
-                   for i in range(b)]
-        msgs = self._train_encode_cohort(batches, train_keys, enc_keys, tiers)
+        # batched-provider protocol: a batches fn marked ``batched = True``
+        # is called ONCE with the cohort's client ids + keys and returns an
+        # already-stacked tree (leading dim b) — e.g. a view into a
+        # preloaded per-client tensor — instead of b per-client trees the
+        # engine must host-stack (a 39MB copy per cohort at d=98304, the
+        # dominant non-compute cost of the encode-bound regime)
+        stacked = b > 1 and getattr(self.client_batches_fn, "batched", False)
+        if stacked:
+            batches = self.client_batches_fn(
+                np.arange(next_client, next_client + b), batch_keys)
+        else:
+            batches = [self.client_batches_fn(next_client + i, batch_keys[i])
+                       for i in range(b)]
+        msgs = self._train_encode_cohort(batches, train_keys, enc_keys, tiers,
+                                         stacked=stacked)
         durations = self.sampler.durations(b)
         drops = self.sampler.dropouts(b)
         return msgs, arrivals, durations, drops, new_next_arrival

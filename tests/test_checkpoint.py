@@ -1,6 +1,10 @@
 """Checkpoint/resume of the async protocol: flat ServerState + buffer
 occupancy round-trip, bit-identical continuation, and mismatch guards."""
 import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -8,6 +12,8 @@ import numpy as np
 import pytest
 
 from repro.core import QAFeL, QAFeLConfig, load_checkpoint, save_checkpoint
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def quad_loss(params, batch, key):
@@ -160,6 +166,114 @@ def test_mesh_checkpoint_interop(tmp_path):
         assert data["x_flat"].shape[0] == n  # padding never hits the disk
     resumed = load_checkpoint(path2, make_algo())
     assert_same_state(algo, resumed)
+
+
+def test_mesh2d_checkpoint_meta_and_reshard(tmp_path):
+    """The sharding meta records the 2-D ("data","model") mesh shape, and
+    archives reshard-load between single-device and 2-D-mesh runs in BOTH
+    directions (chunked flush encode on the mesh side), continuing
+    bit-identically. The 8-device job re-runs this across
+    (1,1) <-> (2,4) <-> (8,1)."""
+    import json
+
+    from repro.launch.mesh import make_sim_mesh2d
+
+    path = str(tmp_path / "ckpt2d.npz")
+    algo = drive(make_algo(), 7, seed=4)
+    sharded = QAFeL(algo.qcfg, quad_loss, PARAMS0,
+                    mesh=make_sim_mesh2d((1, 1)), chunk_rows=1)
+    drive(sharded, 7, seed=4)
+    n = algo.state.layout.total_size
+    save_checkpoint(path, sharded)
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode("utf-8"))
+        assert data["x_flat"].shape[0] == n  # canonical on disk
+    assert meta["sharding"]["mesh_shape"] == [1, 1]
+    assert meta["sharding"]["axes"] == ["data", "model"]
+    assert meta["sharding"]["devices"] == 1
+
+    # 2-D archive -> single-device run
+    resumed = load_checkpoint(path, make_algo())
+    assert_same_state(algo, resumed)
+    drive_pair(sharded, resumed, 8)
+    np.testing.assert_array_equal(np.asarray(sharded.state.x_flat)[:n],
+                                  np.asarray(resumed.state.x_flat))
+
+    # single-device archive -> 2-D-mesh run (different chunk size: chunking
+    # is a dispatch shape, never protocol state, so it may change on resume)
+    path2 = str(tmp_path / "ckpt1d.npz")
+    save_checkpoint(path2, algo)
+    resumed2 = load_checkpoint(path2, QAFeL(
+        algo.qcfg, quad_loss, PARAMS0, mesh=make_sim_mesh2d((1, 1)),
+        chunk_rows=2))
+    drive_pair(algo, resumed2, 8)
+    np.testing.assert_array_equal(np.asarray(algo.state.x_flat),
+                                  np.asarray(resumed2.state.x_flat)[:n])
+
+
+def test_mesh2d_reshard_eight_devices(tmp_path):
+    """Force 8 host devices in a subprocess and reshard-load checkpoints
+    across (1,1) <-> (2,4) <-> (8,1) in both directions, continuing each
+    pair in lockstep bit-identically."""
+    code = textwrap.dedent("""
+        import os, tempfile, json
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        import tests.test_checkpoint as T
+        from repro.core import QAFeL, load_checkpoint, save_checkpoint
+        from repro.launch.mesh import make_sim_mesh2d
+        assert jax.device_count() == 8
+        tmp = tempfile.mkdtemp()
+        qcfg = T.make_algo().qcfg
+        n = 307
+
+        def fresh(shape, cr=None):
+            return QAFeL(qcfg, T.quad_loss, T.PARAMS0,
+                         mesh=make_sim_mesh2d(shape), chunk_rows=cr)
+
+        def same(a, b):
+            np.testing.assert_array_equal(np.asarray(a.state.x_flat)[:n],
+                                          np.asarray(b.state.x_flat)[:n])
+            np.testing.assert_array_equal(
+                np.asarray(a.state.hidden_flat)[:n],
+                np.asarray(b.state.hidden_flat)[:n])
+
+        a = T.drive(fresh((1, 1)), 7, seed=4)
+        b = T.drive(fresh((2, 4), cr=1), 7, seed=4)
+        c = T.drive(fresh((8, 1), cr=2), 7, seed=4)
+        same(a, b); same(a, c)
+
+        # (2,4) archive records its mesh shape; -> (8,1), continue lockstep
+        p = os.path.join(tmp, "m24.npz"); save_checkpoint(p, b)
+        with np.load(p) as d:
+            meta = json.loads(bytes(d["__meta__"]).decode("utf-8"))
+        assert meta["sharding"]["mesh_shape"] == [2, 4]
+        assert meta["sharding"]["devices"] == 8
+        r = load_checkpoint(p, fresh((8, 1), cr=2))
+        T.drive_pair(b, r, 8); same(b, r)
+
+        # (8,1) -> (2,4)
+        p = os.path.join(tmp, "m81.npz"); save_checkpoint(p, c)
+        r = load_checkpoint(p, fresh((2, 4), cr=1))
+        T.drive_pair(c, r, 8); same(c, r)
+
+        # (1,1) -> (2,4) and (2,4) -> (1,1)
+        p = os.path.join(tmp, "m11.npz"); save_checkpoint(p, a)
+        r = load_checkpoint(p, fresh((2, 4)))
+        T.drive_pair(a, r, 8); same(a, r)
+        p = os.path.join(tmp, "m24b.npz"); save_checkpoint(p, b)
+        r = load_checkpoint(p, fresh((1, 1)))
+        T.drive_pair(b, r, 8); same(b, r)
+        print("CKPT2D_8DEV_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=560,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(REPO, "src") + os.pathsep + REPO},
+        cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "CKPT2D_8DEV_OK" in out.stdout
 
 
 def test_mesh_checkpoint_rejects_mismatched_layout(tmp_path):

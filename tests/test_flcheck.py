@@ -102,6 +102,37 @@ def test_metadata_size_read_in_loop_is_not_flagged(tmp_path):
     assert res.findings == [], res.findings
 
 
+def test_int_of_static_argname_in_jit_is_not_flagged(tmp_path):
+    # the server_flush_step_sharded pattern: chunk_rows is declared in
+    # static_argnames, so int(chunk_rows) is host shape math, not a sync
+    p = tmp_path / "staticarg.py"
+    p.write_text(
+        "import functools\n"
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "@functools.partial(jax.jit, static_argnames=('chunk_rows',),\n"
+        "                   static_argnums=(1,))\n"
+        "def step(x, n, *, chunk_rows=None):\n"
+        "    c = None if chunk_rows is None else int(chunk_rows)\n"
+        "    pieces = int(n)\n"
+        "    return x * (1 if c is None else c) * pieces\n"
+        "def run(y, k):\n"
+        "    fast = jax.jit(lambda v: v, static_argnames=('k',))\n"
+        "    return step(y, 2, chunk_rows=k)\n")
+    res = run_lint([str(p)])
+    assert res.findings == [], res.findings
+    # ...but a cast on a TRACED param of the same jitted def still flags
+    q = tmp_path / "tracedarg.py"
+    q.write_text(
+        "import functools\n"
+        "import jax\n"
+        "@functools.partial(jax.jit, static_argnames=('chunk_rows',))\n"
+        "def step(x, *, chunk_rows=None):\n"
+        "    return x * int(x)\n")
+    res = run_lint([str(q)])
+    assert [f.rule for f in res.findings] == ["host-sync-in-jit"]
+
+
 def test_float_of_device_value_in_comprehension_is_flagged(tmp_path):
     p = tmp_path / "drift.py"
     p.write_text(

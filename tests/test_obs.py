@@ -73,10 +73,10 @@ def eval_fn(params):
 
 
 def run_sim(engine="sequential", taps=True, mesh=None, seed=0,
-            max_uploads=12, **qkw):
+            max_uploads=12, chunk_rows=None, **qkw):
     tracer = RunTracer(taps=True) if taps else None
     algo = QAFeL(make_qcfg(**qkw), quad_loss, PARAMS0, mesh=mesh,
-                 telemetry=tracer)
+                 telemetry=tracer, chunk_rows=chunk_rows)
     scfg = SimConfig(concurrency=4, max_uploads=max_uploads,
                      eval_every_steps=1, seed=seed, track_hidden_replicas=1)
     if engine == "sequential":
@@ -275,6 +275,21 @@ def test_flush_taps_sharding_invariant(traced_run):
     assert _comparable_stream(tr_a) == _comparable_stream(tr_b)
 
 
+def test_flush_taps_mesh2d_chunked_invariant(traced_run):
+    """The 2-D ("data","model") mesh with the chunked flush encode must
+    produce the same tap series bit for bit: the model-axis tap reduction
+    gathers to replicated before reducing along the d-chunks, and the
+    chunked encode's counter-hash dither is keyed by global element index,
+    so neither sharding nor chunking may show up in the taps."""
+    from repro.launch.mesh import make_sim_mesh2d
+    res_a, tr_a = traced_run
+    res_b, tr_b = run_sim(mesh=make_sim_mesh2d((1, 1)), chunk_rows=1)
+    for name in FLUSH_TAP_NAMES:
+        key = f"flush/{name}"
+        assert res_b.metrics[key] == res_a.metrics[key], key
+    assert _comparable_stream(tr_a) == _comparable_stream(tr_b)
+
+
 def test_eight_virtual_devices_taps_invariant():
     """Force 8 host devices in a subprocess and assert the sharded flush
     tap series and event stream match the single-device run bit for bit."""
@@ -282,13 +297,16 @@ def test_eight_virtual_devices_taps_invariant():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import tests.test_obs as T
-        from repro.launch.mesh import make_sim_mesh
+        from repro.launch.mesh import make_sim_mesh, make_sim_mesh2d
         res_a, tr_a = T.run_sim()
         res_b, tr_b = T.run_sim(mesh=make_sim_mesh(8))
+        res_c, tr_c = T.run_sim(mesh=make_sim_mesh2d((2, 4)), chunk_rows=1)
         for name in T.FLUSH_TAP_NAMES:
             key = "flush/" + name
             assert res_b.metrics[key] == res_a.metrics[key], key
+            assert res_c.metrics[key] == res_a.metrics[key], "2d:" + key
         assert T._comparable_stream(tr_b) == T._comparable_stream(tr_a)
+        assert T._comparable_stream(tr_c) == T._comparable_stream(tr_a)
         assert T.validate_events(
             [e.as_dict() for e in tr_b.events()]) == []
         print("OBS_8DEV_OK")
