@@ -376,6 +376,84 @@ def _check_encode_chunk(ndev: int, findings: List[Finding]) -> int:
     return checks
 
 
+def _check_population(ndev: int, findings: List[Finding]) -> int:
+    """The population macro step (``population_advance``): its donated
+    argument is a whole PYTREE (arg 0 = the lifecycle state dict), so the
+    generic positional-donation check doesn't apply — every leaf of the
+    state dict must establish input->output aliasing in the compiled
+    module. Dispatch-wise the engine loop must be ONE fused call per macro
+    step with no base kernel dispatches in the window, and a fresh
+    population with identical statics must trigger ZERO retraces (the
+    admission/delivery alternation is a lax.cond, not a recompile)."""
+    import jax
+
+    from repro.kernels import ops as kops
+    from repro.kernels import population as popk
+    from repro.sim.population import compile_scenario
+    from repro.sim.scenarios import get_scenario
+
+    entry = "population_advance"
+    label = "lognormal_dropout+device"
+    checks = 0
+    capacity, admit, deliver, queue_cap = 64, 4, 4, 256
+    buckets, width = popk.wheel_shape(capacity)
+    scn = compile_scenario(get_scenario("lognormal_dropout"), 32)
+    statics = dict(scenario=scn, capacity=capacity, buckets=buckets,
+                   bucket_width=width, admit=admit, deliver=deliver,
+                   queue_cap=queue_cap)
+    seeds = popk.run_seeds(0)
+
+    def drive(n_steps):
+        pop = popk.init_population(capacity, buckets, width, queue_cap)
+        for step in range(n_steps):
+            pop, _ = kops.population_advance(pop, seeds, step, **statics)
+
+    n_steps = 6
+    with trace_guard(entry, retraces=None) as g:
+        with g.exclusive():
+            drive(n_steps)
+    checks += 2
+    if g.calls != n_steps:
+        findings.append(Finding(
+            "single-dispatch", _loc(entry, label, ndev), 0, 0,
+            f"engine loop made {g.calls} call(s) into {entry} for "
+            f"{n_steps} macro steps; expected exactly one fused dispatch "
+            f"per step"))
+    if g.other_calls:
+        findings.append(Finding(
+            "single-dispatch", _loc(entry, label, ndev), 0, 0,
+            f"{g.other_calls} base kernel dispatch(es) inside the macro-step "
+            f"window: the lifecycle step is not ONE compiled dispatch"))
+
+    # warm path: a fresh population with the same statics must not retrace
+    # across macro steps — neither the admit/deliver alternation nor the
+    # advancing version counter may churn the jit cache key
+    checks += 1
+    try:
+        with trace_guard(entry, retraces=0):
+            drive(2)
+    except TraceGuardError as exc:
+        findings.append(Finding(
+            "retrace", _loc(entry, label, ndev), 0, 0, str(exc)))
+
+    # pytree donation: every leaf of the state dict aliases its output
+    pop0 = popk.init_population(capacity, buckets, width, queue_cap)
+    fn = kops._population_advance_fn(scn, capacity, buckets, width, admit,
+                                     deliver, queue_cap, False)
+    hlo = fn.lower(pop0, seeds, 0).compile().as_text()
+    expected = list(range(len(jax.tree_util.tree_leaves(pop0))))
+    got = sorted(p for _, p in parse_io_aliases(hlo))
+    checks += 1
+    if got != expected:
+        findings.append(Finding(
+            "hlo-donation", _loc(entry, label, ndev), 0, 0,
+            f"input_output_alias params {got} != expected {expected} "
+            f"(donated: pop — all {len(expected)} state-dict leaves): the "
+            f"in-place lifecycle update contract is not established in the "
+            f"compiled module"))
+    return checks
+
+
 # ---------------------------------------------------------------------------
 # Orchestration
 # ---------------------------------------------------------------------------
@@ -390,6 +468,8 @@ def _run_in_process(ndev: int) -> CompiledResult:
         checks += _check_flush(None, 1, findings)
         checks += _check_cohort(None, 1, findings)
         checks += _check_encode_chunk(1, findings)
+        # pure-jnp entry, no mesh argument: device-count independent too
+        checks += _check_population(1, findings)
     mesh = make_sim_mesh(ndev)
     checks += _check_flush(mesh, ndev, findings)
     checks += _check_cohort(mesh, ndev, findings)

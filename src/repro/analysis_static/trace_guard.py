@@ -34,6 +34,8 @@ ENTRIES: Dict[str, Tuple[Tuple[str, ...], str]] = {
     "server_flush": (("server_flush_step", "server_flush_step_sharded"),
                      "SERVER_FLUSH_TRACES"),
     "cohort_step": (("cohort_train_encode_step",), "COHORT_STEP_TRACES"),
+    "population_advance": (("population_advance",),
+                           "POPULATION_ADVANCE_TRACES"),
 }
 
 

@@ -14,6 +14,7 @@ import math
 from typing import Any, Dict, List, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def staleness_weight(tau, enabled: bool = True):
@@ -48,6 +49,32 @@ class StalenessMonitor:
                 f"staleness {tau} exceeds tau_max={self.max_allowed} "
                 "(Assumption 3.4 violated)")
         self.history.append(int(tau))
+
+    def observe_batch(self, taus) -> None:
+        """Vectorized ``observe`` for the population engine's per-macro-step
+        delivery batches: one ``history.extend`` instead of a per-client
+        Python call. Bit-equal to observing each tau in order, including on
+        violations — the pre-violation prefix is recorded and the raised
+        error names the first offending value, exactly as the sequential
+        calls would leave the monitor (pinned in tests)."""
+        vals = [int(t) for t in np.asarray(taus).reshape(-1)]
+        bad = None
+        for i, v in enumerate(vals):
+            if v < 0 or (self.max_allowed and v > self.max_allowed):
+                bad = i
+                break
+        if bad is None:
+            self.history.extend(vals)
+            return
+        self.history.extend(vals[:bad])
+        v = vals[bad]
+        if v < 0:
+            raise ValueError(
+                f"negative staleness {v}: the update claims a model version "
+                "newer than the server's (clock skew or replay)")
+        raise RuntimeError(
+            f"staleness {v} exceeds tau_max={self.max_allowed} "
+            "(Assumption 3.4 violated)")
 
     def would_drop(self, tau: int) -> bool:
         """True when the drop policy rejects an upload of staleness tau."""

@@ -769,6 +769,65 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
 
 
 # ---------------------------------------------------------------------------
+# Fused population lifecycle step
+# ---------------------------------------------------------------------------
+
+POPULATION_ADVANCE_TRACES = 0
+
+
+@functools.lru_cache(maxsize=32)
+def _population_advance_fn(scenario, capacity: int, buckets: int,
+                           bucket_width: int, admit: int, deliver: int,
+                           queue_cap: int, host_draws: bool):
+    """Compiled macro-step of the device-resident population engine.
+
+    Cached per (scenario, shape) so every engine instance with the same
+    statics shares ONE executable and the warm path never retraces. The
+    population-state dict (arg 0) is donated: each step rewrites the
+    lifecycle arrays in place.
+    """
+    from repro.kernels import population as _pop
+    body = _pop.make_advance_body(scenario, capacity, buckets, bucket_width,
+                                  admit, deliver, queue_cap, host_draws)
+    if host_draws:
+        def step(pop, seeds, version, draws):
+            global POPULATION_ADVANCE_TRACES
+            POPULATION_ADVANCE_TRACES += 1
+            return body(pop, seeds, version, draws)
+    else:
+        def step(pop, seeds, version):
+            global POPULATION_ADVANCE_TRACES
+            POPULATION_ADVANCE_TRACES += 1
+            return body(pop, seeds, version)
+    step.__name__ = "population_advance_step"
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def population_advance(pop, seeds, version, draws=None, *, scenario,
+                       capacity: int, buckets: int, bucket_width: int,
+                       admit: int, deliver: int, queue_cap: int):
+    """Advance the device-resident population by one macro step.
+
+    ONE dispatch that either admits a cohort of ``admit`` clients (drawing
+    their interarrivals / latencies / dropouts / tiers in-kernel from the
+    counter-hash law, or consuming the host-fed ``draws`` dict
+    ``{"inter", "dur", "drop", "tier"}`` of ``(admit,)`` arrays) or pops up
+    to ``deliver`` completed deadlines in completion order. ``pop`` (from
+    ``population.init_population``) is DONATED — rebind it to the first
+    output. ``version`` is the current server model version (traced int,
+    staleness = version - slot_version). Returns ``(new_pop, out)`` where
+    ``out`` carries the admitted cohort / delivered batch plus population
+    counters; sync it with one ``jax.device_get`` per macro step.
+    """
+    jitted = _population_advance_fn(scenario, capacity, buckets, bucket_width,
+                                    admit, deliver, queue_cap,
+                                    draws is not None)
+    if draws is None:
+        return jitted(pop, seeds, version)
+    return jitted(pop, seeds, version, draws)
+
+
+# ---------------------------------------------------------------------------
 # Compiled contracts: the invariants flcheck machine-checks per entry
 # ---------------------------------------------------------------------------
 
@@ -851,5 +910,19 @@ CONTRACTS = {
         "unused_without_momentum": (),
         "min_hard_boundaries": lambda **_: 0,
         "trace_counter": "ENCODE_CHUNK_TRACES",
+    },
+    # The population macro step donates its whole state pytree (arg 0 =
+    # every lifecycle array): the wheel, state codes, free stack and
+    # counters are rewritten in place each step. It has no eager reference
+    # path and no flag argument, so — like qsgd_quantize_chunk — it needs
+    # no hard boundary; its contract is pytree donation aliasing plus the
+    # single-dispatch / zero-retrace-across-macro-steps property checked by
+    # ``contracts._check_population``.
+    "population_advance": {
+        "donate": (0,),
+        "donated_args": ("pop",),
+        "unused_without_momentum": (),
+        "min_hard_boundaries": lambda **_: 0,
+        "trace_counter": "POPULATION_ADVANCE_TRACES",
     },
 }

@@ -1,0 +1,386 @@
+"""Device-resident client population: fused lifecycle state machine.
+
+Every simulated client occupying a slot is one row in a set of
+device-resident arrays, and the whole event loop of the async timeline —
+find the next completion, admit the next cohort, draw its latencies /
+dropouts / tiers, update the deadline wheel and the staleness bookkeeping —
+is ONE jitted dispatch per macro step (``kernels.ops.population_advance``).
+This module holds the kernel-side pieces:
+
+* ``CompiledScenario`` — the frozen, hashable compile-time image of a
+  ``sim.scenarios.ScenarioConfig`` (latency family + parameters, arrival
+  process + calibrated rate, dropout / straggler / bit-width-tier
+  fractions). It is a static argument of the fused entry, so each scenario
+  compiles its draw law straight into the dispatch and the lru-cached jit
+  is shared across engine instances.
+* ``scenario_draws`` — the in-kernel counter-hash draw law. Every random
+  quantity of client ``cid`` is a pure function of ``(run seed, cid,
+  channel)`` through the same murmur-finalizer hash the wire path's
+  batched dither uses (``qsgd._hash_uniform`` keyed by a global index), so
+  a client's interarrival / duration / dropout / tier never depend on
+  admission batching, concurrency, or how the population arrays are tiled.
+* ``make_advance_body`` — the macro-step body: EITHER admit one cohort of
+  ``b`` clients (when the arrival process has reached the next pending
+  completion, ``next_arrival <= next_finish`` — the cohort engine's
+  admission rule) OR pop up to ``d`` completions in deadline order (every
+  wheel entry strictly earlier than the next un-admitted arrival; the
+  remaining deadlines are all later, so batching the pops cannot reorder
+  any delivery against any admission).
+
+**State machine** (int8 per slot): ``IDLE`` (0, free), ``WORKING`` (1, a
+live client training toward its deadline), ``OFFLINE`` (2, a dropout's
+slot — the update was computed but the upload will never arrive; the slot
+stays occupied until its nominal finish, then is reaped without a
+delivery), ``DROPPED`` (3, a reaped dropout slot awaiting reuse). Slot
+recycling goes through an explicit free stack, so slot indices are O(1) to
+allocate and the arrays never compact.
+
+**Deadline wheel**: deadlines live in a ``(buckets, bucket_width)`` f32
+grid (``+inf`` = empty) with a per-bucket min — inserts scatter-min it
+incrementally, so finding the global next completion between steps is an
+``O(buckets)`` argmin instead of a full ``O(capacity)`` scan. Deliveries
+pop a whole BATCH at once: one ``top_k`` over the flattened grid yields
+the ``d`` earliest deadlines already sorted (stable ties = flat-index
+order, identical to a sequential argmin pop), every per-slot update
+becomes a masked scatter over distinct lanes, and the bucket mins are
+rebuilt in one row-reduce. Buckets segment slot space, not time, so no
+wheel rotation or overflow lists are needed and the min is exact.
+
+**Broadcast fan-out**: the engines need ``n_receivers`` — how many
+admitted, non-dropped clients have actually STARTED (arrival <= now) and
+not yet been delivered — at every delivery instant. Arrivals are monotone
+across admissions, so the non-dropped arrival times form an append-only
+sorted queue and ``started(now)`` is one ``searchsorted``; dropped members
+are compacted out per cohort by sorting them to ``+inf`` before the
+append and advancing the tail only past the real entries.
+
+Timing is f32 on device. All comparisons mirror the cohort engine's
+(admit on ``<=``, deliver strictly-earlier completions first), which is
+what makes the host-fed draw mode reproduce ``CohortAsyncFLSimulator``
+trajectories exactly (see ``sim.population``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import qsgd as _qsgd
+
+IDLE, WORKING, OFFLINE, DROPPED = 0, 1, 2, 3
+N_STATES = 4
+
+# draw channels: each random quantity of a client hashes (seed, cid) under
+# its own channel salt, so the streams are independent by construction
+_CH_ARRIVAL, _CH_DURATION, _CH_STRAGGLER, _CH_DROPOUT, _CH_TIER = range(5)
+
+_SQRT2 = math.sqrt(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledScenario:
+    """Compile-time image of one ``ScenarioConfig`` at a fixed concurrency.
+
+    Frozen + hashable: this is a static argument of the fused
+    ``population_advance`` entry, so the scenario's draw law is traced
+    straight into the dispatch (branch-free per family) and the jit cache
+    key covers it. ``rate`` is the calibrated arrival rate
+    (``ScenarioConfig.arrival_rate(concurrency)``) — Little's law, with
+    the straggler slowdown folded in — baked in at compile time.
+    """
+
+    latency: str = "half_normal"
+    latency_scale: float = 1.0
+    lognormal_sigma: float = 1.0
+    trace: Tuple[float, ...] = ()
+    arrival: str = "constant"
+    rate: float = 1.0
+    dropout: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_mult: float = 1.0
+    tier_fracs: Tuple[float, ...] = ()
+
+
+def run_seeds(seed: int) -> jnp.ndarray:
+    """The (2,) uint32 seed pair keying every population draw of a run."""
+    return jnp.asarray([seed & 0xFFFFFFFF, (seed >> 32) ^ 0xA511E9B3],
+                       dtype=jnp.uint32)
+
+
+def _channel_uniform(seeds, channel: int, cids_u32):
+    """f32 uniforms in [0, 1), one per client id, on ``channel``.
+
+    The same counter-hash primitive as the wire path's batched dither
+    (``qsgd._hash_uniform``), keyed by the GLOBAL client id — a client's
+    draw is identical no matter which admission batch, concurrency level
+    or array tiling it lands in.
+    """
+    salt = jnp.uint32((channel + 1) * 0x7F4A7C15 & 0xFFFFFFFF)
+    return _qsgd._hash_uniform(seeds[0], seeds[1] ^ salt, cids_u32)
+
+
+def scenario_draws(scn: CompiledScenario, seeds, cids):
+    """All per-client draws of one admission, keyed only by (seed, cid).
+
+    Returns ``(interarrivals, durations, dropouts, tiers)`` with shapes of
+    ``cids``: f32, f32, bool, int32. Pure and batch-invariant — splitting
+    ``cids`` across calls yields the same per-client values, which is the
+    concurrency/tiling-invariance contract (pinned in tests).
+    """
+    u32 = cids.astype(jnp.uint32)
+    rate = jnp.float32(scn.rate)
+    if scn.arrival == "constant":
+        inter = jnp.full(cids.shape, 1.0 / rate, jnp.float32)
+    else:  # poisson: exponential interarrivals via inverse CDF
+        ua = _channel_uniform(seeds, _CH_ARRIVAL, u32)
+        inter = -jnp.log1p(-ua) / rate
+
+    if scn.latency == "trace":  # replay, cycled by global client id
+        tr = jnp.asarray(scn.trace, jnp.float32)
+        dur = tr[cids % tr.shape[0]]
+    else:
+        ud = _channel_uniform(seeds, _CH_DURATION, u32)
+        if scn.latency == "half_normal":  # |N(0,1)| quantile
+            dur = _SQRT2 * jax.scipy.special.erfinv(ud)
+        elif scn.latency == "lognormal":  # mu = -sigma^2/2 -> mean 1
+            s = scn.lognormal_sigma
+            dur = jnp.exp(-0.5 * s * s + s * jax.scipy.special.ndtri(ud))
+        else:  # uniform U(0.5, 1.5)
+            dur = 0.5 + ud
+    dur = dur.astype(jnp.float32) * jnp.float32(scn.latency_scale)
+    if scn.straggler_frac > 0.0:
+        us = _channel_uniform(seeds, _CH_STRAGGLER, u32)
+        dur = jnp.where(us < scn.straggler_frac,
+                        dur * jnp.float32(scn.straggler_mult), dur)
+
+    if scn.dropout > 0.0:
+        drops = _channel_uniform(seeds, _CH_DROPOUT, u32) < scn.dropout
+    else:
+        drops = jnp.zeros(cids.shape, bool)
+
+    tiers = jnp.full(cids.shape, -1, jnp.int32)
+    if scn.tier_fracs:
+        ut = _channel_uniform(seeds, _CH_TIER, u32)
+        lo = 0.0
+        for j, frac in enumerate(scn.tier_fracs):
+            tiers = jnp.where((ut >= lo) & (ut < lo + frac), j, tiers)
+            lo += frac
+    return inter, dur, drops, tiers
+
+
+# ---------------------------------------------------------------------------
+# Population state
+# ---------------------------------------------------------------------------
+
+
+def wheel_shape(capacity: int) -> Tuple[int, int]:
+    """(buckets, bucket_width) for a ``capacity``-slot wheel: a near-square
+    split so both the bucket-min argmin and the one-row recompute of a pop
+    stay ``O(sqrt(capacity))``."""
+    w = max(8, int(math.ceil(math.sqrt(capacity))))
+    nb = -(-capacity // w)
+    return nb, w
+
+
+def init_population(capacity: int, buckets: int, bucket_width: int,
+                    queue_cap: int) -> Dict[str, jnp.ndarray]:
+    """A fresh population-state dict (the donated pytree of the fused
+    entry). ``buckets * bucket_width >= capacity``; the padding slots past
+    ``capacity`` never enter the free stack, so only ``counts`` needs the
+    true capacity."""
+    p_pad = buckets * bucket_width
+    if p_pad < capacity:
+        raise ValueError(f"wheel {buckets}x{bucket_width} < capacity "
+                         f"{capacity}")
+    inf = jnp.float32(jnp.inf)
+    counts = jnp.zeros((N_STATES,), jnp.int32).at[IDLE].set(capacity)
+    return {
+        "deadline": jnp.full((buckets, bucket_width), inf, jnp.float32),
+        "bucket_min": jnp.full((buckets,), inf, jnp.float32),
+        "state": jnp.zeros((p_pad,), jnp.int8),
+        "stack": jnp.arange(capacity, dtype=jnp.int32),
+        "slot_version": jnp.zeros((p_pad,), jnp.int32),
+        "slot_cid": jnp.full((p_pad,), -1, jnp.int32),
+        "slot_uploads": jnp.zeros((p_pad,), jnp.int32),
+        "arrival_q": jnp.full((queue_cap,), inf, jnp.float32),
+        "counts": counts,
+        "sp": jnp.int32(capacity),
+        "tail": jnp.int32(0),
+        "next_arrival": jnp.float32(0.0),
+        "next_cid": jnp.int32(0),
+        "t": jnp.float32(0.0),
+        "admitted": jnp.int32(0),
+        "delivered": jnp.int32(0),
+        "dropped": jnp.int32(0),
+        "discarded": jnp.int32(0),
+        "error": jnp.int32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The macro-step body
+# ---------------------------------------------------------------------------
+
+
+def make_advance_body(scn: CompiledScenario, capacity: int, buckets: int,
+                      bucket_width: int, admit: int, deliver: int,
+                      queue_cap: int, host_draws: bool):
+    """Build the (pure) macro-step body traced by
+    ``ops._population_advance_fn``. See that entry's docstring for the
+    call contract; this returns ``body(pop, seeds, version[, draws])``.
+    """
+    b, d, w, q = admit, deliver, bucket_width, queue_cap
+    inf = jnp.float32(jnp.inf)
+
+    def body(pop, seeds, version, draws: Optional[dict] = None):
+        version = jnp.asarray(version, jnp.int32)
+        next_finish = jnp.min(pop["bucket_min"])
+        na = pop["next_arrival"]
+        want_admit = na <= next_finish
+        room = (pop["sp"] >= b) & (pop["tail"] + b <= q)
+        do_admit = want_admit & room
+
+        zero_admit = {
+            "admit_cids": jnp.full((b,), -1, jnp.int32),
+            "admit_arrivals": jnp.zeros((b,), jnp.float32),
+            "admit_durations": jnp.zeros((b,), jnp.float32),
+            "admit_drops": jnp.zeros((b,), bool),
+            "admit_tiers": jnp.full((b,), -1, jnp.int32),
+            "admit_slots": jnp.full((b,), -1, jnp.int32),
+        }
+        zero_deliver = {
+            "deliver_slots": jnp.full((d,), -1, jnp.int32),
+            "deliver_cids": jnp.full((d,), -1, jnp.int32),
+            "deliver_t": jnp.zeros((d,), jnp.float32),
+            "deliver_valid": jnp.zeros((d,), bool),
+            "deliver_nrec": jnp.zeros((d,), jnp.int32),
+            "deliver_tau": jnp.zeros((d,), jnp.int32),
+        }
+
+        def admit_branch(pop):
+            cids = pop["next_cid"] + jnp.arange(b, dtype=jnp.int32)
+            if host_draws:
+                inter = draws["inter"].astype(jnp.float32)
+                dur = draws["dur"].astype(jnp.float32)
+                drops = draws["drop"]
+                tiers = draws["tier"].astype(jnp.int32)
+            else:
+                inter, dur, drops, tiers = scenario_draws(scn, seeds, cids)
+            # same accumulation as the cohort engine: member i arrives at
+            # base + sum of the first i interarrivals
+            arr = na + jnp.concatenate(
+                [jnp.zeros((1,), jnp.float32), jnp.cumsum(inter[:-1])])
+            na_new = arr[-1] + inter[-1]
+
+            sp_new = pop["sp"] - b
+            slots = jax.lax.dynamic_slice(pop["stack"], (sp_new,), (b,))
+            dl = arr + dur
+            deadline = pop["deadline"].at[slots // w, slots % w].set(dl)
+            bucket_min = pop["bucket_min"].at[slots // w].min(dl)
+            prev_state = pop["state"][slots].astype(jnp.int32)
+            new_state = jnp.where(drops, OFFLINE, WORKING)
+            state = pop["state"].at[slots].set(new_state.astype(jnp.int8))
+            counts = (pop["counts"].at[prev_state].add(-1)
+                      .at[new_state].add(1))
+            slot_version = pop["slot_version"].at[slots].set(version)
+            slot_cid = pop["slot_cid"].at[slots].set(cids)
+            # append this cohort's non-dropped arrivals (sorted; dropped
+            # members sort to +inf and the tail only advances past the
+            # real entries, so the next append overwrites the inf slots)
+            av = jnp.sort(jnp.where(drops, inf, arr))
+            arrival_q = jax.lax.dynamic_update_slice(
+                pop["arrival_q"], av, (pop["tail"],))
+            n_drop = jnp.sum(drops).astype(jnp.int32)
+            new_pop = dict(
+                pop, deadline=deadline, bucket_min=bucket_min, state=state,
+                slot_version=slot_version, slot_cid=slot_cid,
+                arrival_q=arrival_q, counts=counts, sp=sp_new,
+                tail=pop["tail"] + (b - n_drop), next_arrival=na_new,
+                next_cid=pop["next_cid"] + b,
+                admitted=pop["admitted"] + b,
+                dropped=pop["dropped"] + n_drop)
+            out = dict(zero_deliver, admit_cids=cids, admit_arrivals=arr,
+                       admit_durations=dur, admit_drops=drops,
+                       admit_tiers=tiers, admit_slots=slots)
+            return new_pop, out
+
+        def deliver_branch(pop):
+            # Vectorized batch pop: the d smallest deadlines in ascending
+            # order, ties to the lower flat index (bucket-major, then
+            # column) — top_k's stable tie-break reproduces exactly the
+            # order a one-at-a-time argmin-of-bucket-mins pop produces.
+            # Entries at/after the next un-admitted arrival stay put (ties
+            # go to admission, exactly as the cohort engine's `<=`), and
+            # because the lanes are deadline-sorted the valid pops form a
+            # monotone prefix.
+            neg, idx = jax.lax.top_k(-pop["deadline"].reshape(-1), d)
+            dls = -neg
+            slots = idx.astype(jnp.int32)
+            valid = dls < na
+            vi = valid.astype(jnp.int32)
+            st = pop["state"][slots].astype(jnp.int32)
+            is_work = st == WORKING
+            new_st = jnp.where(is_work, IDLE, DROPPED)
+            # top_k indices are distinct, so the masked scatters (invalid
+            # lanes write their old values back) never collide
+            deadline = pop["deadline"].at[slots // w, slots % w].set(
+                jnp.where(valid, inf, dls))
+            bucket_min = jnp.min(deadline, axis=1)
+            state = pop["state"].at[slots].set(
+                jnp.where(valid, new_st, st).astype(jnp.int8))
+            counts = pop["counts"].at[st].add(-vi).at[new_st].add(vi)
+            # free-stack pushes in pop order; invalid lanes scatter out of
+            # bounds and are dropped
+            push_pos = jnp.where(valid, pop["sp"] + jnp.cumsum(vi) - 1,
+                                 pop["stack"].shape[0])
+            stack = pop["stack"].at[push_pos].set(slots, mode="drop")
+            n_valid = jnp.sum(vi)
+            is_real = valid & is_work
+            # per-lane running delivered total: lane i's fan-out sees its
+            # own delivery already counted, like the sequential pop did
+            delivered = pop["delivered"] + jnp.cumsum(
+                is_real.astype(jnp.int32))
+            started = jnp.searchsorted(pop["arrival_q"], dls,
+                                       side="right").astype(jnp.int32)
+            nrec = jnp.maximum(1, started - delivered)
+            tau = version - pop["slot_version"][slots]
+            t_new = jnp.where(
+                n_valid > 0, jnp.max(jnp.where(valid, dls, -jnp.inf)),
+                pop["t"])
+            new_pop = dict(
+                pop, deadline=deadline, bucket_min=bucket_min, state=state,
+                stack=stack, counts=counts, sp=pop["sp"] + n_valid,
+                delivered=delivered[-1],
+                discarded=pop["discarded"] + jnp.sum(valid & ~is_work),
+                slot_uploads=pop["slot_uploads"].at[slots].add(
+                    is_real.astype(jnp.int32)),
+                t=t_new)
+            out = dict(zero_admit,
+                       deliver_slots=jnp.where(valid, slots, -1),
+                       deliver_cids=pop["slot_cid"][slots],
+                       deliver_t=dls, deliver_valid=is_real,
+                       deliver_nrec=nrec, deliver_tau=tau)
+            return new_pop, out
+
+        new_pop, out = jax.lax.cond(do_admit, admit_branch, deliver_branch,
+                                    pop)
+        new_pop["error"] = pop["error"] | (want_admit & ~room)
+        nf_new = jnp.min(new_pop["bucket_min"])
+        na_new = new_pop["next_arrival"]
+        out.update(
+            admitted=do_admit,
+            will_admit=((na_new <= nf_new) & (new_pop["sp"] >= b)
+                        & (new_pop["tail"] + b <= q)),
+            error=new_pop["error"],
+            next_arrival=na_new, next_finish=nf_new, t=new_pop["t"],
+            state_counts=new_pop["counts"],
+            admitted_total=new_pop["admitted"],
+            delivered_total=new_pop["delivered"],
+            dropped_total=new_pop["dropped"],
+            discarded_total=new_pop["discarded"])
+        return new_pop, out
+
+    return body

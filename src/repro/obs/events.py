@@ -189,6 +189,12 @@ class RunTracer:
             for name in COHORT_TAP_NAMES:
                 out[f"upload/{name}"] = tuple(t[name] for t in upload_taps
                                               if name in t)
+        pops = self.series("eval", "population")
+        if pops:
+            from repro.obs.taps import POPULATION_STATE_NAMES
+            for name in POPULATION_STATE_NAMES:
+                out[f"population/{name}"] = tuple(p[name] for p in pops
+                                                  if name in p)
         return out
 
     # -- export ------------------------------------------------------------

@@ -16,7 +16,10 @@ Schema (one JSON object per line):
   ``compile``: entry, retraces;
 * tap payloads, when present, are flat ``{name: number}`` dicts keyed by
   the published tap layouts (``FLUSH_TAP_NAMES`` on flush events,
-  ``COHORT_TAP_NAMES`` on upload events).
+  ``COHORT_TAP_NAMES`` on upload events);
+* ``eval`` events from the population engine additionally carry a
+  ``population`` object: per-state client counts keyed by
+  ``POPULATION_STATE_NAMES``, non-negative ints.
 """
 from __future__ import annotations
 
@@ -25,7 +28,8 @@ import sys
 from typing import Any, Dict, Iterable, List
 
 from repro.obs.events import EVENT_KINDS
-from repro.obs.taps import COHORT_TAP_NAMES, FLUSH_TAP_NAMES
+from repro.obs.taps import (COHORT_TAP_NAMES, FLUSH_TAP_NAMES,
+                            POPULATION_STATE_NAMES)
 
 REQUIRED_COMMON = ("kind", "seq", "step", "t_sim", "t_wall")
 
@@ -91,6 +95,21 @@ def validate_events(rows: Iterable[Dict[str, Any]]) -> List[str]:
         for f in REQUIRED_BY_KIND[kind]:
             if f not in row:
                 errors.append(f"{where}: missing {f!r}")
+        pop = row.get("population")
+        if pop is not None:
+            if kind != "eval":
+                errors.append(f"{where}: population not allowed on this kind")
+            elif not isinstance(pop, dict):
+                errors.append(f"{where}: population is not an object")
+            else:
+                for k, v in pop.items():
+                    if k not in POPULATION_STATE_NAMES:
+                        errors.append(f"{where}: unknown population state "
+                                      f"{k!r}")
+                    elif not isinstance(v, int) or isinstance(v, bool) \
+                            or v < 0:
+                        errors.append(f"{where}: population count {k!r} must "
+                                      f"be an int >= 0")
         taps = row.get("taps")
         if taps is not None:
             names = _TAP_NAMES_BY_KIND.get(kind)
@@ -139,7 +158,9 @@ def _selftest() -> List[str]:
         {"kind": "drop", "seq": 3, "step": 1, "t_sim": 0.9, "t_wall": 1.3,
          "client": 5, "tau": 12, "reason": "stale"},
         {"kind": "eval", "seq": 4, "step": 1, "t_sim": 1.0, "t_wall": 1.4,
-         "accuracy": 0.75},
+         "accuracy": 0.75,
+         "population": {"idle": 120, "working": 8, "offline": 1,
+                        "dropped": 0}},
         {"kind": "compile", "seq": 5, "step": 1, "t_sim": 1.0, "t_wall": 1.5,
          "entry": "server_flush", "retraces": 1},
     ]
@@ -148,6 +169,10 @@ def _selftest() -> List[str]:
         {"kind": "upload", "seq": 0, "step": 0, "t_sim": 0.0, "t_wall": 0.0},
         {"kind": "eval", "seq": 0, "step": -1, "t_sim": -1.0, "t_wall": 0.0,
          "accuracy": "high"},
+        {"kind": "eval", "seq": 0, "step": 0, "t_sim": 0.0, "t_wall": 0.0,
+         "accuracy": 0.5, "population": {"bogus": 1}},
+        {"kind": "upload", "seq": 0, "step": 0, "t_sim": 0.0, "t_wall": 0.0,
+         "client": 1, "tau": 0, "population": {"idle": 3}},
     ]
     problems = []
     good_errors = validate_events(good)

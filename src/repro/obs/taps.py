@@ -116,6 +116,23 @@ def named_cohort_taps(row) -> Dict[str, float]:
     return _named(COHORT_TAP_NAMES, row)
 
 
+# Lifecycle states of the device-resident population engine, in int8 code
+# order (kernels.population.IDLE/WORKING/OFFLINE/DROPPED). "offline" is a
+# dropped-out client still occupying its slot until its nominal finish;
+# "dropped" is a reaped dropout slot awaiting reuse.
+POPULATION_STATE_NAMES = ("idle", "working", "offline", "dropped")
+
+
+def named_population_counts(vec) -> Dict[str, int]:
+    """Host-side named view of the population engine's (4,) per-state
+    client counts (the population tap carried on eval events)."""
+    arr = np.asarray(vec).reshape(-1)
+    if arr.shape[0] != len(POPULATION_STATE_NAMES):
+        raise ValueError(f"expected {len(POPULATION_STATE_NAMES)} state "
+                         f"counts, got {arr.shape}")
+    return {name: int(v) for name, v in zip(POPULATION_STATE_NAMES, arr)}
+
+
 def decode_qsgd_stack(packed, norms, bits: int, d: int) -> Optional[jnp.ndarray]:
     """In-graph decode of a (b, rows, ...) packed qsgd stack back to the
     (b, d) f32 values its receiver will reconstruct — the qdq half of the

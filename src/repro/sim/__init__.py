@@ -1,4 +1,6 @@
 from repro.sim.cohort import CohortAsyncFLSimulator
 from repro.sim.events import AsyncFLSimulator, SimConfig, SimResult
+from repro.sim.population import (PopulationAsyncFLSimulator,
+                                  PopulationEngine, compile_scenario)
 from repro.sim.scenarios import (SCENARIOS, ScenarioConfig, ScenarioSampler,
                                  get_scenario)

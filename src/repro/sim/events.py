@@ -107,6 +107,12 @@ class BaseAsyncSimulator:
         self.key, sub = jax.random.split(self.key)
         return sub
 
+    def _eval_extra(self) -> Dict[str, Any]:
+        """Extra fields merged into every eval event this engine emits.
+        The population engine overrides this with its per-state client
+        counts; the base engines add nothing."""
+        return {}
+
     def verify_replicas(self) -> bool:
         h = _hidden_wire(self.algo.state)
         if not self.replicas:
@@ -130,7 +136,7 @@ class BaseAsyncSimulator:
             accuracy_trace.append(AccuracyPoint(now, uploads, step, acc))
             if self.tracer is not None:
                 self.tracer.emit("eval", step=step, accuracy=acc,
-                                 uploads=uploads)
+                                 uploads=uploads, **self._eval_extra())
             self._last_eval_step = step
             # `is not None`, NOT truthiness: target_accuracy=0.0 is a real
             # target (e.g. "stop at break-even" on signed scores) that a
@@ -153,7 +159,8 @@ class BaseAsyncSimulator:
             if self.tracer is not None:
                 self.tracer.set_sim_time(now)
                 self.tracer.emit("eval", step=self.algo.state.t,
-                                 accuracy=final_acc, uploads=uploads)
+                                 accuracy=final_acc, uploads=uploads,
+                                 **self._eval_extra())
         if self.tracer is not None:
             # one terminal poll records any (re)compiles of the fused
             # entries that happened during the run (warm-cache dependent,

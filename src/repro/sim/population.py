@@ -1,0 +1,365 @@
+"""Million-client device-resident population engine.
+
+The cohort engine (``repro.sim.cohort``) already batches TRAINING, but its
+client lifecycle — arrivals, latency draws, dropout, in-flight heaps,
+broadcast fan-out counting — is still per-client Python: heaps of tuples,
+one ``heappush``/``heappop`` pair per upload. At concurrency 1M that
+bookkeeping alone dwarfs the model math. Here the whole population lives in
+device arrays (``kernels.population``) and the event loop collapses to one
+jitted ``kernels.ops.population_advance`` dispatch per MACRO step — admit a
+cohort, or deliver a batch of completions — with exactly one
+device->host sync per macro step.
+
+Two engines share the substrate:
+
+* ``PopulationAsyncFLSimulator`` — a drop-in sibling of
+  ``CohortAsyncFLSimulator`` (same constructor shape + ``draws`` mode): the
+  kernel runs the timeline, the host runs training/receive on the emitted
+  cohorts and delivery batches through the SAME fused client/server entries.
+  With ``draws="host"`` the per-client randomness comes from the scenario's
+  ``ScenarioSampler`` (identical numpy stream to the cohort engine, making
+  trajectories match it event for event — the equivalence pin); with
+  ``draws="device"`` (default) every draw happens in-kernel under the
+  counter-hash law keyed by global client id, so the timeline itself is
+  concurrency-batch- and tiling-invariant and never touches host RNG.
+* ``PopulationEngine`` — the lifecycle substrate alone (no model), used to
+  measure and scale the population machinery itself: ``advance_to(horizon)``
+  runs admissions + deliveries to a sim-time horizon at 1M clients in a few
+  thousand dispatches.
+
+**Equivalence with the cohort engine** (pinned in tests/test_population.py):
+admission fires on ``next_arrival <= next_finish`` and deliveries drain all
+completions strictly earlier than the next arrival — the cohort engine's
+exact loop structure — and dropped-out members occupy their slot until
+their nominal finish but are reaped without a delivery, which cannot
+reorder any real event (a reap consumes nothing host-side). Event times are
+f32 on device vs float64 on host, so pins compare the event/accuracy
+SEQUENCE bit-exactly and times to f32 tolerance; model state (parameters,
+accuracies, staleness, fan-out counts) is integer/key-driven and matches
+bit for bit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.core.qafel import QAFeL
+from repro.core.staleness import StalenessMonitor
+from repro.kernels.population import (CompiledScenario, init_population,
+                                      run_seeds, wheel_shape)
+from repro.obs.taps import POPULATION_STATE_NAMES
+from repro.sim.cohort import CohortAsyncFLSimulator
+from repro.sim.events import SimConfig, SimResult
+from repro.sim.scenarios import ScenarioConfig, get_scenario
+
+
+def compile_scenario(cfg: ScenarioConfig, concurrency: int) -> CompiledScenario:
+    """The frozen compile-time image of ``cfg`` at ``concurrency`` — the
+    static scenario argument of the fused ``population_advance`` entry.
+    Quantizer names are dropped (tiers become index fractions; the host maps
+    indices back to quantizers exactly as the cohort engine does)."""
+    return CompiledScenario(
+        latency=cfg.latency, latency_scale=cfg.latency_scale,
+        lognormal_sigma=cfg.lognormal_sigma, trace=cfg.trace,
+        arrival=cfg.arrival, rate=cfg.arrival_rate(concurrency),
+        dropout=cfg.dropout, straggler_frac=cfg.straggler_frac,
+        straggler_mult=cfg.straggler_mult,
+        tier_fracs=tuple(f for f, _ in cfg.tiers))
+
+
+def _fetch(out) -> Dict[str, np.ndarray]:
+    """The ONE device->host sync of a macro step: the whole out dict crosses
+    in a single transfer; everything downstream reads host numpy."""
+    return jax.device_get(out)
+
+
+def _sizing(concurrency: int, admit: int) -> int:
+    """Slot capacity: the in-flight population fluctuates around the
+    calibrated concurrency; headroom covers the fluctuation band plus the
+    speculative admission batch (capacity exhaustion raises, it never
+    silently drops)."""
+    return int(1.5 * concurrency) + 8 * admit + 64
+
+
+def _round_queue(n: int, quantum: int = 4096) -> int:
+    """Arrival-queue capacities round up to a quantum: queue_cap is a
+    static of the fused entry, so without rounding every distinct
+    max_uploads / horizon value would recompile the macro step."""
+    return -(-int(n) // quantum) * quantum
+
+
+class PopulationAsyncFLSimulator(CohortAsyncFLSimulator):
+    """The async FL timeline with a device-resident client population.
+
+    Same observable protocol as ``CohortAsyncFLSimulator`` — cohorts of
+    ``cohort_size`` train through the fused client entry, uploads feed
+    ``QAFeL.receive`` in completion order with the exact broadcast fan-out
+    counts — but arrivals, latencies, dropouts, deadline ordering, fan-out
+    counting and per-state population accounting all happen inside the
+    fused lifecycle kernel.
+
+    ``draws="device"`` (default): all scenario randomness is drawn in-kernel
+    from the counter-hash law keyed by (run seed, global client id).
+    ``draws="host"``: the ``ScenarioSampler`` feeds the kernel, consuming
+    the numpy stream in the cohort engine's order — the bit-compatible
+    replay mode.
+    """
+
+    def __init__(self, algo: QAFeL, sim_cfg: SimConfig,
+                 client_batches_fn: Callable[[int, Any], Any],
+                 eval_fn: Callable[[Any], float],
+                 scenario: Union[str, ScenarioConfig] = "identity",
+                 cohort_size: int = 32, *, draws: str = "device",
+                 deliver_batch: Optional[int] = None,
+                 capacity: Optional[int] = None):
+        super().__init__(algo, sim_cfg, client_batches_fn, eval_fn,
+                         scenario=scenario, cohort_size=cohort_size)
+        if draws not in ("device", "host"):
+            raise ValueError(f"draws must be 'device' or 'host': {draws!r}")
+        self.draw_mode = draws
+        b = self.cohort_size
+        self.capacity = int(capacity) if capacity is not None else _sizing(
+            sim_cfg.concurrency, b)
+        self.buckets, self.bucket_width = wheel_shape(self.capacity)
+        self.deliver_batch = (int(deliver_batch) if deliver_batch is not None
+                              else b)
+        # non-dropped arrivals are append-only for the fan-out searchsorted:
+        # bounded by delivered uploads + everything still in flight. Rounded
+        # up to a 4096 quantum: queue_cap is a static of the fused entry,
+        # and without rounding every max_uploads value would recompile it
+        self.queue_cap = _round_queue(sim_cfg.max_uploads + 2 * self.capacity
+                                      + 8 * b + 64)
+        self.compiled = compile_scenario(self.scenario, sim_cfg.concurrency)
+        self._seeds = run_seeds(sim_cfg.seed)
+        self._statics = dict(
+            scenario=self.compiled, capacity=self.capacity,
+            buckets=self.buckets, bucket_width=self.bucket_width,
+            admit=b, deliver=self.deliver_batch, queue_cap=self.queue_cap)
+        self._zero_draws = {
+            "inter": np.zeros(b, np.float32),
+            "dur": np.zeros(b, np.float32),
+            "drop": np.zeros(b, bool),
+            "tier": np.full(b, -1, np.int32)}
+        self._state_counts = dict.fromkeys(POPULATION_STATE_NAMES, 0)
+        self._state_counts["idle"] = self.capacity
+
+    # -- telemetry ---------------------------------------------------------
+    def _eval_extra(self) -> Dict[str, Any]:
+        return {"population": dict(self._state_counts)}
+
+    # -- host-fed draws ----------------------------------------------------
+    def _host_draws(self) -> Dict[str, np.ndarray]:
+        """One admission's sampler draws, consumed in the cohort engine's
+        numpy order (interarrivals, tiers, durations, dropouts — the jax
+        key draws in between touch a different stream), cast to the
+        kernel's dtypes."""
+        b = self.cohort_size
+        inter = self.sampler.interarrivals(b)
+        tiers = self.sampler.tier_indices(b)
+        dur = self.sampler.durations(b)
+        drops = self.sampler.dropouts(b)
+        return {"inter": inter.astype(np.float32),
+                "dur": dur.astype(np.float32),
+                "drop": np.asarray(drops, dtype=bool),
+                "tier": tiers.astype(np.int32)}
+
+    # -- cohort training off the kernel's admission ------------------------
+    def _admit_from_kernel(self, o, pending: Dict[int, Any]) -> None:
+        """Train + encode the cohort the kernel just admitted, keyed by the
+        kernel's slot assignment. Key draws replicate ``_admit_cohort``
+        exactly (b=1 sequential, else one 2B+1 split)."""
+        b = self.cohort_size
+        first = int(o["admit_cids"][0])
+        drops = o["admit_drops"]
+        slots = o["admit_slots"]
+        tiers = np.asarray(o["admit_tiers"], dtype=np.int64)
+        if b == 1:
+            batch_keys = [self._next_key()]
+            k_train, k_enc = jax.random.split(self._next_key())
+            train_keys, enc_keys = [k_train], [k_enc]
+        else:
+            subs = jax.random.split(self.key, 2 * b + 1)
+            self.key = subs[0]
+            batch_keys = np.asarray(subs[1:b + 1])
+            te = jax.vmap(jax.random.split)(subs[b + 1:])
+            train_keys, enc_keys = te[:, 0], te[:, 1]
+        stacked = b > 1 and getattr(self.client_batches_fn, "batched", False)
+        if stacked:
+            batches = self.client_batches_fn(
+                np.arange(first, first + b), batch_keys)
+        else:
+            batches = [self.client_batches_fn(first + i, batch_keys[i])
+                       for i in range(b)]
+        msgs = self._train_encode_cohort(batches, train_keys, enc_keys, tiers,
+                                         stacked=stacked)
+        for i in range(b):
+            if drops[i]:
+                self.dropped += 1
+                if self.tracer is not None:
+                    self.tracer.emit("drop", step=self.algo.state.t,
+                                     client=first + i, tau=0,
+                                     reason="dropout")
+                continue
+            msgs[i].meta["client"] = first + i
+            pending[int(slots[i])] = msgs[i]
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> SimResult:
+        from repro.kernels import ops as kops  # local: kernels optional
+        cfg, algo = self.cfg, self.algo
+        pop = init_population(self.capacity, self.buckets, self.bucket_width,
+                              self.queue_cap)
+        pending: Dict[int, Any] = {}  # slot -> in-flight Message
+        accuracy_trace: List[tuple] = []
+        uploads = 0
+        now = 0.0
+        self._last_eval_step = -1
+        reached = False
+        host = self.draw_mode == "host"
+        will_admit = True  # a fresh population always admits first
+        while uploads < cfg.max_uploads and not reached:
+            draws = None
+            if host:
+                draws = self._host_draws() if will_admit else self._zero_draws
+            pop, out = kops.population_advance(pop, self._seeds, algo.state.t,
+                                               draws, **self._statics)
+            o = _fetch(out)
+            if o["error"]:
+                raise RuntimeError(
+                    f"population capacity exhausted (capacity="
+                    f"{self.capacity}, queue_cap={self.queue_cap}); pass a "
+                    f"larger capacity= for this scenario")
+            if host and bool(o["admitted"]) != will_admit:
+                raise AssertionError(
+                    "host draw schedule desynced from kernel admission")
+            will_admit = bool(o["will_admit"])
+            self._state_counts = {
+                name: int(c) for name, c
+                in zip(POPULATION_STATE_NAMES, o["state_counts"])}
+            if o["admitted"]:
+                self._admit_from_kernel(o, pending)
+                continue
+            for j in range(self.deliver_batch):
+                # reaped dropouts pop with deliver_valid False: no host work
+                if not o["deliver_valid"][j]:
+                    continue
+                now = float(o["deliver_t"][j])
+                msg = pending.pop(int(o["deliver_slots"][j]))
+                if self.tracer is not None:
+                    self.tracer.set_sim_time(now)
+                bmsg = algo.receive(msg, self._next_receive_key(),
+                                    n_receivers=int(o["deliver_nrec"][j]))
+                uploads += 1
+                if bmsg is not None:
+                    reached = self._apply_broadcast(bmsg, now, uploads,
+                                                    accuracy_trace)
+                if uploads >= cfg.max_uploads or reached:
+                    break
+        return self._finalize(reached=reached, uploads=uploads, now=now,
+                              accuracy_trace=accuracy_trace,
+                              dropped_uploads=self.dropped,
+                              population_states=dict(self._state_counts))
+
+
+class PopulationEngine:
+    """The lifecycle substrate alone: admissions, completions, dropout
+    reaping and staleness accounting over the device-resident population,
+    with no model attached — the population analogue of a dry run, used to
+    size and benchmark the machinery at 100k/1M clients.
+
+    ``version`` advances every ``buffer_size`` deliveries (the buffered
+    server's flush cadence), so per-delivery staleness flows through
+    ``StalenessMonitor.observe_batch`` exactly as a full run would feed it,
+    at macro-step granularity.
+    """
+
+    def __init__(self, scenario: Union[str, ScenarioConfig] = "identity",
+                 concurrency: int = 1000, *, horizon: float = 10.0,
+                 seed: int = 0, buffer_size: int = 32,
+                 admit_batch: Optional[int] = None,
+                 deliver_batch: Optional[int] = None,
+                 capacity: Optional[int] = None, max_staleness: int = 0):
+        self.scenario = get_scenario(scenario)
+        self.concurrency = int(concurrency)
+        self.compiled = compile_scenario(self.scenario, self.concurrency)
+        # large admission batches are what keep 1M-client runs at O(1000)
+        # dispatches: admitting B clients advances the arrival clock by
+        # B/rate, which lets the next deliver step drain ~B completions
+        b = int(admit_batch) if admit_batch is not None else max(
+            1, min(1024, self.concurrency // 2))
+        self.admit_batch = b
+        self.deliver_batch = (int(deliver_batch) if deliver_batch is not None
+                              else b)
+        self.capacity = int(capacity) if capacity is not None else _sizing(
+            self.concurrency, b)
+        self.buckets, self.bucket_width = wheel_shape(self.capacity)
+        self.horizon = float(horizon)
+        # every arrival admitted before the horizon fits: rate * horizon
+        # arrivals plus one speculative batch, plus slack
+        self.queue_cap = _round_queue(
+            int(self.compiled.rate * self.horizon) + 2 * b
+            + self.capacity + 64)
+        self.buffer_size = int(buffer_size)
+        self.monitor = StalenessMonitor(max_allowed=max_staleness)
+        self.pop = init_population(self.capacity, self.buckets,
+                                   self.bucket_width, self.queue_cap)
+        self._seeds = run_seeds(seed)
+        self._statics = dict(
+            scenario=self.compiled, capacity=self.capacity,
+            buckets=self.buckets, bucket_width=self.bucket_width,
+            admit=b, deliver=self.deliver_batch, queue_cap=self.queue_cap)
+        self.version = 0
+        self.macro_steps = 0
+        self._na = 0.0
+        self._nf = math.inf
+        self._o: Optional[Dict[str, np.ndarray]] = None
+
+    def advance_to(self, t: float) -> Dict[str, Any]:
+        """Run the lifecycle until every pending event is past sim-time
+        ``t`` (must be <= the constructed horizon: the arrival queue is
+        sized for it). Returns ``metrics()``."""
+        if t > self.horizon + 1e-9:
+            raise ValueError(f"advance_to({t}) beyond sized horizon "
+                             f"{self.horizon}")
+        from repro.kernels import ops as kops
+        while min(self._na, self._nf) <= t:
+            self.pop, out = kops.population_advance(
+                self.pop, self._seeds, self.version, None, **self._statics)
+            o = _fetch(out)
+            if o["error"]:
+                raise RuntimeError(
+                    f"population capacity exhausted (capacity="
+                    f"{self.capacity}); pass a larger capacity=")
+            self.macro_steps += 1
+            if not o["admitted"]:
+                taus = o["deliver_tau"][o["deliver_valid"]]
+                if taus.size:
+                    self.monitor.observe_batch(taus)
+            self.version = int(o["delivered_total"]) // self.buffer_size
+            self._na = float(o["next_arrival"])
+            self._nf = float(o["next_finish"])
+            self._o = o
+        return self.metrics()
+
+    def metrics(self) -> Dict[str, Any]:
+        o = self._o
+        if o is None:
+            counts = dict.fromkeys(POPULATION_STATE_NAMES, 0)
+            counts["idle"] = self.capacity
+            return {"population_states": counts, "sim_time": 0.0,
+                    "admitted": 0, "delivered": 0, "dropped": 0,
+                    "discarded": 0, "macro_steps": 0,
+                    "staleness": self.monitor.summary()}
+        counts = {name: int(c) for name, c
+                  in zip(POPULATION_STATE_NAMES, o["state_counts"])}
+        return {"population_states": counts,
+                "sim_time": float(o["t"]),
+                "admitted": int(o["admitted_total"]),
+                "delivered": int(o["delivered_total"]),
+                "dropped": int(o["dropped_total"]),
+                "discarded": int(o["discarded_total"]),
+                "macro_steps": self.macro_steps,
+                "staleness": self.monitor.summary()}

@@ -307,6 +307,19 @@ def test_compiled_pass_ndev1_clean():
     assert res.checks >= 20
 
 
+def test_compiled_population_contract_clean():
+    """The population macro step holds its compiled contracts: whole-pytree
+    donation aliasing, one dispatch per macro step, zero retraces for a
+    fresh population with identical statics."""
+    from repro.analysis_static.contracts import _check_population
+
+    findings = []
+    checks = _check_population(1, findings)
+    assert findings == [], "\n".join(
+        f"{f.location()}: [{f.rule}] {f.message}" for f in findings)
+    assert checks >= 4
+
+
 def test_alias_header_parser():
     from repro.analysis_static.contracts import parse_io_aliases
 
