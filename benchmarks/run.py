@@ -70,10 +70,12 @@ SUITES = ["kernel", "roofline", "table1", "fig3", "table2"]
 # rows the --check gate covers: the fused-path speedup families plus the
 # sharded-substrate overhead rows (shard/*_speedup_ndevN and the 2-D
 # shard2d/*_speedup rows — sub-parity on a 2-core CI box, gated so the
-# sharding/chunking overhead can't silently balloon) and the population
-# engine's uploads/sec-vs-event-loop acceptance row
+# sharding/chunking overhead can't silently balloon), the population
+# engine's uploads/sec-vs-event-loop acceptance row, and the lowrank
+# upload-bytes reduction rows (wire/lowrank_*_speedup_* — deterministic
+# byte ratios, so the gate pins the wire law itself, not a wall clock)
 _GATED_PREFIXES = ("server/flush_", "sim/cohort_step_", "shard/", "shard2d/",
-                   "sim/population_")
+                   "sim/population_", "wire/")
 
 
 def _speedup_value(row) -> float | None:

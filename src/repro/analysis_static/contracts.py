@@ -90,14 +90,14 @@ def _probe_loss(params, batch, key):
 
 
 def _make_algo(server_quantizer: str, server_momentum: float, mesh,
-               taps: bool = False):
+               taps: bool = False, client_quantizer: str = "qsgd4"):
     import jax.numpy as jnp
 
     from repro.core.qafel import QAFeL, QAFeLConfig
     qcfg = QAFeLConfig(client_lr=0.1, server_lr=1.0,
                        server_momentum=server_momentum,
                        buffer_size=2, local_steps=1,
-                       client_quantizer="qsgd4",
+                       client_quantizer=client_quantizer,
                        server_quantizer=server_quantizer)
     params0 = {"w": jnp.zeros((_PROBE_D,), jnp.float32)}
     telemetry = None
@@ -219,8 +219,10 @@ def _lower_entry(entry: str, args: tuple, kwargs: dict) -> str:
                                       p["layout"], p["b"], p["mesh"],
                                       p["taps"], p["member_chunk"],
                                       p["chunk_rows"])
+        rest = ((p["residual"], p["basis_seed"])
+                if p["spec"].kind == "lowrank" else ())
         return jitted.lower(p["hidden_flat"], p["batches"], p["k_train"],
-                            p["k_enc"], p["flag"]).compile().as_text()
+                            p["k_enc"], p["flag"], *rest).compile().as_text()
     return getattr(kops, entry).lower(*args, **kwargs).compile().as_text()
 
 
@@ -250,8 +252,17 @@ def _check_hlo(entry: str, label: str, ndev: int, args: tuple, kwargs: dict,
             f"update contract is not established in the compiled module"))
 
     # 2. hard_boundary conditionals survived compilation (the telemetry
-    # tap squares declare one extra cond when taps=True)
-    want = contract["min_hard_boundaries"](sbits=sbits, beta=beta, taps=taps)
+    # tap squares declare one extra cond when taps=True; a lowrank window /
+    # cohort declares its per-upload expansion / shared projection conds)
+    bkw = dict(sbits=sbits, beta=beta, taps=taps)
+    if entry.startswith("server_flush_step"):
+        group = kwargs.get("group")
+        if group is not None:
+            bkw.update(group=group, lowrank_k=int(args[3].shape[0]))
+    elif entry == "cohort_train_encode_step":
+        spec = args[2] if len(args) > 2 else kwargs.get("spec")
+        bkw["lowrank"] = getattr(spec, "kind", None) == "lowrank"
+    want = contract["min_hard_boundaries"](**bkw)
     n_cond = count_conditionals(hlo)
     checks += 1
     if n_cond < want:
@@ -268,15 +279,19 @@ def _check_flush(mesh, ndev: int, findings: List[Finding]) -> int:
     from repro.kernels import ops as kops
     entry = "server_flush_step" if mesh is None else "server_flush_step_sharded"
     checks = 0
-    for label, squant, momentum, taps in (
-            ("qsgd4+momentum", "qsgd4", 0.3, False),
-            ("identity+nomomentum", "identity", 0.0, False),
+    for label, squant, momentum, taps, cquant in (
+            ("qsgd4+momentum", "qsgd4", 0.3, False, "qsgd4"),
+            ("identity+nomomentum", "identity", 0.0, False, "qsgd4"),
             # telemetry taps ride the SAME dispatch: all contracts (donation,
             # boundary floor incl. the tap cond, single dispatch, no retrace)
             # must hold with the tap vector threaded through
-            ("qsgd4+momentum+taps", "qsgd4", 0.3, True)):
+            ("qsgd4+momentum+taps", "qsgd4", 0.3, True, "qsgd4"),
+            # lowrank fill window: the flush dequantize-accumulates in d_r
+            # space and expands per upload inside the SAME single dispatch
+            ("qsgd4+lowrank", "qsgd4", 0.3, False, "lowrank4g32")):
         cap = _Capture((entry,))
-        algo = _make_algo(squant, momentum, mesh, taps=taps)
+        algo = _make_algo(squant, momentum, mesh, taps=taps,
+                          client_quantizer=cquant)
         with cap, trace_guard("server_flush", retraces=None) as g:
             _drive(algo, 2, guard=g)
         checks += 2
@@ -298,7 +313,8 @@ def _check_flush(mesh, ndev: int, findings: List[Finding]) -> int:
         checks += 1
         try:
             with trace_guard("server_flush", retraces=0) as g2:
-                _drive(_make_algo(squant, momentum, mesh, taps=taps), 1,
+                _drive(_make_algo(squant, momentum, mesh, taps=taps,
+                                  client_quantizer=cquant), 1,
                        guard=g2, seed=1)
         except TraceGuardError as exc:
             findings.append(Finding(
@@ -312,9 +328,14 @@ def _check_flush(mesh, ndev: int, findings: List[Finding]) -> int:
 def _check_cohort(mesh, ndev: int, findings: List[Finding]) -> int:
     entry = "cohort_train_encode_step"
     checks = 0
-    for label, taps in (("qsgd4", False), ("qsgd4+taps", True)):
+    for label, taps, cquant in (
+            ("qsgd4", False, "qsgd4"), ("qsgd4+taps", True, "qsgd4"),
+            # lowrank cohort: project + quantize-pack + in-graph decode +
+            # residual update, still ONE fused dispatch
+            ("lowrank4g32", False, "lowrank4g32")):
         cap = _Capture((entry,))
-        algo = _make_algo("qsgd4", 0.3, mesh, taps=taps)
+        algo = _make_algo("qsgd4", 0.3, mesh, taps=taps,
+                          client_quantizer=cquant)
         with cap, trace_guard("cohort_step", retraces=None) as g:
             _drive(algo, 1, guard_client=g)
         checks += 2
@@ -333,7 +354,8 @@ def _check_cohort(mesh, ndev: int, findings: List[Finding]) -> int:
         checks += 1
         try:
             with trace_guard("cohort_step", retraces=0) as g2:
-                _drive(_make_algo("qsgd4", 0.3, mesh, taps=taps), 1,
+                _drive(_make_algo("qsgd4", 0.3, mesh, taps=taps,
+                                  client_quantizer=cquant), 1,
                        guard_client=g2, seed=1)
         except TraceGuardError as exc:
             findings.append(Finding(

@@ -58,11 +58,25 @@ class FlushBatch:
     norms: Any = None  # (K, rows) f32 bucket norms, or None
     weights: Any = None  # (K,) f32, normalized, or None
     extra: Any = None  # (n,) flat f32 residual, pre-scaled, or None
+    # lowrank windows: the stack holds RANK-length subspace wire pairs and
+    # every upload carries its own (2,) basis seed (mixed-staleness windows
+    # span basis versions)
+    kind: Optional[str] = None  # upload kind of the stacked pairs
+    seeds: Any = None  # (K, 2) uint32 per-upload basis seeds, or None
+    rank: Optional[int] = None  # subspace dimension d_r
+    group: Optional[int] = None  # sketch group g (d_r = padded n / g)
 
     def reduce(self):
         """Aggregate to the flat Delta-bar (the non-fused reference path)."""
         from repro.kernels import ops as kops  # local import: kernels are optional
 
+        if self.stack is not None and self.kind == "lowrank":
+            d_pad = kops.rows_for(self.n) * kops.BUCKET
+            flat = kops.lowrank_window_delta(
+                self.stack, self.norms, self.weights, self.seeds,
+                lambda v: v, bits=self.bits, group=self.group,
+                y_width=d_pad // self.group, elem0=0, n_out=d_pad)[:self.n]
+            return flat if self.extra is None else self.extra + flat
         if self.stack is not None:
             flat = kops.buffer_aggregate(self.stack, self.norms, self.weights,
                                          self.bits, self.n)
@@ -87,6 +101,10 @@ class UpdateBuffer:
     _bits: Optional[int] = None
     _n: Optional[int] = None
     _flat_acc: Any = None  # identity packed mode: flat f32 accumulator
+    # lowrank packed mode: per-upload (2,) basis seeds + window sketch shape
+    _seeds: List[Any] = dataclasses.field(default_factory=list)
+    _rank: Optional[int] = None
+    _group: Optional[int] = None
 
     def add(self, delta, weight: float = 1.0) -> None:
         """Tree mode: accumulate an already-decoded delta (flattened here)."""
@@ -143,6 +161,25 @@ class UpdateBuffer:
             from repro.kernels import ops as kops
             if enc["norms"].shape[0] != kops.rows_for(enc["n"]):
                 raise ValueError("corrupt qsgd message: norms/rows mismatch")
+        if kind == "lowrank":
+            from repro.kernels import ops as kops
+            spec = self.quantizer.spec
+            if enc.get("group") != spec.group:
+                raise ValueError(f"lowrank sketch group mismatch: "
+                                 f"{enc.get('group')} != {spec.group}")
+            if enc.get("rank") != spec.rank(enc["n"]):
+                raise ValueError(f"corrupt lowrank message: rank "
+                                 f"{enc.get('rank')} != {spec.rank(enc['n'])}")
+            if enc["norms"].shape[0] != kops.rows_for(enc["rank"]):
+                raise ValueError("corrupt lowrank message: norms/rows "
+                                 "mismatch over the rank-length payload")
+            seed = np.asarray(enc["seed"], np.uint32).reshape(-1)
+            if seed.shape[0] != 2:
+                raise ValueError("corrupt lowrank message: basis seed must "
+                                 "be (2,) uint32")
+            if self._rank is not None and enc["rank"] != self._rank:
+                raise ValueError(f"lowrank rank mismatch: {enc['rank']} != "
+                                 f"{self._rank}")
         if self._layout is None:
             self._layout = enc["layout"]
             self._n = enc["n"]
@@ -151,6 +188,11 @@ class UpdateBuffer:
 
         if kind == "qsgd":
             self._packed.append((enc["packed"], enc["norms"]))
+        elif kind == "lowrank":
+            self._packed.append((enc["packed"], enc["norms"]))
+            self._seeds.append(np.asarray(enc["seed"], np.uint32).reshape(2))
+            self._rank = enc["rank"]
+            self._group = enc["group"]
         elif kind == "identity":
             if self._flat_acc is None:
                 self._flat_acc = enc["payload"] * weight
@@ -249,6 +291,9 @@ class UpdateBuffer:
         self._bits = None
         self._n = None
         self._flat_acc = None
+        self._seeds = []
+        self._rank = None
+        self._group = None
         self.count = 0
         self.flushes += 1
 
@@ -269,10 +314,12 @@ class UpdateBuffer:
         kind = self.quantizer.spec.kind if self.quantizer is not None else None
 
         stack = norms = weights = extra = None
-        if self._packed and kind == "qsgd":
+        seeds = rank = group = win_kind = None
+        if self._packed and kind in ("qsgd", "lowrank"):
             # Cohort-encoded wire payloads are numpy (host bytes): stack
             # them host-side — one transfer into the kernel call instead of
-            # K device stacks.
+            # K device stacks. Lowrank stacks are RANK-length wire pairs;
+            # the per-upload basis seeds ride along as one (K, 2) array.
             if all(isinstance(p, np.ndarray) for p, _ in self._packed):
                 stack = np.stack([p for p, _ in self._packed])
                 norms = np.stack([nm for _, nm in self._packed])
@@ -280,6 +327,10 @@ class UpdateBuffer:
                 stack = jnp.stack([p for p, _ in self._packed])
                 norms = jnp.stack([nm for _, nm in self._packed])
             weights = jnp.asarray(self._weights, jnp.float32) / denom
+            win_kind = kind
+            if kind == "lowrank":
+                seeds = np.stack(self._seeds).astype(np.uint32)
+                rank, group = self._rank, self._group
         elif self._packed:  # sparse: scatter-add into one flat sum
             extra = jnp.zeros((n,), jnp.float32)
             for (idx, vals), w in zip(self._packed, self._weights):
@@ -293,7 +344,8 @@ class UpdateBuffer:
             scaled = (1.0 / denom) * self._acc
             extra = scaled if extra is None else scaled + extra
         batch = FlushBatch(n=n, layout=layout, bits=bits, stack=stack,
-                           norms=norms, weights=weights, extra=extra)
+                           norms=norms, weights=weights, extra=extra,
+                           kind=win_kind, seeds=seeds, rank=rank, group=group)
         self._reset()
         return batch
 

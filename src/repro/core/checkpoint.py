@@ -76,6 +76,12 @@ def save_checkpoint(path, algo) -> None:
                      "n_padded": int(st.x_flat.shape[0])},
         "quantizers": {"client": algo.cq.spec.label(),
                        "server": algo.sq.spec.label()},
+        "basis_seed": int(getattr(algo, "basis_seed", 0)),
+        # lowrank error-feedback residuals are server-held in the simulator
+        # (one (d,) f32 row per client that has uploaded); ids may include
+        # null for the sequential default client
+        "residual_cids": [None if c is None else int(c)
+                          for c in getattr(algo, "_residuals", {})],
         "buffer": {
             "capacity": int(buf.capacity),
             "count": int(buf.count),
@@ -85,6 +91,8 @@ def save_checkpoint(path, algo) -> None:
             "bits": None if buf._bits is None else int(buf._bits),
             "n": None if buf._n is None else int(buf._n),
             "n_packed": len(buf._packed),
+            "rank": None if buf._rank is None else int(buf._rank),
+            "group": None if buf._group is None else int(buf._group),
             "has_layout": buf._layout is not None,
             "has_acc": buf._acc is not None,
             "has_flat_acc": buf._flat_acc is not None,
@@ -107,10 +115,17 @@ def save_checkpoint(path, algo) -> None:
             [np.asarray(a) for a, _ in buf._packed])
         arrays["buf_packed_b"] = np.stack(
             [np.asarray(b) for _, b in buf._packed])
+    if buf._seeds:
+        arrays["buf_seeds"] = np.stack(
+            [np.asarray(s) for s in buf._seeds]).astype(np.uint32)
     if buf._acc is not None:
         arrays["buf_acc"] = np.asarray(buf._acc)
     if buf._flat_acc is not None:
         arrays["buf_flat_acc"] = np.asarray(buf._flat_acc)
+    residuals = getattr(algo, "_residuals", {})
+    if residuals:
+        arrays["residual_stack"] = np.stack(
+            [np.asarray(residuals[c], np.float32) for c in residuals])
     np.savez(_normalize_path(path), __meta__=np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8), **arrays)
 
@@ -149,6 +164,12 @@ def load_checkpoint(path, algo):
     if meta["quantizers"] != want_q:
         raise ValueError(f"checkpoint quantizers {meta['quantizers']} != "
                          f"algo quantizers {want_q}")
+    ck_bseed = meta.get("basis_seed", 0)
+    if ck_bseed != int(getattr(algo, "basis_seed", 0)):
+        raise ValueError(
+            f"checkpoint basis_seed {ck_bseed} != algo basis_seed "
+            f"{getattr(algo, 'basis_seed', 0)}: a resumed lowrank run would "
+            "derive different sketch bases")
     bmeta = meta["buffer"]
     if bmeta["capacity"] != algo.buffer.capacity:
         raise ValueError(f"checkpoint buffer capacity {bmeta['capacity']} != "
@@ -189,6 +210,18 @@ def load_checkpoint(path, algo):
     buf._layout = layout if bmeta["has_layout"] else None
     buf.count = bmeta["count"]
     buf.flushes = bmeta["flushes"]
+    # lowrank window state (absent on pre-lowrank archives)
+    buf._rank = bmeta.get("rank")
+    buf._group = bmeta.get("group")
+    buf._seeds = ([arrays["buf_seeds"][i]
+                   for i in range(arrays["buf_seeds"].shape[0])]
+                  if "buf_seeds" in arrays else [])
+    rcids = meta.get("residual_cids", [])
+    if hasattr(algo, "_residuals"):
+        algo._residuals = {
+            (None if c is None else int(c)):
+                jnp.asarray(arrays["residual_stack"][i])
+            for i, c in enumerate(rcids)}
 
     for field, value in meta["meter"].items():
         setattr(algo.meter, field, value)

@@ -18,12 +18,14 @@ count and ``broadcast_MB`` accounts bytes actually sent on the downlink.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.quantizers import (Quantizer, TreeLayout,
                                    packed_identity_payload,
+                                   packed_lowrank_payload,
                                    packed_qsgd_payload)
 
 CLIENT_UPDATE = "client_update"
@@ -71,7 +73,7 @@ def frame_packed_message(kind: str, quantizer: Quantizer, enc: dict,
 
 def payloads_from_fused(quantizer: Quantizer, out: dict, layout: TreeLayout,
                         enc_keys=None, *, count: Optional[int] = None,
-                        to_numpy: bool = False) -> List[dict]:
+                        to_numpy: bool = False, basis_seed=None) -> List[dict]:
     """Slice per-member wire payload dicts out of one fused cohort
     train+encode output (``kernels.ops.cohort_train_encode_step``).
 
@@ -95,6 +97,19 @@ def payloads_from_fused(quantizer: Quantizer, out: dict, layout: TreeLayout,
         return [packed_qsgd_payload(packed[i], norms[i], quantizer.spec.bits,
                                     n, layout)
                 for i in range(count)]
+    if kind == "lowrank":
+        if basis_seed is None:
+            raise ValueError("lowrank payloads need the round's basis_seed")
+        packed, norms = out["packed"], out["norms"]
+        if to_numpy:
+            packed, norms = np.asarray(packed), np.asarray(norms)
+        seed = np.asarray(basis_seed).reshape(-1)[:2].astype(np.uint32)
+        rank = quantizer.spec.rank(n)
+        count = packed.shape[0] if count is None else count
+        return [packed_lowrank_payload(packed[i], norms[i],
+                                       quantizer.spec.bits, n, layout, rank,
+                                       quantizer.spec.group, seed)
+                for i in range(count)]
     flat = out["flat"]
     count = flat.shape[0] if count is None else count
     if kind == "identity":
@@ -109,16 +124,19 @@ def payloads_from_fused(quantizer: Quantizer, out: dict, layout: TreeLayout,
 def frame_cohort_messages(kind: str, quantizer: Quantizer, out: dict,
                           layout: TreeLayout, enc_keys=None, *,
                           version: int = 0, count: Optional[int] = None,
-                          to_numpy: bool = False) -> List[Message]:
+                          to_numpy: bool = False,
+                          basis_seed=None) -> List[Message]:
     """Frame one fused cohort output as wire Messages (shared wire size,
     shared model ``version``) — the only step between the single fused
     dispatch and ``QAFeL.receive``. ``count`` limits framing to a mask-
-    padded tier group's real members."""
+    padded tier group's real members. ``basis_seed`` is required for
+    lowrank cohorts (rides the payload so the server can expand)."""
     wire = quantizer.wire_bytes_packed(layout)
     return [Message(kind=kind, payload=enc, wire_bytes=wire,
                     meta={"version": version})
             for enc in payloads_from_fused(quantizer, out, layout, enc_keys,
-                                           count=count, to_numpy=to_numpy)]
+                                           count=count, to_numpy=to_numpy,
+                                           basis_seed=basis_seed)]
 
 
 def packed_qsgd_chunk_payload(packed_c, norms_c, bits: int, n: int,
@@ -156,6 +174,47 @@ def frame_chunk_messages(kind: str, quantizer: Quantizer, chunks: List[dict],
     return msgs
 
 
+def payload_wire_bytes(enc) -> Optional[float]:
+    """Exact framed bytes of ONE packed payload, derived from the payload
+    itself (it is self-describing) rather than a full-model layout estimate.
+
+    This is what keeps mixed-kind fill windows honest: a lowrank upload is
+    a ``rank``-length wire message regardless of the d-length model it
+    sketches, and a bit-width-tier client's message is priced at ITS bits,
+    not the server quantizer's. Returns None for payloads that don't
+    self-describe (legacy per-leaf dicts) — callers fall back to the
+    framing-time estimate."""
+    if not isinstance(enc, dict) or enc.get("format") != "packed":
+        return None
+    kind = enc.get("kind")
+    if kind == "lowrank":
+        r = int(enc["rank"])
+        return (enc["bits"] * r + 32 * math.ceil(r / 128)) / 8.0
+    if kind == "qsgd":
+        n = int(enc["n"])
+        return (enc["bits"] * n + 32 * math.ceil(n / 128)) / 8.0
+    if kind == "identity":
+        return 32 * int(enc["n"]) / 8.0
+    if "idx" in enc:  # sparse: 32-bit index + 32-bit value per kept coord
+        return 64 * int(np.asarray(enc["idx"]).shape[-1]) / 8.0
+    return None
+
+
+def payload_kind_label(enc) -> str:
+    """Stable per-kind bucket label for traffic accounting ("qsgd4",
+    "lowrank4g32", "identity", ...)."""
+    if not isinstance(enc, dict):
+        return "tree"
+    kind = enc.get("kind")
+    if kind == "lowrank":
+        return f"lowrank{enc['bits']}g{enc['group']}"
+    if kind == "qsgd":
+        return f"qsgd{enc['bits']}"
+    if kind is not None:
+        return str(kind)
+    return "sparse" if "idx" in enc else "other"
+
+
 def decode_message(quantizer: Quantizer, msg: Message):
     return quantizer.decode(msg.payload)
 
@@ -185,29 +244,61 @@ class TrafficMeter:
     # still spent on the uplink, but the update never entered the buffer
     uploads_dropped: int = 0
     dropped_bytes: float = 0.0
+    # per-kind uplink breakdown ("qsgd4", "lowrank4g32", ...): mixed-kind
+    # windows (bit-width tiers, lowrank cohorts) must not be averaged into
+    # one apples-and-oranges kB_per_upload figure
+    uploads_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    upload_bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def _upload_size(self, msg: Message) -> float:
+        # Prefer the payload's own self-described size: lowrank / tier
+        # messages are smaller than the server quantizer's full-model wire
+        # estimate, and streamed chunks conserve their own totals.
+        actual = payload_wire_bytes(msg.payload)
+        return msg.wire_bytes if actual is None else actual
 
     def record(self, msg: Message, n_receivers: int = 1):
         if msg.kind == CLIENT_UPDATE:
+            wire = self._upload_size(msg)
             self.uploads += 1
-            self.upload_bytes += msg.wire_bytes
+            self.upload_bytes += wire
+            label = payload_kind_label(msg.payload)
+            self.uploads_by_kind[label] = self.uploads_by_kind.get(label, 0) + 1
+            self.upload_bytes_by_kind[label] = (
+                self.upload_bytes_by_kind.get(label, 0.0) + wire)
         else:
             self.broadcasts += 1
             self.broadcast_bytes += msg.wire_bytes * n_receivers
             self.broadcast_wire_bytes += msg.wire_bytes
             self.broadcast_receivers += n_receivers
 
+    def record_stream(self, enc, stream_bytes: float):
+        """One COMPLETE chunked upload (already reassembled): the stream's
+        summed framed bytes count as a single upload, bucketed under the
+        kind its chunks self-describe (every chunk carries kind/bits)."""
+        self.uploads += 1
+        self.upload_bytes += stream_bytes
+        label = payload_kind_label(enc)
+        self.uploads_by_kind[label] = self.uploads_by_kind.get(label, 0) + 1
+        self.upload_bytes_by_kind[label] = (
+            self.upload_bytes_by_kind.get(label, 0.0) + stream_bytes)
+
     def record_dropped(self, msg: Message):
         """An upload rejected at the server (e.g. staleness bound exceeded)."""
         self.uploads_dropped += 1
-        self.dropped_bytes += msg.wire_bytes
+        self.dropped_bytes += self._upload_size(msg)
 
     def summary(self) -> Dict[str, float]:
+        by_kind = {f"kB_per_upload/{k}": self.upload_bytes_by_kind[k] / c / 1e3
+                   for k, c in self.uploads_by_kind.items() if c}
         return {
             "uploads": self.uploads,
             "broadcasts": self.broadcasts,
             "upload_MB": self.upload_bytes / 1e6,
             "broadcast_MB": self.broadcast_bytes / 1e6,
             "kB_per_upload": (self.upload_bytes / self.uploads / 1e3) if self.uploads else 0.0,
+            **by_kind,
             "kB_per_broadcast": (self.broadcast_wire_bytes / self.broadcasts / 1e3
                                  if self.broadcasts else 0.0),
             "mean_broadcast_fanout": (self.broadcast_receivers / self.broadcasts

@@ -136,7 +136,8 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
                        hidden_flat, batches, k_train, k_enc, flag, *, b: int,
                        with_loss: bool = False, batched: Optional[bool] = None,
                        taps: bool = False, tap_gather=None,
-                       chunk_rows: Optional[int] = None, row_block=None):
+                       chunk_rows: Optional[int] = None, row_block=None,
+                       residual=None, basis_seed=None):
     """Flat-in / packed-out client pipeline: the traceable body of the fused
     cohort train+encode dispatch (``kernels.ops.cohort_train_encode_step``).
 
@@ -188,6 +189,23 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
     ``row_block`` all_gather the packed segments back (the ONLY model-axis
     collective on the cohort path, and it moves wire-sized uint8 codes,
     not f32).
+
+    A lowrank ``spec`` is the projection-subspace upload: the (b, d)
+    error-feedback ``residual`` stack is added to the delta stack, the sum
+    is sketch-projected to (b, d_r) under the round's (2,) uint32
+    ``basis_seed`` (``quantizers.lowrank_project_flat2d``), the SUBSPACE
+    vector is quantize-packed through the ordinary qsgd wire entries
+    (``chunk_rows`` tiles it the same way — chunk-invariant because the
+    dither keys global subspace indices), and the packed bits are decoded
+    back in-graph so the NEW residual — what the quantized subspace message
+    failed to carry, ``c - S^T qdq(S c)`` — comes out of the SAME dispatch
+    as a ``"residual"`` output. The residual-corrected stack and its
+    projection are pinned behind one shared hard boundary before the
+    encode's norm math (the lowrank entry in
+    ``kernels.ops._cohort_boundaries``). Lowrank taps are the 3-column
+    variant (``obs.taps.COHORT_TAP_NAMES_LOWRANK``): message norm,
+    full-space relative error (the residual ratio) and subspace-only
+    quantization error.
     """
     from repro.core.quantizers import (flatten_stacked_leaves,
                                        qsgd_encode_flat2d, qsgd_encode_rows)
@@ -239,6 +257,35 @@ def client_update_flat(loss_fn: Callable, qcfg: QAFeLConfig, spec, layout,
                 x3_l, seeds, spec.bits, (midx * rows_l).astype(jnp.uint32),
                 chunk_rows=chunk_rows)
         out = {"packed": packed, "norms": norms}
+    elif spec.kind == "lowrank":
+        from repro.core.quantizers import (lowrank_expand_flat2d,
+                                           lowrank_project_flat2d)
+        from repro.obs.taps import decode_qsgd_stack
+        seeds = jnp.asarray(basis_seed).reshape(-1)[:2].astype(jnp.uint32)
+        c2d = flat2d if residual is None else flat2d + residual
+        if tap_gather is not None:
+            # a mesh caller's c2d arrives d-sharded; the projection's
+            # g-element group sums must run in the meshless (replicated)
+            # grouping or the wire bits drift (see _cohort_step_fn)
+            c2d = tap_gather(c2d)
+        y2d = lowrank_project_flat2d(c2d, seeds, spec.group)
+        # one cond pins the pair: the encode's bucket-norm math and the
+        # error-feedback subtraction below both consume materialized
+        # operands, so mesh/chunk variants cannot FMA-contract differently
+        c2d, y2d = boundary((c2d, y2d))
+        packed, norms = qsgd_encode_flat2d(y2d, k_enc, spec.bits,
+                                           threefry=not batched,
+                                           chunk_rows=chunk_rows)
+        qy2d = decode_qsgd_stack(packed, norms, spec.bits, y2d.shape[1])
+        xq2d = lowrank_expand_flat2d(qy2d, seeds, spec.group, c2d.shape[1])
+        out = {"packed": packed, "norms": norms, "residual": c2d - xq2d}
+        if taps:
+            from repro.obs.taps import cohort_tap_rows_lowrank
+            tc = c2d if tap_gather is None else tap_gather(c2d)
+            te = out["residual"] if tap_gather is None else tap_gather(
+                out["residual"])
+            out["taps"] = cohort_tap_rows_lowrank(boundary, tc, te, y2d, qy2d)
+        return (out, losses) if with_loss else out
     else:
         out = {"flat": flat2d}
     if taps:
@@ -443,7 +490,8 @@ class QAFeL:
     """
 
     def __init__(self, qcfg: QAFeLConfig, loss_fn: Callable, params0,
-                 mesh=None, telemetry=None, chunk_rows=None):
+                 mesh=None, telemetry=None, chunk_rows=None,
+                 basis_seed: int = 0):
         self.qcfg = qcfg
         self.loss_fn = loss_fn
         self.cq = qcfg.cq()
@@ -456,6 +504,15 @@ class QAFeL:
         self.chunk_rows = int(chunk_rows) if chunk_rows else None
         # in-flight chunk-streamed uploads, keyed by (client, stream, version)
         self._pending_chunks: Dict[Any, list] = {}
+        # lowrank upload subspace: the run-level basis seed (the per-round
+        # sketch is keyed (basis_seed, server version) via
+        # kernels.qsgd.basis_seeds — both sides derive it, no extra wire
+        # bytes) and the per-client error-feedback residual store. The
+        # server OWNS the residuals in this simulator because the hidden
+        # state already lives here; a real deployment keeps each residual
+        # on its client — the math is identical (see DESIGN.md).
+        self.basis_seed = int(basis_seed)
+        self._residuals: Dict[Any, Any] = {}
         self._taps = bool(telemetry is not None and telemetry.taps)
         self.state = ServerState.init(params0, mesh=mesh)
         # the runtime-True predicate behind the fused flush's hard
@@ -469,7 +526,38 @@ class QAFeL:
         self.staleness = StalenessMonitor(max_allowed=qcfg.max_staleness)
 
     # -- client side ------------------------------------------------------
-    def run_client(self, batches, key) -> Tuple[Message, int]:
+    def round_basis_seed(self):
+        """The (2,) uint32 sketch-basis seed of the CURRENT round: keyed
+        (run basis_seed, server version) so the basis rotates every server
+        step — a fixed basis would starve its orthogonal complement and
+        bias the error feedback forever. Both sides derive it from the
+        version they already share; no extra bytes ship."""
+        from repro.kernels import qsgd as _kq
+        return _kq.basis_seeds(self.basis_seed, self.state.t)
+
+    def client_residuals(self, clients) -> jnp.ndarray:
+        """Stack the (b, d) error-feedback residuals for ``clients`` (ids,
+        one per cohort member; unseen ids start at zero). Lowrank client
+        state: what previous quantized subspace messages failed to carry."""
+        d = self.state.n
+        zero = None
+        rows = []
+        for cid in clients:
+            r = self._residuals.get(cid)
+            if r is None:
+                if zero is None:
+                    zero = jnp.zeros((d,), jnp.float32)
+                r = zero
+            rows.append(jnp.asarray(r).reshape(-1))
+        return jnp.stack(rows)
+
+    def store_residuals(self, clients, residual2d) -> None:
+        """Write back the fused step's NEW (b, d) residual stack, one row
+        per member of ``clients`` (padding rows already sliced off)."""
+        for i, cid in enumerate(clients):
+            self._residuals[cid] = residual2d[i]
+
+    def run_client(self, batches, key, client=None) -> Tuple[Message, int]:
         """Algorithm 2 on the CURRENT hidden state; returns (message, version).
 
         One fused train+encode dispatch (``kernels.ops.
@@ -479,6 +567,10 @@ class QAFeL:
         two-dispatch path. The cohort engine takes the same entry with
         b = cohort_size, so both engines share one client pipeline.
 
+        ``client`` is the caller's client id — lowrank uploads key their
+        error-feedback residual on it (omitted/None uses one shared slot,
+        fine for single-client drivers).
+
         In the async simulator the caller records the version now and
         delivers the message later (after the sampled training duration).
         """
@@ -486,12 +578,22 @@ class QAFeL:
 
         k_train, k_enc = jax.random.split(key)
         st = self.state
+        lowrank = self.cq.spec.kind == "lowrank"
+        kw = {}
+        bseed = None
+        if lowrank:
+            bseed = self.round_basis_seed()
+            kw = {"residual": self.client_residuals([client]),
+                  "basis_seed": bseed}
         out = kops.cohort_train_encode_step(
             self.loss_fn, self.qcfg, self.cq.spec, st.layout, st.hidden_flat,
             batches, k_train, k_enc, self._flag, b=1, mesh=self.mesh,
-            taps=self._taps, chunk_rows=self.chunk_rows)
+            taps=self._taps, chunk_rows=self.chunk_rows, **kw)
+        if lowrank:
+            self.store_residuals([client], out["residual"])
         msg = frame_cohort_messages(CLIENT_UPDATE, self.cq, out, st.layout,
-                                    enc_keys=[k_enc], version=st.t)[0]
+                                    enc_keys=[k_enc], version=st.t,
+                                    basis_seed=bseed)[0]
         if self._taps:
             from repro.obs.taps import named_cohort_taps
             msg.meta["taps"] = named_cohort_taps(out["taps"][0])
@@ -606,8 +708,13 @@ class QAFeL:
                                 tau=tau, weight=w, **extra)
         payload = msg.payload
         if isinstance(payload, dict) and payload.get("format") == "packed":
-            if (payload["kind"] == self.cq.spec.kind
-                    and payload.get("bits") in (None, self.cq.spec.bits)):
+            native = (payload["kind"] == self.cq.spec.kind
+                      and payload.get("bits") in (None, self.cq.spec.bits))
+            if native and payload["kind"] == "lowrank":
+                # a lowrank tier with a different sketch group lives in a
+                # different subspace — its message must decode eagerly
+                native = payload.get("group") == self.cq.spec.group
+            if native:
                 self.buffer.add_encoded(payload, weight=w)
             else:
                 # a bit-width-tier client uploaded through a different
@@ -652,8 +759,7 @@ class QAFeL:
                                     client=msg.meta.get("client", -1),
                                     tau=tau, reason="stale")
             return None
-        self.meter.uploads += 1
-        self.meter.upload_bytes += stream_bytes
+        self.meter.record_stream(msg.payload, stream_bytes)
         self.staleness.observe(tau)
         w = (1.0 / math.sqrt(1.0 + tau)) if self.qcfg.staleness_scaling else 1.0
         if self.telemetry is not None:
@@ -690,6 +796,12 @@ class QAFeL:
             key2d = jnp.asarray(key).reshape(1, -1) if kind == "qsgd" else None
             beta = self.qcfg.server_momentum if self.qcfg.server_momentum else None
             bits = batch.bits if batch.bits is not None else 0
+            # lowrank upload window: the stacked wire pairs are RANK-length
+            # (never row-padded to the state layout) and the flush needs the
+            # static sketch group + the traced (K, 2) per-upload basis seeds
+            lowrank_win = batch.kind == "lowrank" and batch.stack is not None
+            lkw = ({"group": batch.group, "lseeds": jnp.asarray(batch.seeds)}
+                   if lowrank_win else {})
             if self.mesh is not None:
                 # sharded substrate: pad the window's raw ingredients to the
                 # state's segment-aligned layout (zero rows/elements are
@@ -699,7 +811,7 @@ class QAFeL:
                 rows = kops.rows_for(batch.n)
                 rows_pad = int(st.x_flat.shape[0]) // kops.BUCKET
                 stack, norms, extra = batch.stack, batch.norms, batch.extra
-                if stack is not None and rows_pad > rows:
+                if stack is not None and rows_pad > rows and not lowrank_win:
                     xp = np if isinstance(stack, np.ndarray) else jnp
                     k_, _, lanes = stack.shape
                     stack = xp.concatenate(
@@ -718,8 +830,8 @@ class QAFeL:
                     stack, norms, batch.weights, extra, key2d, self._flag,
                     bits=bits, sbits=sbits, lr=self.qcfg.server_lr,
                     beta=beta, mesh=self.mesh,
-                    n=batch.n if self._taps else None, taps=self._taps,
-                    chunk_rows=self.chunk_rows)
+                    n=batch.n if (self._taps or lowrank_win) else None,
+                    taps=self._taps, chunk_rows=self.chunk_rows, **lkw)
                 x_new, h_new, m_new, payload = out[:4]
                 if self._taps:
                     tap_vec = out[4]
@@ -733,7 +845,8 @@ class QAFeL:
                     batch.stack, batch.norms, batch.weights, batch.extra,
                     key2d, self._flag,
                     bits=bits, sbits=sbits, n=batch.n,
-                    lr=self.qcfg.server_lr, beta=beta, taps=self._taps)
+                    lr=self.qcfg.server_lr, beta=beta, taps=self._taps,
+                    **lkw)
                 x_new, h_new, m_new, payload = out[:4]
                 if self._taps:
                     tap_vec = out[4]
@@ -758,8 +871,13 @@ class QAFeL:
             x_new, m_new = server_apply_flat(
                 x_cur, m_cur, delta, lr=self.qcfg.server_lr, beta=beta)
             diff = x_new - h_cur
+            # lowrank broadcasts ride the non-fused chain: encode_flat owns
+            # the sketch projection (the payload is self-describing, so the
+            # replicas decode from its seed)
             bmsg = encode_message_flat(HIDDEN_BROADCAST, self.sq, diff,
-                                       st.layout, key, fast=True, t=st.t)
+                                       st.layout, key,
+                                       fast=self.sq.spec.kind != "lowrank",
+                                       t=st.t)
             h_new = h_cur + self.sq.decode_flat(bmsg.payload)
             if self.mesh is not None:
                 x_new = place_flat_on_mesh(x_new, self.mesh, batch.n)

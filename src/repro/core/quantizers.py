@@ -58,8 +58,8 @@ from repro.common.tree import split_key_tree
 class QuantizerSpec:
     """Declarative description of a quantizer; hashable, storable in configs."""
 
-    kind: str  # "qsgd" | "top_k" | "rand_k" | "identity"
-    bits: int = 4  # for qsgd: total bits per coordinate (incl. sign)
+    kind: str  # "qsgd" | "top_k" | "rand_k" | "identity" | "lowrank"
+    bits: int = 4  # for qsgd/lowrank: total bits per coordinate (incl. sign)
     fraction: float = 0.1  # for top_k / rand_k: k = ceil(fraction * d)
     scaled: bool = True  # rand_k only: unbiased (d/k) scaling
     # qsgd bucketing (Alistarh et al.'s implementation; the paper's kB tables
@@ -68,14 +68,23 @@ class QuantizerSpec:
     # gives 1 - delta ~ sqrt(2d)/s >> 1 and the hidden-state loop diverges.
     # 128 matches the Pallas kernel's lane width (one norm per VMEM row).
     bucket_size: int = 128
+    # lowrank only: contiguous elements sketched into ONE subspace coordinate
+    # (rank = padded_d / group). Must divide the 128-lane bucket row so a
+    # mesh segment of whole bucket rows maps to whole subspace coordinates —
+    # the segment-local expand law.
+    group: int = 32
 
     def __post_init__(self):
-        if self.kind not in ("qsgd", "top_k", "rand_k", "identity"):
+        if self.kind not in ("qsgd", "top_k", "rand_k", "identity", "lowrank"):
             raise ValueError(f"unknown quantizer kind: {self.kind}")
-        if self.kind == "qsgd" and not (2 <= self.bits <= 8):
-            raise ValueError("qsgd bits must be in [2, 8]")
+        if self.kind in ("qsgd", "lowrank") and not (2 <= self.bits <= 8):
+            raise ValueError(f"{self.kind} bits must be in [2, 8]")
         if self.kind in ("top_k", "rand_k") and not (0.0 < self.fraction <= 1.0):
             raise ValueError("fraction must be in (0, 1]")
+        if self.kind == "lowrank" and (
+                self.group < 2 or self.bucket_size % self.group != 0):
+            raise ValueError("lowrank group must be >= 2 and divide the "
+                             f"{self.bucket_size}-lane bucket row")
 
     # -- properties -----------------------------------------------------
     @property
@@ -91,6 +100,16 @@ class QuantizerSpec:
         """qsgd: number of magnitude levels s (1 sign bit + bits-1 magnitude)."""
         return (1 << (self.bits - 1)) - 1
 
+    def rank(self, d: int) -> int:
+        """lowrank: subspace dimension d_r for a d-element message. Defined
+        over the bucket-row-padded domain (group divides the bucket row), so
+        every 128-element wire row maps to ``bucket_size // group`` whole
+        subspace coordinates — segment-local on any mesh split."""
+        if self.kind != "lowrank":
+            raise ValueError(f"rank() is lowrank-only (kind={self.kind})")
+        d_pad = math.ceil(d / self.bucket_size) * self.bucket_size
+        return d_pad // self.group
+
     def delta(self, d: int) -> float:
         """Compression parameter delta for dimension d (clipped to (0, 1])."""
         if self.kind == "identity":
@@ -103,6 +122,11 @@ class QuantizerSpec:
         s = self.levels
         b = min(d, self.bucket_size)
         one_minus_delta = min(2 * b / s**2, math.sqrt(2 * b) / s)
+        if self.kind == "lowrank":
+            # a rank-d/g sketch keeps a 1/g fraction of the space per round
+            # (error feedback recovers the complement across rounds); the
+            # qsgd inner quantizer contributes its own factor on top.
+            return max(1e-6, (1.0 - one_minus_delta) / self.group)
         return max(1e-6, 1.0 - one_minus_delta)
 
     def wire_bits(self, d: int) -> int:
@@ -112,6 +136,11 @@ class QuantizerSpec:
         if self.kind == "qsgd":
             n_buckets = math.ceil(d / self.bucket_size)
             return self.bits * d + 32 * n_buckets  # n bits/coord + fp32 norm/bucket
+        if self.kind == "lowrank":
+            r = self.rank(d)
+            # the subspace message is itself a bucketed qsgd wire message;
+            # the basis never ships (both sides re-derive it from the seed)
+            return self.bits * r + 32 * math.ceil(r / self.bucket_size)
         k = max(1, math.ceil(self.fraction * d))
         # k (index, value) pairs: 32-bit index + 32-bit value
         return 64 * k
@@ -121,6 +150,8 @@ class QuantizerSpec:
             return "identity"
         if self.kind == "qsgd":
             return f"qsgd{self.bits}b"
+        if self.kind == "lowrank":
+            return f"lowrank{self.bits}g{self.group}"
         return f"{self.kind}{self.fraction:g}"
 
 
@@ -191,6 +222,51 @@ def packed_identity_payload(flat, n: int, layout: TreeLayout) -> dict:
     """Packed wire-payload schema for identity (full-precision) messages."""
     return {"format": "packed", "kind": "identity", "payload": flat,
             "n": n, "layout": layout}
+
+
+def packed_lowrank_payload(packed, norms, bits: int, n: int,
+                           layout: TreeLayout, rank: int, group: int,
+                           seed) -> dict:
+    """Packed wire-payload schema for low-rank sketched uploads.
+
+    Self-describing: carries kind=lowrank, the subspace dimension ``rank``
+    (= padded n / group), the sketch ``group`` and the (2,) uint32 basis
+    ``seed``, so the server can dequantize-accumulate in the d_r space and
+    expand segment-locally without any out-of-band state. The codes/norms
+    themselves are an ordinary bucketed qsgd message over the rank-length
+    subspace vector."""
+    return {"format": "packed", "kind": "lowrank", "packed": packed,
+            "norms": norms, "bits": bits, "n": n, "layout": layout,
+            "rank": rank, "group": group, "seed": seed}
+
+
+def lowrank_project_flat2d(flat2d: jnp.ndarray, seeds, group: int):
+    """Sketch-project a ``(B, n)`` stack to ``(B, rank)`` wire-subspace
+    coordinates: zero-pad n to whole 128-lane bucket rows (so the group
+    grid aligns with wire rows), then apply the counter-hash Rademacher
+    sketch. Traceable; ``seeds`` is the round's (2,) uint32 basis seed."""
+    from repro.kernels import qsgd as _kq  # local import: kernels are optional
+
+    b, n = flat2d.shape
+    rows = -(-n // _kq.LANES)
+    pad = rows * _kq.LANES - n
+    if pad:
+        flat2d = jnp.concatenate(
+            [flat2d, jnp.zeros((b, pad), flat2d.dtype)], axis=1)
+    return _kq.sketch_project(flat2d, seeds, group)
+
+
+def lowrank_expand_flat2d(y2d: jnp.ndarray, seeds, group: int, n: int,
+                          offset=0):
+    """Expand a ``(B, rank_slice)`` subspace stack back to flat wire
+    coordinates, sliced to the true element count ``n`` (pass ``n=None`` to
+    keep the padded width — segment callers slice themselves). ``offset``
+    is the GLOBAL flat element index of the slice's first output element
+    (traced ok), which is what makes the expand segment-local."""
+    from repro.kernels import qsgd as _kq  # local import: kernels are optional
+
+    x = _kq.sketch_expand(y2d, seeds, group, offset)
+    return x if n is None else x[:, :n]
 
 
 def flatten_stacked_leaves(leaves, b: int) -> jnp.ndarray:
@@ -453,6 +529,14 @@ class Quantizer:
             return flat
         if spec.kind == "qsgd":
             return _qsgd_qdq_flat(flat, key, spec.levels, spec.bucket_size)
+        if spec.kind == "lowrank":
+            # sketch -> qsgd-qdq in the subspace -> expand; the basis seed
+            # derives from the call key (standalone qdq has no round state)
+            seeds = jnp.asarray(key).reshape(-1)[:2].astype(jnp.uint32)
+            n = int(flat.size)
+            y = lowrank_project_flat2d(flat[None], seeds, spec.group)
+            yq = _qsgd_qdq_flat(y[0], key, spec.levels, spec.bucket_size)
+            return lowrank_expand_flat2d(yq[None], seeds, spec.group, n)[0]
         k = max(1, math.ceil(spec.fraction * flat.size))
         if spec.kind == "top_k":
             return _top_k_qdq_flat(flat, k)
@@ -539,6 +623,13 @@ class Quantizer:
         if spec.kind == "qsgd":
             packed, norms = kops.qsgd_quantize(flat, key, spec.bits)
             return packed_qsgd_payload(packed, norms, spec.bits, n, layout)
+        if spec.kind == "lowrank":
+            # standalone encode: basis seed derives from the call key (the
+            # payload is self-describing so decode never needs round state;
+            # the protocol's fused path passes the version-keyed seed
+            # explicitly via ``basis_seed``)
+            seeds = jnp.asarray(key).reshape(-1)[:2].astype(jnp.uint32)
+            return self.encode_lowrank_flat(flat, layout, key, seeds)
         k = max(1, math.ceil(spec.fraction * n))
         if spec.kind == "top_k":
             order = jnp.argsort(-jnp.abs(flat))
@@ -592,6 +683,11 @@ class Quantizer:
             packed, norms = np.asarray(packed), np.asarray(norms)
             return [packed_qsgd_payload(packed[i], norms[i], spec.bits, n,
                                         layout) for i in range(b)]
+        if spec.kind == "lowrank":
+            raise ValueError(
+                "lowrank cohort encodes ride the fused cohort step "
+                "(kernels.ops.cohort_train_encode_step): the basis seed is "
+                "round state that encode_batch does not carry")
         k = max(1, math.ceil(spec.fraction * n))
         if spec.kind == "top_k":
             idx = jnp.argsort(-jnp.abs(flat2d), axis=1)[:, :k]
@@ -634,6 +730,22 @@ class Quantizer:
         return packed_qsgd_payload(packed[0], norms[0], self.spec.bits, n,
                                    layout)
 
+    def encode_lowrank_flat(self, flat: jnp.ndarray, layout: TreeLayout,
+                            key, basis_seed) -> dict:
+        """Lowrank wire encode of one flat vector under an EXPLICIT (2,)
+        uint32 basis seed — the protocol entry (the seed is the round's
+        ``kernels.qsgd.basis_seeds`` value both sides share)."""
+        from repro.kernels import ops as kops  # local import: kernels are optional
+
+        spec = self.spec
+        n = int(flat.size)
+        seeds = jnp.asarray(basis_seed).reshape(-1)[:2].astype(jnp.uint32)
+        y = lowrank_project_flat2d(flat[None], seeds, spec.group)
+        packed, norms = kops.qsgd_quantize(y[0], key, spec.bits)
+        return packed_lowrank_payload(packed, norms, spec.bits, n, layout,
+                                      int(y.shape[1]), spec.group,
+                                      np.asarray(seeds))
+
     def decode_flat(self, enc) -> jnp.ndarray:
         """Dequantize a packed message to its flat f32 vector (no unflatten)."""
         from repro.kernels import ops as kops
@@ -644,6 +756,12 @@ class Quantizer:
         if kind == "qsgd":
             return kops.qsgd_dequantize(enc["packed"], enc["norms"],
                                         enc["bits"], enc["n"])
+        if kind == "lowrank":
+            y = kops.qsgd_dequantize(enc["packed"], enc["norms"],
+                                     enc["bits"], enc["rank"])
+            seeds = jnp.asarray(enc["seed"]).astype(jnp.uint32)
+            return lowrank_expand_flat2d(y[None], seeds, enc["group"],
+                                         enc["n"])[0]
         return jnp.zeros((enc["n"],), jnp.float32).at[enc["idx"]].set(enc["vals"])
 
     def decode(self, enc):
@@ -710,6 +828,12 @@ def make_quantizer(spec_or_name) -> Quantizer:
     name = spec_or_name
     if name == "identity" or name is None:
         return Quantizer(QuantizerSpec("identity"))
+    if name.startswith("lowrank"):
+        # "lowrank", "lowrank4", "lowrank4g32": <bits>[g<group>]
+        body = name[len("lowrank"):]
+        bits_s, _, group_s = body.partition("g")
+        return Quantizer(QuantizerSpec("lowrank", bits=int(bits_s or 4),
+                                       group=int(group_s or 32)))
     if name.startswith("qsgd"):
         return Quantizer(QuantizerSpec("qsgd", bits=int(name[len("qsgd"):] or 4)))
     if name.startswith("top_k"):

@@ -42,9 +42,9 @@ from repro.common.tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
 from repro.core.hidden_state import hidden_apply
 from repro.core.qafel import (QAFeLConfig, client_update_flat, local_sgd_scan,
                               server_apply, server_apply_flat)
-from repro.core.quantizers import (flatten_tree, make_quantizer,
-                                   qsgd_encode_flat2d, qsgd_pack_lastdim,
-                                   qsgd_unpack_lastdim)
+from repro.core.quantizers import (flatten_tree, lowrank_expand_flat2d,
+                                   make_quantizer, qsgd_encode_flat2d,
+                                   qsgd_pack_lastdim, qsgd_unpack_lastdim)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -111,15 +111,21 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
                          window_override=window_override)
         return l
 
-    def decode_client_flat(out: dict, k_enc, d: int):
+    def decode_client_flat(out: dict, k_enc, d: int, seeds=None):
         """The flat delta the server accumulates: the client's own decoded
         wire bits (real packed codes for qsgd, raw rows for identity, exact
-        sparse reconstruction for top_k/rand_k)."""
+        sparse reconstruction for top_k/rand_k, dequantize-then-expand for
+        lowrank — ``seeds`` is the round's sketch-basis seed pair)."""
         from repro.kernels import ops as kops  # lazy: kernels stay optional
 
         if cq.spec.kind == "qsgd":
             return kops.qsgd_dequantize(out["packed"][0], out["norms"][0],
                                         cq.spec.bits, d)
+        if cq.spec.kind == "lowrank":
+            r = cq.spec.rank(d)
+            y = kops.qsgd_dequantize(out["packed"][0], out["norms"][0],
+                                     cq.spec.bits, r)
+            return lowrank_expand_flat2d(y[None], seeds, cq.spec.group, d)[0]
         if cq.spec.kind == "identity":
             return out["flat"][0]
         return cq.qdq_flat(out["flat"][0], k_enc)
@@ -138,6 +144,13 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
         # derive an always-True flag from a round input, like the host
         # path's self._flag jit argument
         flag = state.t >= jnp.int32(0)
+        # lowrank: in-graph clients are fresh each round (no persistent
+        # error-feedback state in this reduced round), so the residual is
+        # zero and the basis seed rotates with the server step
+        lseeds = None
+        if cq.spec.kind == "lowrank":
+            from repro.kernels import qsgd as _kq
+            lseeds = _kq.basis_seeds(0, state.t)
 
         def client_body(carry, inp):
             buf, loss_sum = carry
@@ -147,11 +160,14 @@ def make_qafel_round(cfg: ModelConfig, qcfg: QAFeLConfig, *,
             # (client_update_flat = shared local_sgd_scan + in-graph flatten
             # + wire encode), at b=1 with the threefry wire dither
             k_train, k_enc = jax.random.split(key_k)
+            lkw = ({} if lseeds is None else
+                   {"residual": jnp.zeros((1, d), jnp.float32),
+                    "basis_seed": lseeds})
             out, losses = client_update_flat(
                 loss, qcfg, cq.spec, layout, hidden_flat, batches_kp,
                 k_train, k_enc, flag, b=1, with_loss=True,
-                chunk_rows=chunk_rows)
-            buf = buf + w_k * decode_client_flat(out, k_enc, d)
+                chunk_rows=chunk_rows, **lkw)
+            buf = buf + w_k * decode_client_flat(out, k_enc, d, seeds=lseeds)
             return (buf, loss_sum + losses.mean()), None
 
         ckeys = jax.random.split(k_clients, qcfg.buffer_size)

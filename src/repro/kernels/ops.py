@@ -185,6 +185,62 @@ def buffer_aggregate(packed_stack: jnp.ndarray, norms: jnp.ndarray,
     return out2d.reshape(-1)[:n]
 
 
+def lowrank_window_delta(stack, norms, weights, lseeds, boundary, *,
+                         bits: int, group: int, y_width: int, elem0,
+                         n_out: int, n_true=None):
+    """Weighted expansion of one lowrank flush window over a contiguous,
+    group-aligned output slice: ``delta[j] = sum_k w_k * sigma_k(elem0 + j)
+    * y_k[(elem0 + j) // group] / sqrt(group)``.
+
+    ``stack`` / ``norms`` are the window's K stacked RANK-length wire pairs
+    (``(K, rows_r, 128*bits//8)`` / ``(K, rows_r)``), ``lseeds`` the (K, 2)
+    uint32 per-upload basis seeds (mixed-staleness windows span basis
+    versions, so every upload carries its own), ``weights`` the normalized
+    staleness weights. The whole d_r-space dequantize runs first (small),
+    then ONE vectorized O(K * n_out) expansion pass over the slice.
+
+    Segment-locality law: ``elem0`` is the slice's GLOBAL flat element
+    offset (traced ok) — the Rademacher signs hash global element indices
+    and the subspace coordinate is ``index // group``, so any row-aligned
+    split of the output concatenates to the unsplit expansion bit for bit.
+    ``y_width`` statically pads/slices the decoded subspace vectors so a
+    segment-padded caller can address coordinates past the true rank (they
+    decode to zero codes -> zero). ``n_true`` zeroes output elements at or
+    beyond the true coordinate count (a sharded caller's segment padding
+    must NOT receive expansion mass — the unsharded path slices instead).
+
+    Each ``w_k * expansion_k`` product is pinned behind ``boundary``
+    (``hard_boundary``) before the ascending-k accumulation, so the sharded
+    and unsharded flush modules cannot FMA-contract the chain differently.
+    """
+    k_n, rows_r = stack.shape[0], stack.shape[1]
+    stack = jnp.asarray(stack)
+    norms3 = jnp.asarray(norms).astype(jnp.float32).reshape(k_n, rows_r, 1)
+
+    def dec(p, nm):
+        return _qsgd._unpack_dequantize_block(p, nm, bits).reshape(-1)
+
+    yk = jax.vmap(dec)(stack, norms3)  # (K, rows_r * 128)
+    w_dec = yk.shape[1]
+    if y_width > w_dec:
+        yk = jnp.concatenate(
+            [yk, jnp.zeros((k_n, y_width - w_dec), yk.dtype)], axis=1)
+    elif y_width < w_dec:
+        yk = yk[:, :y_width]
+    y0 = (jnp.asarray(elem0) // group).astype(jnp.int32)
+    ys = jax.lax.dynamic_slice_in_dim(yk, y0, n_out // group, axis=1)
+    wv = jnp.asarray(weights, jnp.float32)
+    seeds = jnp.asarray(lseeds).reshape(k_n, 2).astype(jnp.uint32)
+    acc = jnp.zeros((n_out,), jnp.float32)
+    for i in range(k_n):
+        xi = _qsgd.sketch_expand(ys[i][None], seeds[i], group, elem0)[0]
+        acc = acc + boundary(wv[i] * xi)
+    if n_true is not None:
+        idx = jnp.asarray(elem0) + jnp.arange(n_out)
+        acc = jnp.where(idx < n_true, acc, 0.0)
+    return acc
+
+
 # ---------------------------------------------------------------------------
 # Fused server flush: ONE jitted, buffer-donated dispatch for the whole
 # QAFeL server step (Algorithm 1 lines 11-16)
@@ -237,18 +293,25 @@ def hard_boundary(flag, vals):
 COHORT_STEP_TRACES = 0
 
 
-def _index_pad_members(b: int, b_pad: int, batches, k_train, k_enc):
+def _index_pad_members(b: int, b_pad: int, batches, k_train, k_enc,
+                       residual=None):
     """Index-pad the member dim from b to b_pad by repeating member 0 (the
-    padding's outputs are sliced off by the caller)."""
+    padding's outputs are sliced off by the caller). ``residual`` (the
+    lowrank error-feedback (b, d) stack) pads with the members."""
     k_train, k_enc = jnp.asarray(k_train), jnp.asarray(k_enc)
     if b_pad == b:
-        return batches, k_train, k_enc
+        return batches, k_train, k_enc, residual
     idx = jnp.concatenate([jnp.arange(b), jnp.zeros((b_pad - b,), jnp.int32)])
-    return (jax.tree.map(lambda l: jnp.take(l, idx, axis=0), batches),
-            jnp.take(k_train, idx, axis=0), jnp.take(k_enc, idx, axis=0))
+
+    def take(l):
+        return jnp.take(l, idx, axis=0)
+
+    return (jax.tree.map(take, batches), take(k_train), take(k_enc),
+            None if residual is None else take(residual))
 
 
-def _scan_member_chunks(call, b: int, mc: int, batches, k_train, k_enc):
+def _scan_member_chunks(call, b: int, mc: int, batches, k_train, k_enc,
+                        residual=None):
     """Run the per-chunk client pipeline ``call(batches, k_train, k_enc)``
     (a ``client_update_flat`` closure at b=mc) over ``ceil(b / mc)``
     member-chunks inside ONE ``lax.scan`` — still a single dispatch, but
@@ -257,15 +320,19 @@ def _scan_member_chunks(call, b: int, mc: int, batches, k_train, k_enc):
     d=98304 parity lever: per-member math is independent and the batched
     counter-hash dither keys only on (member seed, global element index),
     so the wire bits are identical to the whole-cohort vmap for any mc.
-    b is index-padded to a chunk multiple (member-0 repeats, sliced off)."""
+    b is index-padded to a chunk multiple (member-0 repeats, sliced off).
+    ``residual`` (lowrank) chunks with the members and ``call`` receives it
+    as a fourth argument."""
     nch = -(-b // mc)
-    batches, k_train, k_enc = _index_pad_members(b, nch * mc, batches,
-                                                 k_train, k_enc)
+    batches, k_train, k_enc, residual = _index_pad_members(
+        b, nch * mc, batches, k_train, k_enc, residual)
 
     def resh(l):
         return l.reshape((nch, mc) + l.shape[1:])
 
     xs = (jax.tree.map(resh, batches), resh(k_train), resh(k_enc))
+    if residual is not None:
+        xs = xs + (resh(residual),)
 
     def body(_, x):
         return None, call(*x)
@@ -278,22 +345,32 @@ def _scan_member_chunks(call, b: int, mc: int, batches, k_train, k_enc):
 class _PaddedMemberStep:
     """Callable façade over the jitted sharded cohort step that index-pads
     the member dim EAGERLY (host-side) before dispatch. ``lower`` pads the
-    same way, so flcheck's compiled-HLO pass sees the real executable."""
+    same way, so flcheck's compiled-HLO pass sees the real executable.
+
+    On the lowrank path the call carries two trailing args ``(residual,
+    basis_seed)``; the (b, d) residual stack is member-leading and pads
+    with the members, the (2,) basis seed rides through unchanged."""
 
     def __init__(self, inner, b: int, b_pad: int):
         self._inner, self._b, self._b_pad = inner, b, b_pad
 
-    def _pad(self, batches, k_train, k_enc):
-        return _index_pad_members(self._b, self._b_pad, batches, k_train,
-                                  k_enc)
+    def _pad(self, batches, k_train, k_enc, rest):
+        residual = rest[0] if rest else None
+        batches, k_train, k_enc, residual = _index_pad_members(
+            self._b, self._b_pad, batches, k_train, k_enc, residual)
+        return (batches, k_train, k_enc), ((residual,) + rest[1:] if rest
+                                           else rest)
 
-    def __call__(self, hidden_flat, batches, k_train, k_enc, flag):
-        batches, k_train, k_enc = self._pad(batches, k_train, k_enc)
-        return self._inner(hidden_flat, batches, k_train, k_enc, flag)
+    def __call__(self, hidden_flat, batches, k_train, k_enc, flag, *rest):
+        (batches, k_train, k_enc), rest = self._pad(batches, k_train, k_enc,
+                                                    rest)
+        return self._inner(hidden_flat, batches, k_train, k_enc, flag, *rest)
 
-    def lower(self, hidden_flat, batches, k_train, k_enc, flag):
-        batches, k_train, k_enc = self._pad(batches, k_train, k_enc)
-        return self._inner.lower(hidden_flat, batches, k_train, k_enc, flag)
+    def lower(self, hidden_flat, batches, k_train, k_enc, flag, *rest):
+        (batches, k_train, k_enc), rest = self._pad(batches, k_train, k_enc,
+                                                    rest)
+        return self._inner.lower(hidden_flat, batches, k_train, k_enc, flag,
+                                 *rest)
 
 
 @functools.lru_cache(maxsize=64)
@@ -345,18 +422,44 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
 
     if mesh is None or b == 1:
         gather = None
-        if taps and mesh is not None:
+        if (taps or spec.kind == "lowrank") and mesh is not None:
             # the b=1 path takes a SHARDED hidden_flat from a mesh server;
-            # GSPMD would keep the tap reductions partitioned along d and
-            # their f32 grouping would drift from the meshless bits — pin
-            # the tap inputs to replicated before reducing (the flush taps
-            # make the same move)
+            # GSPMD would keep the tap reductions — and the lowrank sketch
+            # projection, whose g-element group sums straddle the d-axis
+            # segment boundaries — partitioned along d, and their f32
+            # grouping would drift from the meshless bits — pin the inputs
+            # to replicated before reducing (the flush taps make the same
+            # move)
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
             replicated = NamedSharding(mesh, P())
 
             def gather(v):
                 return jax.lax.with_sharding_constraint(v, replicated)
+
+        if spec.kind == "lowrank":
+            # lowrank signature: the error-feedback residual stack and the
+            # round's (2,) basis seed are extra TRACED args (the seed is
+            # round state — tracing it keeps one compilation per config)
+            def step(hidden_flat, batches, k_train, k_enc, flag, residual,
+                     basis_seed):
+                global COHORT_STEP_TRACES
+                COHORT_STEP_TRACES += 1
+                if mc is None:
+                    return client_update_flat(
+                        loss_fn, qcfg, spec, layout, hidden_flat, batches,
+                        k_train, k_enc, flag, b=b, taps=taps,
+                        tap_gather=gather, chunk_rows=chunk_rows,
+                        residual=residual, basis_seed=basis_seed)
+                return _scan_member_chunks(
+                    lambda bt, kt, ke, res: client_update_flat(
+                        loss_fn, qcfg, spec, layout, hidden_flat, bt, kt, ke,
+                        flag, b=mc, batched=True, taps=taps,
+                        tap_gather=gather, chunk_rows=chunk_rows,
+                        residual=res, basis_seed=basis_seed),
+                    b, mc, batches, k_train, k_enc, residual)
+
+            return jax.jit(step)
 
         def step(hidden_flat, batches, k_train, k_enc, flag):
             global COHORT_STEP_TRACES
@@ -390,21 +493,27 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
     mc_loc = (int(member_chunk)
               if member_chunk is not None and b_loc > member_chunk else None)
 
-    def member_slice(hidden_flat, batches, k_train, k_enc, flag):
+    def member_slice(hidden_flat, batches, k_train, k_enc, flag,
+                     residual=None, basis_seed=None):
         # batched=True even at b_loc == 1: every member's wire bits must be
         # the batched counter-hash convention of the whole-cohort dispatch
-        def call(bt, kt, ke, bb):
+        def call(bt, kt, ke, bb, res=None):
             return client_update_flat(loss_fn, qcfg, spec, layout,
                                       hidden_flat, bt, kt, ke, flag, b=bb,
                                       batched=True, taps=taps,
                                       chunk_rows=chunk_rows,
-                                      row_block=row_block)
+                                      row_block=row_block,
+                                      residual=res, basis_seed=basis_seed)
 
         if mc_loc is None:
-            return call(batches, k_train, k_enc, b_loc)
+            return call(batches, k_train, k_enc, b_loc, residual)
+        if residual is None:
+            return _scan_member_chunks(
+                lambda bt, kt, ke: call(bt, kt, ke, mc_loc),
+                b_loc, mc_loc, batches, k_train, k_enc)
         return _scan_member_chunks(
-            lambda bt, kt, ke: call(bt, kt, ke, mc_loc),
-            b_loc, mc_loc, batches, k_train, k_enc)
+            lambda bt, kt, ke, res: call(bt, kt, ke, mc_loc, res),
+            b_loc, mc_loc, batches, k_train, k_enc, residual)
 
     if spec.kind == "qsgd":
         if row_block is not None:
@@ -414,6 +523,15 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
         else:
             out_specs = {"norms": P("data", None),
                          "packed": P("data", None, None)}
+    elif spec.kind == "lowrank":
+        # the d_r-length subspace encode is tiny: each member's wire pair
+        # and its (d,) error-feedback residual shard over "data" only and —
+        # under a 2-D mesh — stay replicated along "model", exactly like
+        # the identity kind's flat payload (the model axis buys qsgd
+        # packed-code memory; a rank-length message doesn't need it)
+        out_specs = {"norms": P("data", None),
+                     "packed": P("data", None, None),
+                     "residual": P("data", None)}
     else:
         out_specs = {"flat": P("data", None)}
     if taps:
@@ -429,15 +547,17 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
 
     rows = -(-layout.total_size // BUCKET)
 
-    def step(hidden_flat, batches, k_train, k_enc, flag):
+    def step(hidden_flat, batches, k_train, k_enc, flag, *rest):
         global COHORT_STEP_TRACES
         COHORT_STEP_TRACES += 1
+        in_specs = (P(), jax.tree.map(lead_spec, batches),
+                    lead_spec(k_train), lead_spec(k_enc), P())
+        if rest:  # lowrank: (residual P("data"), basis_seed replicated)
+            in_specs = in_specs + (P("data", None), P())
         sm = _shard_map(
-            member_slice, mesh=mesh,
-            in_specs=(P(), jax.tree.map(lead_spec, batches),
-                      lead_spec(k_train), lead_spec(k_enc), P()),
+            member_slice, mesh=mesh, in_specs=in_specs,
             out_specs=out_specs, check_vma=False)
-        out = sm(hidden_flat, batches, k_train, k_enc, flag)
+        out = sm(hidden_flat, batches, k_train, k_enc, flag, *rest)
         out = {k: v[:b] for k, v in out.items()}
         if row_block is not None:
             # model-axis padding rounded rows up to an nm multiple; slice
@@ -458,7 +578,8 @@ def _cohort_step_fn(loss_fn, qcfg, spec, layout, b: int, mesh=None,
 def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
                              batches, k_train, k_enc, flag, *, b: int,
                              mesh=None, taps: bool = False,
-                             member_chunk=None, chunk_rows=None):
+                             member_chunk=None, chunk_rows=None,
+                             residual=None, basis_seed=None):
     """The entire client pipeline of one cohort tier-group as ONE jitted
     dispatch: unflatten the device-resident flat x-hat *inside* the jit, run
     the (vmapped) local-SGD scan, flatten the delta stack to (b, d), and
@@ -483,19 +604,35 @@ def cohort_train_encode_step(loss_fn, qcfg, spec, layout, hidden_flat,
     (member-chunked lax.scan / row-chunked streaming encode) — both
     bit-invisible; see ``_cohort_step_fn``. With a 2-D ("data","model")
     mesh the packed wire rows additionally shard over "model".
+
+    A lowrank ``spec`` additionally takes the (b, d) error-feedback
+    ``residual`` stack and the round's (2,) uint32 ``basis_seed`` (both
+    TRACED — the seed is round state, tracing it keeps one compilation per
+    config) and returns ``{"packed", "norms", "residual"}``: the rank-length
+    wire pair plus each member's NEW residual (what the quantized subspace
+    message failed to carry), which the caller stores back into client
+    state. See ``core.qafel.client_update_flat``.
     """
-    return _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh, taps,
-                           member_chunk, chunk_rows)(
-        hidden_flat, batches, k_train, k_enc, flag)
+    fn = _cohort_step_fn(loss_fn, qcfg, spec, layout, b, mesh, taps,
+                         member_chunk, chunk_rows)
+    rest = ()
+    if spec.kind == "lowrank":
+        if residual is None or basis_seed is None:
+            raise ValueError("a lowrank cohort step needs the (b, d) "
+                             "error-feedback residual stack and the round's "
+                             "(2,) basis seed")
+        rest = (residual, basis_seed)
+    return fn(hidden_flat, batches, k_train, k_enc, flag, *rest)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "sbits", "n", "lr", "beta", "taps"),
+                   static_argnames=("bits", "sbits", "n", "lr", "beta",
+                                    "taps", "group"),
                    donate_argnums=(0, 1, 2))
 def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
                       weights, extra, key2d, flag, *,
                       bits: int, sbits, n: int, lr: float, beta,
-                      taps: bool = False):
+                      taps: bool = False, group=None, lseeds=None):
     """The entire QAFeL buffer flush as ONE jitted, buffer-donated dispatch.
 
     Chains, without leaving the device or materializing any pytree:
@@ -524,10 +661,24 @@ def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
     extra f32 output of the SAME dispatch, never a new kernel entry; the
     tap math consumes only hard-boundary-pinned values, so the state/
     payload outputs stay bit-identical to a ``taps=False`` flush.
+
+    A lowrank upload window passes the static sketch ``group`` plus the
+    traced (K, 2) per-upload basis seeds ``lseeds``: ``stack`` / ``norms``
+    are then the K RANK-length subspace wire pairs, which are dequantized
+    in d_r space and expanded ONCE (``lowrank_window_delta``) inside this
+    same dispatch; the expanded weighted delta rides the ``extra`` lane
+    into the identical server-update / broadcast chain.
     """
     global SERVER_FLUSH_TRACES
     SERVER_FLUSH_TRACES += 1
     boundary = functools.partial(hard_boundary, flag)
+    if group is not None:
+        d_pad = rows_for(n) * BUCKET
+        ld = lowrank_window_delta(
+            stack, norms, weights, lseeds, boundary, bits=bits, group=group,
+            y_width=d_pad // group, elem0=0, n_out=d_pad)[:n]
+        extra = ld if extra is None else extra + ld
+        stack = norms = None
     agg = _agg.aggregate_update(
         x_flat, momentum_flat, stack, norms, weights, extra,
         bits=bits, n=n, lr=lr, beta=beta, boundary=boundary,
@@ -553,12 +704,13 @@ def server_flush_step(x_flat, hidden_flat, momentum_flat, stack, norms,
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "sbits", "lr", "beta", "mesh",
-                                    "n", "taps", "chunk_rows"),
+                                    "n", "taps", "chunk_rows", "group"),
                    donate_argnums=(0, 1, 2))
 def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
                               weights, extra, key2d, flag, *,
                               bits: int, sbits, lr: float, beta, mesh,
-                              n=None, taps: bool = False, chunk_rows=None):
+                              n=None, taps: bool = False, chunk_rows=None,
+                              group=None, lseeds=None):
     """``server_flush_step`` on a flat state sharded over a ("data",) or
     2-D ("data","model") mesh.
 
@@ -616,6 +768,17 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     mesh size (model axis included) reduces the exact shapes the
     single-device dispatch reduces. The gather-to-replicated is the one
     collective taps add.
+
+    A lowrank upload window (static ``group`` + traced (K, 2) ``lseeds``)
+    keeps the RANK-length ``stack`` / ``norms`` REPLICATED instead of
+    d-sharded — the subspace stack is d/group-sized, so replication is what
+    makes the expansion segment-local (no cross-segment gather): every
+    device dequantizes the full d_r stack (small) and expands ONLY its
+    element segment via ``lowrank_window_delta``, whose counter-hash signs
+    key on global element indices. The expanded per-segment delta rides the
+    ``extra`` lane, so the whole-segment and chunked chains below are
+    byte-for-byte the non-lowrank code. Requires the static true ``n`` (the
+    segment padding past n must not receive expansion mass).
     """
     global SERVER_FLUSH_TRACES
     SERVER_FLUSH_TRACES += 1
@@ -625,11 +788,15 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     from repro.common.compat import shard_map as _shard_map
     from repro.sharding.rules import (flat_axes, flat_norms_spec,
                                       flat_segment_index, flat_stack_spec,
-                                      flat_vector_spec)
+                                      flat_vector_spec, mesh_flat_extent)
 
     if taps and n is None:
         raise ValueError("server_flush_step_sharded(taps=True) requires the "
                          "static true length n")
+    if group is not None and n is None:
+        raise ValueError("a lowrank sharded flush requires the static true "
+                         "length n (segment padding must not be expanded)")
+    nseg = mesh_flat_extent(mesh)
     # static host int: resolved OUTSIDE the jitted body (chunking is a
     # dispatch shape, never a traced value)
     chunk_c = None if chunk_rows is None else int(chunk_rows)
@@ -645,13 +812,24 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
             bpacked, bnorms.reshape(rows_c, 1), sbits).reshape(-1))
         return bpacked, bnorms, q
 
-    def seg_body(x_l, h_l, m_l, stack_l, norms_l, w, extra_l, key2d_l, flag_l):
+    def seg_body(x_l, h_l, m_l, stack_l, norms_l, w, extra_l, key2d_l, flag_l,
+                 lseeds_l):
         boundary = functools.partial(hard_boundary, flag_l)
         n_l = x_l.shape[0]
         rows_l = n_l // BUCKET
         seg_row0 = flat_segment_index(mesh) * rows_l
         seeds = (None if sbits is None else
                  jnp.asarray(key2d_l).reshape(1, -1)[:, :2].astype(jnp.uint32))
+        if group is not None:
+            # lowrank window: expand the replicated subspace stack over this
+            # segment's element range only, then hand the delta to the
+            # untouched extra-lane chain (whole-segment or chunked alike)
+            ld = lowrank_window_delta(
+                stack_l, norms_l, w, lseeds_l, boundary, bits=bits,
+                group=group, y_width=(n_l * nseg) // group,
+                elem0=seg_row0 * BUCKET, n_out=n_l, n_true=n)
+            extra_l = ld if extra_l is None else extra_l + ld
+            stack_l = norms_l = None
         if chunk_c is None or chunk_c >= rows_l:
             agg = _agg.aggregate_update(
                 x_l, m_l, stack_l, norms_l, w, extra_l,
@@ -741,17 +919,22 @@ def server_flush_step_sharded(x_flat, hidden_flat, momentum_flat, stack, norms,
     out_specs = (vec, vec, vec, payload_specs)
     if taps:
         out_specs = out_specs + ((vec, vec, vec),)
+    # lowrank stacks are rank-length and REPLICATED (the expansion is what
+    # is segment-local); qsgd stacks shard their code rows along d
+    stack_spec = rep if group is not None else flat_stack_spec(mesh)
+    norms_spec = rep if group is not None else flat_norms_spec(mesh)
     sm = _shard_map(
         seg_body, mesh=mesh,
         in_specs=(vec, vec, vec,
-                  None if stack is None else flat_stack_spec(mesh),
-                  None if norms is None else flat_norms_spec(mesh),
+                  None if stack is None else stack_spec,
+                  None if norms is None else norms_spec,
                   None if weights is None else rep,
                   None if extra is None else vec,
-                  None if key2d is None else rep, rep),
+                  None if key2d is None else rep, rep,
+                  None if lseeds is None else rep),
         out_specs=out_specs, check_vma=False)
     out = sm(x_flat, hidden_flat, momentum_flat, stack, norms, weights,
-             extra, key2d, flag)
+             extra, key2d, flag, lseeds)
     if not taps:
         return out
     x_new, h_new, m_new, payload, (delta, diff, q) = out
@@ -784,7 +967,10 @@ def _population_advance_fn(scenario, capacity: int, buckets: int,
     Cached per (scenario, shape) so every engine instance with the same
     statics shares ONE executable and the warm path never retraces. The
     population-state dict (arg 0) is donated: each step rewrites the
-    lifecycle arrays in place.
+    lifecycle arrays in place. The out dict is packed in-kernel into two
+    flat arrays (``population.pack_step_out``) so the host's per-step sync
+    is exactly two transfers, not one per leaf — read it through
+    ``population.PopStepOut``.
     """
     from repro.kernels import population as _pop
     body = _pop.make_advance_body(scenario, capacity, buckets, bucket_width,
@@ -793,12 +979,14 @@ def _population_advance_fn(scenario, capacity: int, buckets: int,
         def step(pop, seeds, version, draws):
             global POPULATION_ADVANCE_TRACES
             POPULATION_ADVANCE_TRACES += 1
-            return body(pop, seeds, version, draws)
+            new_pop, out = body(pop, seeds, version, draws)
+            return new_pop, _pop.pack_step_out(out, admit, deliver)
     else:
         def step(pop, seeds, version):
             global POPULATION_ADVANCE_TRACES
             POPULATION_ADVANCE_TRACES += 1
-            return body(pop, seeds, version)
+            new_pop, out = body(pop, seeds, version)
+            return new_pop, _pop.pack_step_out(out, admit, deliver)
     step.__name__ = "population_advance_step"
     return jax.jit(step, donate_argnums=(0,))
 
@@ -816,8 +1004,10 @@ def population_advance(pop, seeds, version, draws=None, *, scenario,
     ``population.init_population``) is DONATED — rebind it to the first
     output. ``version`` is the current server model version (traced int,
     staleness = version - slot_version). Returns ``(new_pop, out)`` where
-    ``out`` carries the admitted cohort / delivered batch plus population
-    counters; sync it with one ``jax.device_get`` per macro step.
+    ``out`` is the PACKED step output — two flat arrays (``{"f32", "i32"}``)
+    carrying the admitted cohort / delivered batch plus population
+    counters; sync with one ``jax.device_get`` (exactly two transfers) and
+    read named fields through ``population.PopStepOut``.
     """
     jitted = _population_advance_fn(scenario, capacity, buckets, bucket_width,
                                     admit, deliver, queue_cap,
@@ -839,25 +1029,33 @@ KERNEL_ENTRY_POINTS = ("qsgd_quantize", "qsgd_quantize_batch",
                        "qsgd_dequantize", "buffer_aggregate")
 
 
-def _flush_boundaries(*, sbits, beta, taps: bool = False, **_) -> int:
+def _flush_boundaries(*, sbits, beta, taps: bool = False, group=None,
+                      lowrank_k: int = 0, **_) -> int:
     """hard_boundary call sites traced into one flush dispatch:
     the server-update products (lr*m always, beta*m with momentum — see
     ``core.qafel.server_apply_flat``), the broadcast diff, and for a qsgd
     broadcast the packed wire pair + the decoded hidden increment. Metric
     taps add exactly one more: the squares feeding the tap reductions are
     materialized behind a single shared boundary
-    (``obs.taps._materialized_sq_sums``)."""
+    (``obs.taps._materialized_sq_sums``). A lowrank window (``group``)
+    adds one per buffered upload: each ``w_k * expansion_k`` product is
+    pinned before the ascending-k accumulation
+    (``lowrank_window_delta``)."""
     return (2 + (1 if beta is not None else 0)
-            + (2 if sbits is not None else 0) + (1 if taps else 0))
+            + (2 if sbits is not None else 0) + (1 if taps else 0)
+            + (lowrank_k if group is not None else 0))
 
 
-def _cohort_boundaries(*, taps: bool = False, **_) -> int:
+def _cohort_boundaries(*, taps: bool = False, lowrank: bool = False,
+                       **_) -> int:
     """One boundary on the client path: the flat delta stack between the
     local-SGD scan and the encode's norm math (``client_update_flat``).
     The in-jit unflatten needs none — slices are exact data movement.
     Metric taps add one: the shared squares boundary of the per-member tap
-    reductions."""
-    return 1 + (1 if taps else 0)
+    reductions. A lowrank spec adds one: the residual-corrected stack and
+    its sketch projection are pinned together (one cond for the pair)
+    before the subspace encode's norm math."""
+    return 1 + (1 if taps else 0) + (1 if lowrank else 0)
 
 
 # Declarative contracts over the fused entries, consumed by

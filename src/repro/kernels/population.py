@@ -67,6 +67,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import qsgd as _qsgd
 
@@ -218,6 +219,85 @@ def init_population(capacity: int, buckets: int, bucket_width: int,
         "discarded": jnp.int32(0),
         "error": jnp.int32(0),
     }
+
+
+# ---------------------------------------------------------------------------
+# Packed macro-step output
+# ---------------------------------------------------------------------------
+# The raw out dict of one macro step is ~23 tiny leaves, and
+# ``jax.device_get`` costs one host transfer PER LEAF — at 1M clients the
+# per-step sync is transfer-count-bound, not byte-bound. The fused entry
+# therefore concatenates the whole dict into exactly TWO flat arrays (one
+# f32, one i32) in-kernel, and the host reads named views out of them
+# (``PopStepOut``) after a two-transfer sync. Field order is the layout
+# contract; booleans travel as i32 and are re-cast on read.
+
+_OUT_BOOL = frozenset(("admit_drops", "deliver_valid", "admitted",
+                       "will_admit"))
+# true scalars read back as python scalars; batch fields stay arrays even
+# when their batch size happens to be 1
+_OUT_SCALAR = frozenset(("next_arrival", "next_finish", "t", "admitted",
+                         "will_admit", "error", "admitted_total",
+                         "delivered_total", "dropped_total",
+                         "discarded_total"))
+
+
+def _out_layout(b: int, d: int):
+    """(f32 fields, i32 fields) of one macro-step output: name -> length,
+    in packing order."""
+    f32 = (("admit_arrivals", b), ("admit_durations", b), ("deliver_t", d),
+           ("next_arrival", 1), ("next_finish", 1), ("t", 1))
+    i32 = (("admit_cids", b), ("admit_slots", b), ("admit_tiers", b),
+           ("admit_drops", b), ("deliver_slots", d), ("deliver_cids", d),
+           ("deliver_nrec", d), ("deliver_tau", d), ("deliver_valid", d),
+           ("state_counts", N_STATES), ("admitted", 1), ("will_admit", 1),
+           ("error", 1), ("admitted_total", 1), ("delivered_total", 1),
+           ("dropped_total", 1), ("discarded_total", 1))
+    return f32, i32
+
+
+def pack_step_out(out: Dict[str, jnp.ndarray], b: int, d: int):
+    """In-kernel packing of one macro-step out dict into two flat arrays
+    (traced inside the fused entry — the concats fuse with the producers,
+    no extra dispatch)."""
+    f32l, i32l = _out_layout(b, d)
+    f = jnp.concatenate([jnp.asarray(out[k], jnp.float32).reshape(-1)
+                         for k, _ in f32l])
+    i = jnp.concatenate([jnp.asarray(out[k]).astype(jnp.int32).reshape(-1)
+                         for k, _ in i32l])
+    return {"f32": f, "i32": i}
+
+
+class PopStepOut:
+    """Host-side named view of one packed macro-step output: behaves like
+    the pre-packing dict (``o["deliver_valid"]`` etc.) over the two fetched
+    flat arrays — size-1 fields read as python scalars, bool fields re-cast
+    from their i32 wire form."""
+
+    def __init__(self, packed, b: int, d: int):
+        self._f32 = np.asarray(packed["f32"])
+        self._i32 = np.asarray(packed["i32"])
+        self._slices = {}
+        for arr, fields in ((self._f32, _out_layout(b, d)[0]),
+                            (self._i32, _out_layout(b, d)[1])):
+            off = 0
+            for name, length in fields:
+                self._slices[name] = (arr, off, length)
+                off += length
+
+    def __getitem__(self, name: str):
+        arr, off, length = self._slices[name]
+        if name in _OUT_SCALAR:
+            v = arr[off]
+            return bool(v) if name in _OUT_BOOL else v
+        v = arr[off:off + length]
+        return v.astype(bool) if name in _OUT_BOOL else v
+
+    def __contains__(self, name) -> bool:
+        return name in self._slices
+
+    def keys(self):
+        return self._slices.keys()
 
 
 # ---------------------------------------------------------------------------

@@ -222,6 +222,75 @@ def qsgd_quantize_pack_batch(x3d: jnp.ndarray, seeds: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Low-rank sketch basis (counter-hash Rademacher signs)
+# ---------------------------------------------------------------------------
+
+# a distinct salt channel so basis signs never correlate with the dither
+# stream (_hash_uniform) even under equal seeds
+_SIGN_SALT = 0xB5297A4D
+
+
+def _fmix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def sketch_signs(seed0, seed1, idx):
+    """Rademacher ±1 f32 basis signs keyed on the GLOBAL element index —
+    the same counter-hash law as ``_hash_uniform`` (salted), so any tiling
+    / chunking / segment split of the expand is bit-invisible and the basis
+    itself never ships on the wire: both sides rebuild it from (seed, idx).
+    """
+    x = _fmix32(idx * jnp.uint32(0x9E3779B9)
+                + (seed0 ^ jnp.uint32(_SIGN_SALT)))
+    x = _fmix32(x ^ seed1)
+    return 1.0 - 2.0 * (x & jnp.uint32(1)).astype(jnp.float32)
+
+
+def basis_seeds(basis_seed, version):
+    """The per-round sketch-basis seed pair: (run basis seed, model version)
+    -> (2,) uint32. Pure fmix32 avalanche — computable host-side (python
+    ints in, jnp scalars out) and in-graph from a traced version counter, so
+    the fused entries take it as a TRACED argument and never retrace per
+    round."""
+    b = jnp.uint32(basis_seed)
+    v = jnp.asarray(version).astype(jnp.uint32)
+    s0 = _fmix32(v * jnp.uint32(0x9E3779B9) + b)
+    s1 = _fmix32(s0 ^ jnp.uint32(0x7F4A7C15))
+    return jnp.stack([s0, s1])
+
+
+def sketch_project(c2d, seeds, group: int):
+    """Project a (B, d_pad) stack onto the sketch subspace: y[b, r] =
+    g^-1/2 * sum_{j in group r} sign_j * c[b, j], d_pad % group == 0.
+    Rows of the implied S are orthonormal (one nonzero per column), so
+    S S^T = I and the expand below is S^T exactly."""
+    b, dpad = c2d.shape
+    assert dpad % group == 0, (dpad, group)
+    idx = jnp.arange(dpad, dtype=jnp.uint32)
+    s = sketch_signs(seeds[0], seeds[1], idx)
+    y = (c2d * s).reshape(b, dpad // group, group).sum(axis=-1)
+    return y * jnp.float32(1.0 / float(group) ** 0.5)
+
+
+def sketch_expand(y2d, seeds, group: int, offset=0):
+    """S^T: a (B, r) subspace slice back to (B, r*group) flat coordinates
+    starting at GLOBAL element ``offset`` (traced ok; offset % group == 0).
+    Elementwise in the output index, so segment-local expansion on a mesh
+    is bit-identical to the whole-vector expand."""
+    b, r = y2d.shape
+    idx = (jnp.asarray(offset).astype(jnp.uint32)
+           + jnp.arange(r * group, dtype=jnp.uint32))
+    s = sketch_signs(seeds[0], seeds[1], idx)
+    x = jnp.repeat(y2d, group, axis=-1) * s
+    return x * jnp.float32(1.0 / float(group) ** 0.5)
+
+
+# ---------------------------------------------------------------------------
 # Chunked threefry dither (streaming encode of the b=1 wire convention)
 # ---------------------------------------------------------------------------
 

@@ -45,6 +45,15 @@ COHORT_TAP_NAMES = (
     "upload_qerr_rel",  # ||delta_i - qdq(delta_i)|| / ||delta_i||
 )
 
+# Lowrank cohorts report one extra column: the quantization error INSIDE
+# the d_r subspace, separating sketch loss (carried forward by error
+# feedback) from wire quantization loss (paid per round).
+COHORT_TAP_NAMES_LOWRANK = (
+    "delta_norm",         # ||c_i|| = ||delta_i + residual_i||
+    "upload_qerr_rel",    # ||c_i - S^T qdq(S c_i)|| / ||c_i|| (full space)
+    "subspace_qerr_rel",  # ||y_i - qdq(y_i)|| / ||y_i||, y = S c (d_r space)
+)
+
 
 def _materialized_sq_sums(boundary, vecs, axis=None):
     """Sum of squares per vector, squares pinned behind ONE hard boundary
@@ -99,6 +108,23 @@ def cohort_tap_rows(boundary, flat2d, q2d):
     return jnp.stack([dn, qe], axis=1)
 
 
+def cohort_tap_rows_lowrank(boundary, c2d, e2d, y2d, qy2d):
+    """Per-member lowrank upload taps, f32 ``(b, 3)``.
+
+    ``c2d`` is the error-compensated delta stack (delta + residual),
+    ``e2d`` the new residual (c - S^T qdq(S c)) — so the full-space error
+    is ``||e_i||`` for free, no extra expand — and ``y2d``/``qy2d`` the
+    (b, d_r) subspace vector and its decoded wire bits. Same materialized-
+    square discipline as ``cohort_tap_rows``.
+    """
+    c2, e2, y2, q2 = _materialized_sq_sums(
+        boundary, (c2d, e2d, y2d, y2d - qy2d), axis=1)
+    cn, yn = jnp.sqrt(c2), jnp.sqrt(y2)
+    full_qe = jnp.sqrt(e2) / jnp.maximum(cn, 1e-30)
+    sub_qe = jnp.sqrt(q2) / jnp.maximum(yn, 1e-30)
+    return jnp.stack([cn, full_qe, sub_qe], axis=1)
+
+
 def _named(names: Sequence[str], values) -> Dict[str, float]:
     arr = np.asarray(values).reshape(-1)
     if arr.shape[0] != len(names):
@@ -112,8 +138,13 @@ def named_flush_taps(vec) -> Dict[str, float]:
 
 
 def named_cohort_taps(row) -> Dict[str, float]:
-    """Host-side named view of one member's cohort tap row."""
-    return _named(COHORT_TAP_NAMES, row)
+    """Host-side named view of one member's cohort tap row. The row length
+    self-describes its schema (lowrank rows carry the extra subspace
+    column)."""
+    arr = np.asarray(row).reshape(-1)
+    if arr.shape[0] == len(COHORT_TAP_NAMES_LOWRANK):
+        return _named(COHORT_TAP_NAMES_LOWRANK, arr)
+    return _named(COHORT_TAP_NAMES, arr)
 
 
 # Lifecycle states of the device-resident population engine, in int8 code

@@ -118,8 +118,8 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
 
     # -- cohort admission -------------------------------------------------
     def _train_encode_cohort(self, batches: Any, train_keys, enc_keys,
-                             tiers: np.ndarray, *,
-                             stacked: bool = False) -> List[Message]:
+                             tiers: np.ndarray, *, stacked: bool = False,
+                             client0: int | None = None) -> List[Message]:
         """Train + encode one admitted cohort, one fused dispatch per
         tier-group.
 
@@ -165,17 +165,34 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
                     gt, ge = train_keys, enc_keys
                 else:
                     gt, ge = train_keys[midx], enc_keys[midx]
+            extra_kw: Dict[str, Any] = {}
+            cids = None
+            if q.spec.kind == "lowrank":
+                # per-member error-feedback residual rides the fused
+                # dispatch; padding rows carry the first member's residual
+                # and are discarded with the rest of the padding
+                if b == 1:
+                    cids = [client0]
+                else:
+                    cids = [None if client0 is None else client0 + int(i)
+                            for i in pad_idx]
+                extra_kw["residual"] = self.algo.client_residuals(cids)
+                extra_kw["basis_seed"] = self.algo.round_basis_seed()
             out = kops.cohort_train_encode_step(
                 self.algo.loss_fn, self.algo.qcfg, q.spec, st.layout,
                 st.hidden_flat, grp_batches, gt, ge, self.algo._flag, b=b,
                 mesh=self.algo.mesh, taps=self.algo._taps,
                 member_chunk=auto_member_chunk(b, st.layout.total_size),
-                chunk_rows=self.algo.chunk_rows)
+                chunk_rows=self.algo.chunk_rows, **extra_kw)
+            if cids is not None:
+                self.algo.store_residuals(cids[:members.size],
+                                          out["residual"][:members.size])
             ekeys = np.asarray(ge).reshape(b, -1) if b > 1 else [ge]
             mlist = frame_cohort_messages(CLIENT_UPDATE, q, out, st.layout,
                                           enc_keys=ekeys, version=version,
                                           count=members.size,
-                                          to_numpy=(b > 1))
+                                          to_numpy=(b > 1),
+                                          basis_seed=extra_kw.get("basis_seed"))
             tap_rows = None
             if self.algo._taps:
                 from repro.obs.taps import named_cohort_taps
@@ -231,7 +248,7 @@ class CohortAsyncFLSimulator(BaseAsyncSimulator):
             batches = [self.client_batches_fn(next_client + i, batch_keys[i])
                        for i in range(b)]
         msgs = self._train_encode_cohort(batches, train_keys, enc_keys, tiers,
-                                         stacked=stacked)
+                                         stacked=stacked, client0=next_client)
         durations = self.sampler.durations(b)
         drops = self.sampler.dropouts(b)
         return msgs, arrivals, durations, drops, new_next_arrival

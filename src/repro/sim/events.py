@@ -217,7 +217,8 @@ class AsyncFLSimulator(BaseAsyncSimulator):
             while next_arrival <= next_finish:
                 cid = next_client
                 batches = self.client_batches_fn(cid, self._next_key())
-                msg, _version = algo.run_client(batches, self._next_key())
+                msg, _version = algo.run_client(batches, self._next_key(),
+                                                client=cid)
                 msg.meta["client"] = cid
                 duration = abs(self.rng.normal(0.0, 1.0))
                 heapq.heappush(heap, (next_arrival + duration, seq, cid))

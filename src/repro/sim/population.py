@@ -48,8 +48,8 @@ import numpy as np
 
 from repro.core.qafel import QAFeL
 from repro.core.staleness import StalenessMonitor
-from repro.kernels.population import (CompiledScenario, init_population,
-                                      run_seeds, wheel_shape)
+from repro.kernels.population import (CompiledScenario, PopStepOut,
+                                      init_population, run_seeds, wheel_shape)
 from repro.obs.taps import POPULATION_STATE_NAMES
 from repro.sim.cohort import CohortAsyncFLSimulator
 from repro.sim.events import SimConfig, SimResult
@@ -70,10 +70,11 @@ def compile_scenario(cfg: ScenarioConfig, concurrency: int) -> CompiledScenario:
         tier_fracs=tuple(f for f, _ in cfg.tiers))
 
 
-def _fetch(out) -> Dict[str, np.ndarray]:
-    """The ONE device->host sync of a macro step: the whole out dict crosses
-    in a single transfer; everything downstream reads host numpy."""
-    return jax.device_get(out)
+def _fetch(out, b: int, d: int) -> PopStepOut:
+    """The ONE device->host sync of a macro step: the fused entry packs the
+    whole out dict into two flat arrays in-kernel, so the sync is exactly
+    two transfers; everything downstream reads named host-numpy views."""
+    return PopStepOut(jax.device_get(out), b, d)
 
 
 def _sizing(concurrency: int, admit: int) -> int:
@@ -194,7 +195,7 @@ class PopulationAsyncFLSimulator(CohortAsyncFLSimulator):
             batches = [self.client_batches_fn(first + i, batch_keys[i])
                        for i in range(b)]
         msgs = self._train_encode_cohort(batches, train_keys, enc_keys, tiers,
-                                         stacked=stacked)
+                                         stacked=stacked, client0=first)
         for i in range(b):
             if drops[i]:
                 self.dropped += 1
@@ -226,7 +227,7 @@ class PopulationAsyncFLSimulator(CohortAsyncFLSimulator):
                 draws = self._host_draws() if will_admit else self._zero_draws
             pop, out = kops.population_advance(pop, self._seeds, algo.state.t,
                                                draws, **self._statics)
-            o = _fetch(out)
+            o = _fetch(out, self.cohort_size, self.deliver_batch)
             if o["error"]:
                 raise RuntimeError(
                     f"population capacity exhausted (capacity="
@@ -328,7 +329,7 @@ class PopulationEngine:
         while min(self._na, self._nf) <= t:
             self.pop, out = kops.population_advance(
                 self.pop, self._seeds, self.version, None, **self._statics)
-            o = _fetch(out)
+            o = _fetch(out, self.admit_batch, self.deliver_batch)
             if o["error"]:
                 raise RuntimeError(
                     f"population capacity exhausted (capacity="

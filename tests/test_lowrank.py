@@ -1,0 +1,404 @@
+"""Low-rank upload subspace: the d_r << d client message battery.
+
+The tentpole contract has four layers, each pinned here EXACTLY (bitwise
+where the design promises bits, tight-tolerance where only fp association
+differs):
+
+* sketch level: the counter-hash Rademacher sketch is a row-orthonormal
+  basis (S S^T = I), its seeds derive traceably from (run seed, server
+  version), and the expand is segment-local (global-element-index law),
+* encode level: the fused projected encode is bit-invisible to every
+  chunked/sharded dispatch shape (member_chunk x chunk_rows x 2-D mesh),
+  and error feedback closes exactly — decoded update + new residual
+  reconstructs delta + old residual,
+* protocol level: lowrank payloads are self-describing, wire bytes match
+  the analytic d_r-space qsgd size (>= 16x under qsgd4 at scale), the
+  TrafficMeter buckets per-kind actual framed bytes, and a lowrank server
+  on a real 2-D mesh stays in lockstep with the meshless one,
+* persistence level: a checkpoint taken mid-fill-window (residuals, basis
+  seed, buffered subspace wire rows + per-upload seeds) resumes
+  bit-identically through further flush boundaries.
+
+An 8-virtual-device subprocess re-runs the encode invariance and flush
+lockstep on real (2,4) and (8,1) meshes.
+"""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QAFeL, QAFeLConfig, load_checkpoint, save_checkpoint
+from repro.core.protocol import payload_kind_label, payload_wire_bytes
+from repro.core.quantizers import (flatten_tree, lowrank_expand_flat2d,
+                                   lowrank_project_flat2d, make_quantizer)
+from repro.kernels import ops as kops
+from repro.kernels import qsgd as kq
+from repro.launch.mesh import make_sim_mesh2d
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# d = 307 -> 3 bucket rows, d_pad = 384, rank = 12 at g = 32: the padded
+# tail of the last group straddles real and pad elements, so every test
+# runs on the padding edge the sharded expansion must keep mass-free.
+PARAMS0 = {"w": jnp.zeros((300,), jnp.float32),
+           "b": jnp.ones((7,), jnp.float32)}
+D = 300
+
+
+def quad_loss(params, batch, key):
+    del key
+    return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+
+def make_qcfg(**kw):
+    base = dict(client_lr=0.1, server_lr=1.2, server_momentum=0.3,
+                buffer_size=3, local_steps=2, client_quantizer="lowrank4g32",
+                server_quantizer="qsgd4")
+    base.update(kw)
+    return QAFeLConfig(**base)
+
+
+def assert_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+# -- sketch level ---------------------------------------------------------
+
+def test_sketch_is_row_orthonormal():
+    """S S^T = I: projecting an expansion recovers the subspace vector
+    (each subspace coordinate owns g signs of magnitude 1/sqrt(g))."""
+    seeds = kq.basis_seeds(17, 5)
+    n, g = 384, 32
+    y = jax.random.normal(jax.random.PRNGKey(0), (3, n // g))
+    x = lowrank_expand_flat2d(y, seeds, g, n)
+    back = lowrank_project_flat2d(x, seeds, g)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(y),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_basis_seeds_rotate_and_trace():
+    """(run seed, version) -> distinct avalanche-mixed seed pairs; host
+    ints and traced versions derive the same pair (no extra wire bytes)."""
+    host = np.asarray(kq.basis_seeds(3, 7))
+    traced = np.asarray(jax.jit(lambda v: kq.basis_seeds(3, v))(jnp.int32(7)))
+    assert_equal(host, traced)
+    pairs = {tuple(np.asarray(kq.basis_seeds(3, v)).tolist())
+             for v in range(16)}
+    assert len(pairs) == 16  # basis rotates every server version
+
+
+def test_expand_offset_is_global():
+    """Segment-locality: expanding a rank slice at global offset k equals
+    rows [k:] of the whole expansion — the law that makes the sharded
+    flush's per-segment expansion concatenate to the unsharded one."""
+    seeds = kq.basis_seeds(2, 9)
+    g, n = 32, 384
+    y = jax.random.normal(jax.random.PRNGKey(1), (2, n // g))
+    whole = lowrank_expand_flat2d(y, seeds, g, n)
+    off = 128
+    part = lowrank_expand_flat2d(y[:, off // g:], seeds, g, n - off,
+                                 offset=off)
+    assert_equal(part, whole[:, off:])
+
+
+# -- encode level ---------------------------------------------------------
+
+def _cohort_args(b=5, seed=3):
+    qcfg = make_qcfg()
+    flat0, layout = flatten_tree(PARAMS0)
+    keys = jax.random.split(jax.random.PRNGKey(4), 2 * b)
+    batches = {"target": jax.random.normal(jax.random.PRNGKey(seed),
+                                           (b, qcfg.local_steps, D))}
+    residual = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                 (b, layout.total_size)) * 0.01
+    bseed = kq.basis_seeds(0, 2)
+    return qcfg, layout, flat0, batches, keys[:b], keys[b:], residual, bseed
+
+
+def test_projected_encode_chunk_invariance():
+    """member_chunk x chunk_rows x (1,1) 2-D mesh: every chunked/sharded
+    dispatch shape of the lowrank fused cohort step emits the monolithic
+    step's exact wire bits AND residual stack."""
+    qcfg, layout, flat0, batches, tk, ek, residual, bseed = _cohort_args()
+    ref = kops.cohort_train_encode_step(
+        quad_loss, qcfg, qcfg.cq().spec, layout, flat0, batches, tk, ek,
+        jnp.asarray(True), b=5, residual=residual, basis_seed=bseed)
+    assert ref["packed"].shape[0] == 5
+    variants = [dict(member_chunk=2), dict(chunk_rows=2),
+                dict(member_chunk=1, chunk_rows=1),
+                dict(mesh=make_sim_mesh2d((1, 1)), chunk_rows=1),
+                dict(mesh=make_sim_mesh2d((1, 1)), member_chunk=3)]
+    for kw in variants:
+        out = kops.cohort_train_encode_step(
+            quad_loss, qcfg, qcfg.cq().spec, layout, flat0, batches, tk, ek,
+            jnp.asarray(True), b=5, residual=residual, basis_seed=bseed, **kw)
+        label = str({k: v for k, v in kw.items() if k != "mesh"})
+        assert_equal(out["packed"], ref["packed"], f"packed {label}")
+        assert_equal(out["norms"], ref["norms"], f"norms {label}")
+        assert_equal(out["residual"], ref["residual"], f"residual {label}")
+
+
+def test_error_feedback_closes_exactly():
+    """decoded update + new residual == delta + old residual: what the
+    quantized subspace message fails to carry lands in the residual, and
+    nothing else does. Verified against the zero-residual call (same
+    delta), which pins both the carry-in and the closure."""
+    qcfg, layout, flat0, batches, tk, ek, residual, bseed = _cohort_args()
+    spec = qcfg.cq().spec
+    d = layout.total_size
+    rank = spec.rank(d)
+
+    def decoded(out):
+        from repro.obs.taps import decode_qsgd_stack
+        y2d = decode_qsgd_stack(jnp.asarray(out["packed"]),
+                                jnp.asarray(out["norms"]), spec.bits, rank)
+        return np.asarray(lowrank_expand_flat2d(y2d, bseed, spec.group, d))
+
+    with_r = kops.cohort_train_encode_step(
+        quad_loss, qcfg, spec, layout, flat0, batches, tk, ek,
+        jnp.asarray(True), b=5, residual=residual, basis_seed=bseed)
+    zero_r = kops.cohort_train_encode_step(
+        quad_loss, qcfg, spec, layout, flat0, batches, tk, ek,
+        jnp.asarray(True), b=5, residual=jnp.zeros_like(residual),
+        basis_seed=bseed)
+    # both sums telescope to c = delta + residual_in (fp association only)
+    lhs = decoded(with_r) + np.asarray(with_r["residual"])
+    rhs = decoded(zero_r) + np.asarray(zero_r["residual"]) \
+        + np.asarray(residual)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+    # the residual is genuinely fed back, not dropped
+    assert not np.array_equal(np.asarray(with_r["packed"]),
+                              np.asarray(zero_r["packed"]))
+
+
+# -- protocol level -------------------------------------------------------
+
+def drive_pair(a, b, n_uploads, seed=9, n_clients=3):
+    """Identical seeded upload stream (cycling client ids) into both
+    servers; every upload's and broadcast's wire bits must match."""
+    key = jax.random.PRNGKey(seed)
+    for u in range(n_uploads):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        batches = {"target": jnp.broadcast_to(
+            jax.random.normal(k1, (D,)) + 3.0, (2, D))}
+        cid = u % n_clients
+        ma, _ = a.run_client(batches, k2, client=cid)
+        mb, _ = b.run_client(batches, k2, client=cid)
+        assert_equal(ma.payload["packed"], mb.payload["packed"], f"up {u}")
+        assert ma.wire_bytes == mb.wire_bytes
+        ra, rb = a.receive(ma, k3), b.receive(mb, k3)
+        assert (ra is None) == (rb is None)
+        if ra is not None:
+            assert_equal(ra.payload["packed"], rb.payload["packed"])
+            assert_equal(ra.payload["norms"], rb.payload["norms"])
+
+
+def assert_states_match(a, b):
+    n = a.state.layout.total_size
+    for name in ("x_flat", "hidden_flat", "momentum_flat"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state, name))[:n],
+            np.asarray(getattr(b.state, name))[:n], err_msg=name)
+    assert a.state.t == b.state.t
+    assert a.meter.summary() == b.meter.summary()
+    assert set(a._residuals) == set(b._residuals)
+    for cid in a._residuals:
+        assert_equal(a._residuals[cid], b._residuals[cid], f"residual {cid}")
+
+
+def test_lowrank_payload_self_describing_and_flushes():
+    """End-to-end sequential rounds: payloads carry kind/rank/group/seed,
+    wire bytes equal the analytic d_r-space qsgd size, residuals persist
+    per client, and flushes advance the server through the subspace path."""
+    algo = QAFeL(make_qcfg(), quad_loss, PARAMS0, basis_seed=11)
+    spec = algo.cq.spec
+    d = algo.state.layout.total_size
+    rank = spec.rank(d)
+    assert (d, rank) == (307, 12)
+    key = jax.random.PRNGKey(0)
+    for u in range(7):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        batches = {"target": jnp.broadcast_to(
+            jax.random.normal(k1, (D,)) + 3.0, (2, D))}
+        msg, _ = algo.run_client(batches, k2, client=u % 3)
+        p = msg.payload
+        assert p["kind"] == "lowrank" and p["format"] == "packed"
+        assert p["rank"] == rank and p["group"] == spec.group
+        assert p["n"] == d
+        assert_equal(p["seed"],
+                     kq.basis_seeds(11, algo.state.t))
+        assert msg.wire_bytes == spec.wire_bits(d) / 8
+        assert payload_wire_bytes(p) == msg.wire_bytes
+        assert payload_kind_label(p) == "lowrank4g32"
+        algo.receive(msg, k3)
+    assert algo.state.t == 2  # 7 uploads / K=3 -> two flushes
+    assert set(algo._residuals) == {0, 1, 2}
+    x = np.asarray(algo.state.x_flat)
+    assert np.any(x[:D] != 0.0)  # subspace updates reached the model
+
+
+def test_traffic_meter_buckets_actual_bytes_per_kind():
+    """kB_per_upload/<kind> rows are actual framed payload bytes, so a
+    window mixing lowrank and qsgd uploads never averages the two."""
+    from repro.core.protocol import Message, TrafficMeter
+    from repro.core.quantizers import packed_lowrank_payload, \
+        packed_qsgd_payload
+
+    spec = make_quantizer("lowrank4g32").spec
+    qspec = make_quantizer("qsgd4").spec
+    d = 307
+    rank = spec.rank(d)
+    _, layout = flatten_tree(PARAMS0)
+    lr_p = packed_lowrank_payload(
+        np.zeros((1, rank * 4 // 8), np.uint8), np.ones((1,), np.float32),
+        4, d, layout, rank, spec.group, np.zeros((2,), np.uint32))
+    q_p = packed_qsgd_payload(
+        np.zeros((3, 64), np.uint8), np.ones((3,), np.float32), 4, d, layout)
+    lr_bytes = spec.wire_bits(d) / 8
+    q_bytes = qspec.wire_bits(d) / 8
+    assert payload_wire_bytes(lr_p) == lr_bytes
+    assert payload_wire_bytes(q_p) == q_bytes
+    meter = TrafficMeter()
+    # stale msg.wire_bytes must NOT win over the payload-derived size
+    meter.record(Message("client_update", lr_p, wire_bytes=999.0))
+    meter.record(Message("client_update", q_p, wire_bytes=999.0))
+    s = meter.summary()
+    assert s["kB_per_upload/lowrank4g32"] == lr_bytes / 1e3
+    assert s["kB_per_upload/qsgd4"] == q_bytes / 1e3
+    assert meter.upload_bytes == lr_bytes + q_bytes
+
+
+def test_upload_compression_at_scale():
+    """The ISSUE's headline: at d = 1e8, lowrank4g32 uploads are >= 16x
+    smaller than qsgd4 (analytic wire law — the same formula the payloads
+    and meter were just pinned to)."""
+    d = 100_000_000
+    lr = make_quantizer("lowrank4g32").spec.wire_bits(d)
+    q4 = make_quantizer("qsgd4").spec.wire_bits(d)
+    assert q4 / lr >= 16.0
+    # and the subspace really is d/g plus one norm row per 128 coords
+    r = make_quantizer("lowrank4g32").spec.rank(d)
+    assert lr == 4 * r + 32 * math.ceil(r / 128)
+
+
+def test_mesh2d_lowrank_lockstep():
+    """A lowrank server on a (1,1) 2-D mesh with chunked flush stays in
+    bitwise lockstep with the meshless server across flush windows (the
+    sharded segment-local expansion == the unsharded whole expansion)."""
+    single = QAFeL(make_qcfg(), quad_loss, PARAMS0, basis_seed=5)
+    mesh2d = QAFeL(make_qcfg(), quad_loss, PARAMS0, basis_seed=5,
+                   mesh=make_sim_mesh2d((1, 1)), chunk_rows=1)
+    drive_pair(single, mesh2d, 9)
+    assert single.state.t >= 3
+    assert_states_match(single, mesh2d)
+
+
+# -- persistence level ----------------------------------------------------
+
+def test_checkpoint_resume_midwindow_bit_exact(tmp_path):
+    """Stop after 4 uploads (mid second fill window, 3 clients holding
+    residuals, one buffered subspace upload + its basis seed), resume into
+    a fresh algo, and continue both with the identical stream: states,
+    residuals, meters and every message must stay bit-identical."""
+    path = str(tmp_path / "lowrank_ckpt.npz")
+
+    def fresh():
+        return QAFeL(make_qcfg(), quad_loss, PARAMS0, basis_seed=23)
+
+    algo = fresh()
+    key = jax.random.PRNGKey(2)
+    for u in range(4):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        batches = {"target": jnp.broadcast_to(
+            jax.random.normal(k1, (D,)) + 3.0, (2, D))}
+        msg, _ = algo.run_client(batches, k2, client=u % 3)
+        algo.receive(msg, k3)
+    assert algo.buffer.count == 1 and algo.state.t == 1
+    assert len(algo._residuals) == 3
+    save_checkpoint(path, algo)
+
+    resumed = fresh()
+    load_checkpoint(path, resumed)
+    assert resumed.buffer.count == 1
+    assert resumed.buffer._rank == algo.buffer._rank
+    assert resumed.buffer._group == algo.buffer._group
+    assert_states_match(algo, resumed)
+
+    drive_pair(algo, resumed, 8, seed=31)
+    assert algo.state.t >= 3
+    assert_states_match(algo, resumed)
+
+
+def test_checkpoint_rejects_basis_seed_mismatch(tmp_path):
+    """A resumed lowrank run deriving a different sketch basis would
+    silently corrupt error feedback — the load must refuse instead."""
+    path = str(tmp_path / "seed_ckpt.npz")
+    algo = QAFeL(make_qcfg(), quad_loss, PARAMS0, basis_seed=7)
+    save_checkpoint(path, algo)
+    other = QAFeL(make_qcfg(), quad_loss, PARAMS0, basis_seed=8)
+    with pytest.raises(ValueError, match="basis_seed"):
+        load_checkpoint(path, other)
+
+
+# -- 8 virtual devices ----------------------------------------------------
+
+def test_eight_virtual_devices_lowrank():
+    """Force 8 host-platform devices in a subprocess and re-run the battery
+    on REAL 2-D meshes: projected-encode invariance on (2,4)/(8,1)/(4,2)
+    (b=5 members and 1 rank row vs the axis extents — both padding edges),
+    then full lowrank flush-window lockstep vs the meshless server."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        import tests.test_lowrank as T
+        from repro.core import QAFeL
+        from repro.core.quantizers import flatten_tree
+        from repro.kernels import ops as kops
+        from repro.launch.mesh import make_sim_mesh2d
+        assert jax.device_count() == 8
+
+        qcfg, layout, flat0, batches, tk, ek, residual, bseed = \\
+            T._cohort_args()
+        ref = kops.cohort_train_encode_step(
+            T.quad_loss, qcfg, qcfg.cq().spec, layout, flat0, batches,
+            tk, ek, jnp.asarray(True), b=5, residual=residual,
+            basis_seed=bseed)
+        for shape in ((2, 4), (8, 1), (4, 2)):
+            for cr in (None, 1):
+                out = kops.cohort_train_encode_step(
+                    T.quad_loss, qcfg, qcfg.cq().spec, layout, flat0,
+                    batches, tk, ek, jnp.asarray(True), b=5,
+                    residual=residual, basis_seed=bseed,
+                    mesh=make_sim_mesh2d(shape), chunk_rows=cr)
+                lbl = f"{shape} cr={cr}"
+                T.assert_equal(out["packed"], ref["packed"], "p " + lbl)
+                T.assert_equal(out["norms"], ref["norms"], "n " + lbl)
+                T.assert_equal(out["residual"], ref["residual"], "r " + lbl)
+
+        # lowrank flush windows in lockstep on both 2-D layouts
+        for shape, cr in (((2, 4), 2), ((8, 1), 1)):
+            single = QAFeL(T.make_qcfg(), T.quad_loss, T.PARAMS0,
+                           basis_seed=5)
+            sharded = QAFeL(T.make_qcfg(), T.quad_loss, T.PARAMS0,
+                            basis_seed=5, mesh=make_sim_mesh2d(shape),
+                            chunk_rows=cr)
+            T.drive_pair(single, sharded, 9)
+            assert single.state.t >= 3
+            T.assert_states_match(single, sharded)
+        print("LOWRANK_8DEV_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=560,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(REPO, "src") + os.pathsep + REPO},
+        cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-4000:]
+    assert "LOWRANK_8DEV_OK" in out.stdout

@@ -80,7 +80,9 @@ class LegacyQAFeL:
         self._flat_acc = None  # identity-payload accumulator
         self._layout = None
 
-    def run_client(self, batches, key):
+    def run_client(self, batches, key, client=None):
+        # `client` identifies the caller for per-client server state (lowrank
+        # error-feedback residuals); the legacy path has none, so it ignores it
         k_train, k_enc = jax.random.split(key)
         delta = self._client_update(self.state.hidden, batches, k_train)
         msg = encode_message(CLIENT_UPDATE, self.cq, delta, k_enc,
